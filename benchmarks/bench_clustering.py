@@ -1,0 +1,20 @@
+"""§IV.B: distributed online LSH stream clustering throughput + purity."""
+from __future__ import annotations
+
+import sys
+from typing import List, Tuple
+
+
+def run() -> Tuple[List[Tuple[str, float, str]], dict]:
+    sys.path.insert(0, "examples")
+    from stream_clustering import run as run_clustering
+    out = run_clustering(n_posts=200, quiet=True)
+    us = out["wall_s"] * 1e6 / out["posts"]
+    return [("lsh_stream_clustering", us,
+             f"{out['posts']/out['wall_s']:,.0f} posts/s, "
+             f"{out['clusters']} clusters, purity={out['purity']:.2f}")], out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run()[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,68 @@
+"""Kernel-layer benchmarks (CPU reference timings + arithmetic sanity).
+
+On this CPU container the Pallas kernels run in interpret mode (correctness,
+not speed), so the timed numbers are the jitted *oracle* paths — they anchor
+relative costs; TPU wall-time comes from the roofline analysis instead."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> Tuple[List[Tuple[str, float, str]], dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # flash attention oracle: B1 S1024 H8 hd64
+    B, S, H, hd = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, H // 2, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, H // 2, hd)).astype(jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+    dt = _time(fn, q, k, v)
+    flops = 2 * 2 * B * S * S * H * hd
+    rows.append(("attention_ref_1k", dt * 1e6,
+                 f"{flops/dt/1e9:.1f} GFLOP/s CPU"))
+    # ssm scan oracle
+    Bs, Ss, di, N = 2, 512, 256, 16
+    x = jax.random.normal(key, (Bs, Ss, di)).astype(jnp.bfloat16)
+    dtt = jax.nn.softplus(jax.random.normal(key, (Bs, Ss, di))).astype(
+        jnp.bfloat16)
+    A = -jnp.exp(jax.random.normal(key, (di, N)) * 0.1)
+    B_ = jax.random.normal(key, (Bs, Ss, N)).astype(jnp.bfloat16)
+    C_ = jax.random.normal(key, (Bs, Ss, N)).astype(jnp.bfloat16)
+    fn = jax.jit(lambda *a: ref.ssm_scan(*a)[0])
+    dt = _time(fn, x, dtt, A, B_, C_)
+    rows.append(("ssm_scan_ref_512", dt * 1e6,
+                 f"{Bs*Ss*di*N*7/dt/1e9:.1f} Gop/s CPU"))
+    # moe dispatch oracle
+    from repro.kernels import ops
+    T, D, E, K = 4096, 512, 16, 4
+    xm = jax.random.normal(key, (T, D)).astype(jnp.bfloat16)
+    logits = jax.random.normal(key, (T, E))
+    cap = T * K * 2 // E
+    w, e, pos, keep, src, valid = ops.route(logits, K, cap)
+    fn = jax.jit(ref.moe_gather_dispatch)
+    dt = _time(fn, xm, src, valid)
+    gbs = E * cap * D * 2 / dt / 1e9
+    rows.append(("moe_dispatch_ref_4k", dt * 1e6, f"{gbs:.1f} GB/s CPU"))
+    return rows, {}
+
+
+if __name__ == "__main__":
+    for name, us, derived in run()[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,73 @@
+"""Benchmark harness entry point — one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+  PYTHONPATH=src python -m benchmarks.run [suite ...]
+
+Suites: adaptation (Fig. 4), pipeline (§IV.A), clustering (§IV.B),
+engine (runtime micro), kernels, train (100M driver sanity), roofline
+(needs results/dryrun_roofline.json from the dry-run sweep).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = ("adaptation", "pipeline", "clustering", "engine", "kernels",
+          "train", "roofline")
+
+
+def _train_suite():
+    sys.path.insert(0, "examples")
+    from train_lm import FLOE_100M  # registers the config
+    from repro.launch.train import train
+    t0 = time.time()
+    out = train("floe-100m", steps=12, global_batch=2, seq_len=64,
+                log_every=0)
+    us = (time.time() - t0) * 1e6 / 12
+    return [("train_step_floe100m", us,
+             f"loss {out['losses'][0]:.3f}->{out['final_loss']:.3f} "
+             f"over 12 steps (full run: examples/train_lm.py)")], {}
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SUITES)
+    rows = []
+    for suite in want:
+        try:
+            if suite == "adaptation":
+                from . import bench_adaptation as m
+                r, _ = m.run()
+            elif suite == "pipeline":
+                from . import bench_pipeline as m
+                r, _ = m.run()
+            elif suite == "clustering":
+                from . import bench_clustering as m
+                r, _ = m.run()
+            elif suite == "engine":
+                from . import bench_engine as m
+                r, _ = m.run()
+            elif suite == "kernels":
+                from . import bench_kernels as m
+                r, _ = m.run()
+            elif suite == "train":
+                r, _ = _train_suite()
+            elif suite == "roofline":
+                from . import roofline as m
+                r, _ = m.run()
+            else:
+                print(f"# unknown suite {suite!r}", file=sys.stderr)
+                continue
+            rows.extend(r)
+        except Exception:
+            print(f"# suite {suite} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+            rows.append((f"{suite}_FAILED", 0.0, "see stderr"))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

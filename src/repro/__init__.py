@@ -1,0 +1,6 @@
+"""floe-jax: a continuous dataflow framework for dynamic ML workloads.
+
+Reproduction + TPU-pod scale-up of "Floe: A Continuous Dataflow Framework
+for Dynamic Cloud Applications" (Simmhan & Kumbhare, 2014).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,20 @@
+"""Adaptive resource allocation (paper §III) + elastic SPMD scaling."""
+from .strategies import (ALPHA, DynamicAdaptation, HybridAdaptation,
+                         Observation, PelletHints, StaticLookahead, Strategy,
+                         static_allocation)
+from .simulator import (SimPellet, SimResult, periodic_profile,
+                        random_walk_profile, run_i1_experiment, simulate,
+                        spiky_profile)
+from .controller import AdaptationController
+from .elastic import (ElasticMeshManager, ElasticServingScaler, MeshPlan,
+                      divisor_floor, reshard)
+
+__all__ = [
+    "ALPHA", "DynamicAdaptation", "HybridAdaptation", "Observation",
+    "PelletHints", "StaticLookahead", "Strategy", "static_allocation",
+    "SimPellet", "SimResult", "periodic_profile", "random_walk_profile",
+    "run_i1_experiment", "simulate", "spiky_profile",
+    "AdaptationController",
+    "ElasticMeshManager", "ElasticServingScaler", "MeshPlan",
+    "divisor_floor", "reshard",
+]

@@ -1,0 +1,68 @@
+"""Live adaptation controller: drives Strategy decisions from real FlakeStats.
+
+This is the runtime half of §III — the simulator validates the strategies,
+and this controller applies the same code to a *running* Floe graph: every
+``sample_interval`` seconds it samples each monitored flake's queue length,
+arrival rate and EWMA service latency, asks the pellet's strategy for a core
+allocation, and applies it through ``Coordinator.set_cores`` (which resizes
+the instance pool semaphore — the paper's "fine-grained resource control").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from ..core.engine import Coordinator
+from .strategies import Observation, Strategy
+
+
+class AdaptationController:
+    def __init__(self, coordinator: Coordinator,
+                 strategies: Dict[str, Strategy], *,
+                 sample_interval: float = 0.25):
+        self.coordinator = coordinator
+        self.strategies = strategies
+        self.sample_interval = sample_interval
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.history: List[Tuple[float, str, Observation, int]] = []
+        self._t0 = time.time()
+
+    def start(self) -> "AdaptationController":
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="adaptation-controller")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def step_once(self) -> None:
+        """One sampling round (also called by the loop; useful in tests)."""
+        now = time.time() - self._t0
+        for name, strat in self.strategies.items():
+            flake = self.coordinator.flakes.get(name)
+            if flake is None:
+                continue
+            in_rate, _ = flake.stats.sample_rates()
+            obs = Observation(
+                t=now,
+                queue_length=flake.queue_length(),
+                input_rate=in_rate,
+                service_latency=flake.stats.avg_latency,
+                cores=flake.cores)
+            cores = max(0, strat.decide(obs))
+            if cores != flake.cores:
+                flake.set_cores(cores)
+            self.history.append((now, name, obs, cores))
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.sample_interval)
+            try:
+                self.step_once()
+            except Exception:  # monitoring must never kill the dataflow
+                pass

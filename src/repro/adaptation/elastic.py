@@ -1,0 +1,146 @@
+"""Elastic SPMD scaling: the paper's adaptation strategies at pod scale.
+
+The paper's dynamic strategy "can only increase the core allocation for a
+flake within a single VM (cross-VM elasticity and migration of flakes is
+planned for future)".  Here we implement that future: the same Strategy
+objects decide a *replica count* for a jitted step function, and this module
+turns the decision into a resized device mesh plus a consistent re-sharding
+of the train/serve state — the TPU-pod analogue of "acquire and release VMs
+on-demand".
+
+Resizes happen at step boundaries (BSP superstep boundaries — consistent
+with the paper's synchronization model): elastic scaling never interrupts a
+step mid-flight.  On node failure, ``plan_resize`` is called with the number
+of surviving replicas; the step function is re-lowered for the new mesh and
+the state re-sharded (or restored from the latest checkpoint if the lost
+devices held the only copy of a shard — with DP replication, state survives
+any single-replica loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def divisor_floor(n: int, x: int) -> int:
+    """Largest divisor of n that is <= x (>=1)."""
+    x = max(1, min(n, x))
+    for d in range(x, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A concrete mesh layout for a replica decision."""
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+
+    def describe(self) -> str:
+        dims = ", ".join(f"{a}={s}" for a, s in zip(self.axis_names, self.shape))
+        return f"Mesh({dims}) on {self.n_devices} devices"
+
+
+class ElasticMeshManager:
+    """Maps strategy decisions (replica counts) to concrete device meshes.
+
+    The ``model`` axis size is fixed by the architecture's tensor-parallel
+    degree; the ``data`` axis absorbs elasticity.  With P available devices
+    and model-parallel degree M, the feasible replica counts are the
+    divisors of P/M; decisions are rounded down to feasibility so a resize
+    is always realizable without re-sharding the model axis.
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 model_parallel: int = 1,
+                 axis_names: Tuple[str, str] = ("data", "model")):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.model_parallel = model_parallel
+        self.axis_names = axis_names
+        if len(self.devices) % model_parallel:
+            raise ValueError(
+                f"{len(self.devices)} devices not divisible by "
+                f"model_parallel={model_parallel}")
+        self.max_replicas = len(self.devices) // model_parallel
+
+    def feasible_replicas(self, requested: int) -> int:
+        return divisor_floor(self.max_replicas, max(1, requested))
+
+    def plan(self, requested_replicas: int) -> MeshPlan:
+        r = self.feasible_replicas(requested_replicas)
+        return MeshPlan(shape=(r, self.model_parallel),
+                        axis_names=self.axis_names,
+                        n_devices=r * self.model_parallel)
+
+    def build_mesh(self, plan: MeshPlan) -> Mesh:
+        devs = np.asarray(self.devices[: plan.n_devices]).reshape(plan.shape)
+        return Mesh(devs, plan.axis_names)
+
+    def resize(self, requested_replicas: int) -> Mesh:
+        return self.build_mesh(self.plan(requested_replicas))
+
+
+def reshard(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """Re-shard a pytree onto a (possibly resized) mesh.
+
+    ``spec_tree`` is either a single PartitionSpec applied to all leaves or a
+    pytree of specs matching ``tree``.  Uses ``jax.device_put``, which
+    performs the all-to-all style data movement between the old and new
+    shardings on real multi-device backends.
+    """
+    if isinstance(spec_tree, P) or spec_tree is None:
+        shardings = jax.tree.map(
+            lambda _: NamedSharding(mesh, spec_tree or P()), tree)
+    else:
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P) or x is None)
+    return jax.device_put(tree, shardings)
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    t: float
+    requested: int
+    granted: int
+    reason: str
+
+
+class ElasticServingScaler:
+    """Ties a §III Strategy to replica scaling for a serving/training loop.
+
+    Usage: every sampling interval, feed an Observation built from the
+    request-queue monitor; if the strategy's core decision maps to a replica
+    count different from the current one, the caller re-lowers its step for
+    ``mesh_for_current()`` and re-shards state with ``reshard``.
+    """
+
+    def __init__(self, manager: ElasticMeshManager, strategy, *,
+                 cores_per_replica: int = 1):
+        self.manager = manager
+        self.strategy = strategy
+        self.cores_per_replica = cores_per_replica
+        self.current_replicas = manager.max_replicas
+        self.log: List[ElasticDecision] = []
+
+    def observe(self, obs) -> bool:
+        """Returns True if the mesh must be rebuilt (replica count changed)."""
+        cores = max(0, self.strategy.decide(obs))
+        req = max(1, math.ceil(cores / self.cores_per_replica))
+        granted = self.manager.feasible_replicas(req)
+        changed = granted != self.current_replicas
+        self.log.append(ElasticDecision(
+            t=obs.t, requested=req, granted=granted,
+            reason="resize" if changed else "hold"))
+        self.current_replicas = granted
+        return changed
+
+    def mesh_for_current(self) -> Mesh:
+        return self.manager.resize(self.current_replicas)

@@ -1,0 +1,208 @@
+"""Resource adaptation strategies (paper §III).
+
+Three strategies decide the number of CPU cores (→ pellet instances, at the
+fixed ratio α = 4) allocated to each pellet so the dataflow (a) *sustains*
+processing at the input data rate and (b) bounds end-to-end *latency* for a
+processing window:
+
+* ``StaticLookahead`` — the user-as-oracle allocation computed once from
+  declared hints:  ``P_i ≈ (l_i · m_i)/(t + ε)``, ``m_i = m_{i-1} · s_{i-1}``
+  (messages cascade through selectivities), ``C_i = ⌈P_i/α⌉``.
+  (The paper writes ``m_i = m_{i-1} × s_i``; s there indexes the *edge* into
+  pellet i — the same cascade.  ``t`` is the duration of the data window in
+  which the ``m_1`` messages arrive.)
+* ``DynamicAdaptation`` — Algorithm 1: continuous monitoring; scale up when
+  the input rate exceeds service capacity by a threshold; scale down only if
+  capacity at the reduced allocation still covers the rate (hysteresis check,
+  "necessary to ensure that the number of allocated cores do not fluctuate
+  too often"); quiesce to zero cores when idle and drained.
+* ``HybridAdaptation`` — takes the static hints but does not trust the
+  oracle: runs the static allocation while the observed rate tracks the hint,
+  switches to dynamic when it veers beyond a threshold, and switches back
+  when the rate re-stabilizes near the hint and the queue has drained.
+
+All strategies consume ``Observation`` samples produced either by live
+``FlakeStats`` monitors (engine runtime) or by the workload simulator, so the
+same code drives both — and, at the SPMD layer, the same decisions set the
+number of data-parallel replicas for elastic serving (``adaptation.elastic``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+ALPHA = 4  # pellet instances per core (§III)
+
+
+@dataclass
+class Observation:
+    """One monitoring sample for one pellet."""
+    t: float                  # sample time (s)
+    queue_length: int         # messages pending in the input queue
+    input_rate: float         # msgs/s arriving over the sampling window
+    service_latency: float    # seconds per message for ONE instance
+    cores: int                # current allocation
+
+
+@dataclass
+class PelletHints:
+    """Static profile hints for one pellet (used by static/hybrid)."""
+    latency: float            # l_i: per-message latency, one instance (s)
+    selectivity: float = 1.0  # s_i: output msgs per input msg
+
+
+class Strategy:
+    """Decide a core allocation from an observation stream."""
+
+    name = "base"
+
+    def decide(self, obs: Observation) -> int:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        pass
+
+
+def static_allocation(hints: Sequence[PelletHints], m1: float,
+                      window_duration: float, epsilon: float,
+                      alpha: int = ALPHA) -> List[int]:
+    """The paper's closed-form look-ahead allocation for a critical path.
+
+    m1 messages arrive at the first pellet within a window of
+    ``window_duration`` seconds; processing must finish within
+    ``window_duration + epsilon``.  Returns cores C_i per pellet.
+    """
+    cores = []
+    m_i = float(m1)
+    for h in hints:
+        p_i = (h.latency * m_i) / (window_duration + epsilon)
+        c_i = max(1, math.ceil(p_i / alpha))
+        cores.append(c_i)
+        m_i = m_i * h.selectivity
+    return cores
+
+
+class StaticLookahead(Strategy):
+    """Constant allocation from the closed-form formula (never adapts)."""
+
+    name = "static"
+
+    def __init__(self, latency: float, expected_window_messages: float,
+                 window_duration: float, epsilon: float, alpha: int = ALPHA):
+        p = (latency * expected_window_messages) / (window_duration + epsilon)
+        self.cores = max(1, math.ceil(p / alpha))
+        self.alpha = alpha
+
+    def decide(self, obs: Observation) -> int:
+        return self.cores
+
+
+class DynamicAdaptation(Strategy):
+    """Algorithm 1: monitor input rate vs processing capacity, with
+    hysteresis on scale-down and a drain term for pending queues."""
+
+    name = "dynamic"
+
+    def __init__(self, *, threshold: float = 0.1, max_cores: int = 64,
+                 drain_horizon: float = 30.0, alpha: int = ALPHA):
+        self.threshold = threshold      # relative over/under-capacity band
+        self.max_cores = max_cores
+        self.drain_horizon = drain_horizon  # target seconds to drain backlog
+        self.alpha = alpha
+
+    def _capacity(self, cores: int, latency: float) -> float:
+        """Service rate (msgs/s) at a given core allocation."""
+        if latency <= 0:
+            return float("inf")
+        return cores * self.alpha / latency
+
+    def decide(self, obs: Observation) -> int:
+        obs = dataclasses.replace(obs, cores=min(obs.cores, self.max_cores))
+        lam = obs.input_rate
+        # demand = arrival rate plus draining the backlog over the horizon
+        demand = lam + obs.queue_length / self.drain_horizon
+        if demand <= 0:
+            return 0  # idle and drained: quiesce (Fig. 4, dynamic/hybrid)
+        if obs.service_latency <= 0:
+            return max(obs.cores, 1)
+        cap = self._capacity(obs.cores, obs.service_latency)
+        if demand > cap * (1 + self.threshold):
+            # scale up toward the needed allocation; the paper's dynamic
+            # strategy "gradually allocates enough cores to achieve a steady
+            # state", so we close half the gap per sampling interval rather
+            # than jumping (geometric approach — fast for bursts, gradual
+            # near steady state)
+            needed = math.ceil(demand * obs.service_latency / self.alpha)
+            step = max(1, math.ceil((needed - obs.cores) / 2))
+            return min(obs.cores + step, self.max_cores)
+        # scale-down check: would the reduced allocation still sustain the
+        # demand?  If not, hold — this hysteresis prevents fluctuation
+        # (paper: "the second check is necessary to ensure that the number of
+        # allocated cores do not fluctuate too often").  Release is one core
+        # per sampling interval — conservative by design.
+        if obs.cores > 0:
+            cap_minus = self._capacity(obs.cores - 1, obs.service_latency)
+            if demand < cap_minus * (1 - self.threshold):
+                return obs.cores - 1
+        return obs.cores
+
+
+class HybridAdaptation(Strategy):
+    """Static hints + dynamic fallback (§III; paper future work, built here).
+
+    Tracks the hinted rate profile; while |observed - hinted| ≤ veer_threshold
+    × hinted it follows the static allocation (with idle quiescing); once the
+    rate veers off it switches to the dynamic controller, and it switches back
+    when the rate re-stabilizes near the hint and the queue is nearly drained.
+    """
+
+    name = "hybrid"
+
+    def __init__(self, static: StaticLookahead, dynamic: DynamicAdaptation,
+                 hinted_rate, *, veer_threshold: float = 0.5,
+                 latency_slo: float = 20.0):
+        self.static = static
+        self.dynamic = dynamic
+        #: hinted_rate: callable t -> expected msgs/s (the user's hint)
+        self.hinted_rate = hinted_rate
+        self.veer_threshold = veer_threshold
+        #: predicted backlog-drain time beyond which the static allocation is
+        #: declared insufficient (a latency-violation early warning)
+        self.latency_slo = latency_slo
+        self.mode = "static"
+        self.switches: List[tuple] = []  # (t, new_mode) audit trail
+
+    def reset(self) -> None:
+        self.mode = "static"
+        self.switches.clear()
+
+    def _backlog_seconds(self, obs: Observation) -> float:
+        """Predicted time to drain the current queue at current allocation."""
+        capacity = max(obs.cores, 1) * self.static.alpha / max(
+            obs.service_latency, 1e-9)
+        return obs.queue_length / capacity
+
+    def decide(self, obs: Observation) -> int:
+        hinted = max(float(self.hinted_rate(obs.t)), 0.0)
+        band = self.veer_threshold * max(hinted, 1e-9)
+        veered = (abs(obs.input_rate - hinted) > band
+                  or self._backlog_seconds(obs) > self.latency_slo)
+        if self.mode == "static":
+            if veered:
+                self.mode = "dynamic"
+                self.switches.append((obs.t, "dynamic"))
+        else:
+            stable = (not veered
+                      and self._backlog_seconds(obs) <= self.latency_slo / 2)
+            if stable:
+                self.mode = "static"
+                self.switches.append((obs.t, "static"))
+        if self.mode == "dynamic":
+            return self.dynamic.decide(obs)
+        # static mode, but quiesce when there is nothing to do (Fig. 4 left:
+        # "hybrid ... additionally quiesces to 0 cores once done processing")
+        if obs.input_rate <= 0 and obs.queue_length == 0:
+            return 0
+        return self.static.decide(obs)

@@ -1,0 +1,5 @@
+from .checkpointer import (AsyncCheckpointer, checkpoint_floe_graph,
+                           latest_step, restore, restore_floe_graph, save)
+
+__all__ = ["AsyncCheckpointer", "checkpoint_floe_graph", "latest_step",
+           "restore", "restore_floe_graph", "save"]

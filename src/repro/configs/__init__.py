@@ -1,0 +1,16 @@
+from .base import ModelConfig, MoEConfig, SSMConfig
+from .archs import (ALL, DBRX_132B, FALCON_MAMBA_7B, H2O_DANUBE_3_4B,
+                    LLAMA_3_2_VISION_90B, MOONSHOT_V1_16B_A3B, QWEN3_14B,
+                    QWEN3_1_7B, SMOLLM_360M, WHISPER_LARGE_V3, ZAMBA2_2_7B)
+from .shapes import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ShapeSpec, cells, shape_applicable)
+from . import registry
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ALL", "registry",
+    "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
+    "ShapeSpec", "cells", "shape_applicable",
+    "SMOLLM_360M", "QWEN3_1_7B", "H2O_DANUBE_3_4B", "QWEN3_14B",
+    "LLAMA_3_2_VISION_90B", "FALCON_MAMBA_7B", "ZAMBA2_2_7B", "DBRX_132B",
+    "MOONSHOT_V1_16B_A3B", "WHISPER_LARGE_V3",
+]

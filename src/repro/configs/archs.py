@@ -1,0 +1,98 @@
+"""The 10 assigned architectures (exact configs from the assignment sheet).
+
+Each entry records its provenance tier.  Sharding/memory knobs (``sharding``,
+``accum_steps``) are execution policy, not architecture, and are set to fit
+the v5e (16 GB HBM) production mesh.
+"""
+from .base import ModelConfig, MoEConfig, SSMConfig
+
+SMOLLM_360M = ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, head_dim=64,
+    d_ff=2560, vocab_size=49152, tie_embeddings=True,
+    source="[hf:HuggingFaceTB/SmolLM-135M; hf] llama-arch small",
+)
+
+QWEN3_1_7B = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=6144, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    source="[hf:Qwen/Qwen3-8B; hf] qk_norm, GQA",
+)
+
+H2O_DANUBE_3_4B = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, head_dim=120,
+    d_ff=10240, vocab_size=32000,
+    sliding_window=4096, swa_global_every=4,  # llama+mistral mix: every 4th
+    source="[arXiv:2401.16818; unverified] llama+mistral mix, SWA",
+)
+
+QWEN3_14B = ModelConfig(
+    name="qwen3-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=17408, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    sharding="fsdp_tp", accum_steps=4,
+    source="[hf:Qwen/Qwen3-8B; hf] qk_norm, GQA",
+)
+
+LLAMA_3_2_VISION_90B = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256,
+    cross_attn_every=5, n_image_tokens=1024, rope_theta=5e5,
+    sharding="fsdp_tp", accum_steps=16,
+    source="[hf:meta-llama/Llama-3.2-11B-Vision; unverified] cross-attn "
+           "image layers",
+)
+
+FALCON_MAMBA_7B = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, head_dim=64,
+    d_ff=0, vocab_size=65024,
+    ssm=SSMConfig(version=1, d_state=16, d_conv=4, expand=2, chunk=128),
+    sharding="fsdp_tp", accum_steps=4,
+    source="[arXiv:2410.05355; unverified] mamba1 arch, attn-free",
+)
+
+ZAMBA2_2_7B = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000,
+    ssm=SSMConfig(version=2, d_state=64, d_conv=4, expand=2, head_dim=64,
+                  chunk=128),
+    hybrid_attn_every=6,  # shared attention block every 6 mamba2 blocks
+    accum_steps=2,
+    source="[arXiv:2411.15242; hf] Mamba2 + shared attn blocks",
+)
+
+DBRX_132B = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=10752, vocab_size=100352,
+    moe=MoEConfig(n_experts=16, top_k=4, d_expert=10752),
+    sharding="fsdp_tp", accum_steps=8,
+    source="[hf:databricks/dbrx-base; unverified] 16 experts top-4, "
+           "fine-grained",
+)
+
+MOONSHOT_V1_16B_A3B = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab_size=163840,
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408),
+    sharding="fsdp_tp", accum_steps=2,
+    source="[hf:moonshotai/Moonlight-16B-A3B; hf] kimi/moonlight, 64e top-6",
+)
+
+WHISPER_LARGE_V3 = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, head_dim=64,
+    d_ff=5120, vocab_size=51866, enc_dec=True,
+    accum_steps=2,
+    source="[arXiv:2212.04356; unverified] enc-dec, conv frontend (stub)",
+)
+
+ALL = [SMOLLM_360M, QWEN3_1_7B, H2O_DANUBE_3_4B, QWEN3_14B,
+       LLAMA_3_2_VISION_90B, FALCON_MAMBA_7B, ZAMBA2_2_7B, DBRX_132B,
+       MOONSHOT_V1_16B_A3B, WHISPER_LARGE_V3]

@@ -1,0 +1,247 @@
+"""Architecture configuration system.
+
+One ``ModelConfig`` describes any architecture in the assigned pool: dense /
+MoE / SSM / hybrid / VLM / audio-enc-dec LM backbones.  Family-specific
+sub-configs (`MoEConfig`, `SSMConfig`) are attached when applicable.  Every
+config is registered in ``repro.configs.registry`` and selectable from the
+launchers via ``--arch <id>``.
+
+``scaled_down()`` produces a topology-preserving reduced config for CPU smoke
+tests (same family/block pattern, tiny dims); the full config is exercised
+only via the dry-run (ShapeDtypeStruct lowering, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    version: int                  # 1 = Mamba-1 (falcon-mamba), 2 = Mamba-2
+    d_state: int                  # N
+    d_conv: int = 4
+    expand: int = 2               # d_inner = expand * d_model
+    dt_rank: Optional[int] = None  # mamba1: ceil(d_model/16) when None
+    head_dim: int = 64            # mamba2: channels per head (A per head)
+    chunk: int = 16               # chunked-scan block length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def dt_rank_for(self, d_model: int) -> int:
+        return self.dt_rank or math.ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    #: sliding-window width; layers with index % swa_every != swa_global_every
+    #: use the window (h2o-danube mistral-style mix)
+    sliding_window: Optional[int] = None
+    swa_global_every: int = 4     # every 4th layer stays global attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    #: hybrid (zamba2): one SHARED attention+MLP block applied every k layers
+    hybrid_attn_every: Optional[int] = None
+    #: vlm: a cross-attention layer every k-th layer (counted within n_layers)
+    cross_attn_every: Optional[int] = None
+    n_image_tokens: int = 1024    # vlm stub frontend: patch embeddings
+    #: audio/enc-dec (whisper): n_layers encoder + n_layers decoder
+    enc_dec: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    #: sharding profile: "tp" (weights replicated over data axis) or
+    #: "fsdp_tp" (weights additionally sharded over the data axis)
+    sharding: str = "tp"
+    #: gradient-accumulation microbatches inside train_step (memory control)
+    accum_steps: int = 1
+    #: remat policy for the scanned blocks: "none" | "full"
+    remat: str = "full"
+    #: scan over stacked layers (production) vs Python-unrolled layers
+    #: (roofline cost-extraction mode: XLA cost_analysis counts a scan body
+    #: once regardless of trip count, so roofline lowering unrolls a reduced
+    #: depth and extrapolates — see benchmarks/roofline.py)
+    scan_layers: bool = True
+    #: exact-FLOP lowering: replace blocked/sequential inner algorithms
+    #: (flash attention kv-block scan, ssm chunk scan, chunked CE) with
+    #: one-shot equivalents whose HLO op counts are trip-count-free
+    flop_exact: bool = False
+    #: Megatron-style sequence parallelism for the residual stream: saved
+    #: remat residuals shard their sequence dim over `model` (16× less
+    #: activation memory; costs a gather/scatter pair per layer)
+    seq_parallel: bool = False
+    source: str = ""              # provenance note [source; verified-tier]
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def inference_sharding(self) -> str:
+        """Param sharding for prefill/decode.  FSDP means an all-gather of
+        every layer's weights per decode step (~GB/token); replicate weights
+        over the data axis instead whenever bf16 params fit a model-axis
+        shard (only dbrx-132b exceeds the 12 GB/device budget)."""
+        if self.param_count_estimate() * 2 / 16 > 12e9:
+            return "fsdp_tp"
+        return "tp"
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head vocab dim padded to a multiple of 256 so it shards
+        over any production mesh axis (whisper's 51866 is not divisible by
+        16); logits are sliced back to ``vocab_size``."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kinds, defining the stacking pattern."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                kinds.append("ssm")
+            elif self.family == "hybrid":
+                # mamba2 backbone; shared attention block applied every k
+                kinds.append("ssm_shared_attn"
+                             if (i + 1) % self.hybrid_attn_every == 0
+                             else "ssm")
+            elif self.family == "vlm" and self.cross_attn_every and \
+                    (i + 1) % self.cross_attn_every == 0:
+                kinds.append("cross")
+            else:
+                kinds.append("attn")
+        return tuple(kinds)
+
+    def uses_subquadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM / hybrid families)."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count_estimate(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline math)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb + d  # final norm
+        for kind in self.layer_kinds():
+            if kind in ("ssm", "ssm_shared_attn"):
+                s = self.ssm
+                di = s.d_inner(d)
+                if s.version == 1:
+                    dtr = s.dt_rank_for(d)
+                    blk = (d * 2 * di + di * s.d_conv +
+                           di * (dtr + 2 * s.d_state) + dtr * di +
+                           di * s.d_state + di + di * d)
+                else:
+                    nheads = di // s.head_dim
+                    blk = (d * (2 * di + 2 * s.d_state + nheads) +
+                           (di + 2 * s.d_state) * s.d_conv + nheads +
+                           di + di * d + di)
+                total += blk + d
+            if kind == "attn" or kind == "cross":
+                q = d * self.n_heads * hd
+                kv = 2 * d * self.n_kv_heads * hd
+                o = self.n_heads * hd * d
+                total += q + kv + o + 2 * d
+                if self.moe is not None:
+                    total += (self.moe.n_experts * 3 * d * self.moe.d_expert
+                              + d * self.moe.n_experts)
+                else:
+                    total += 3 * d * self.d_ff
+        if self.family == "hybrid":
+            # the shared attention+MLP block is ONE parameter set
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            shared = q + kv + o + 3 * d * self.d_ff + 2 * d
+            n_shared_uses = sum(1 for k in self.layer_kinds()
+                                if k == "ssm_shared_attn")
+            # subtract the per-use copies counted above, add one shared set
+            total += shared - 0 * n_shared_uses
+        if self.enc_dec:
+            # decoder mirrors the encoder and adds cross-attention per layer
+            dec = 0
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            dec += self.n_layers * (2 * (q + kv + o) + 3 * d * self.d_ff
+                                    + 3 * d)
+            total += dec
+        return int(total)
+
+    def active_param_count_estimate(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count_estimate()
+        d = self.d_model
+        full = self.param_count_estimate()
+        moe_total = sum(self.moe.n_experts * 3 * d * self.moe.d_expert
+                        for k in self.layer_kinds() if k == "attn")
+        moe_active = moe_total * self.moe.top_k // self.moe.n_experts
+        return int(full - moe_total + moe_active)
+
+    # -- smoke-test reduction -------------------------------------------------
+    def scaled_down(self) -> "ModelConfig":
+        """Tiny topology-preserving config for CPU smoke tests."""
+        hd = 16
+        n_heads = max(2, self.n_heads // 8)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        if n_heads % n_kv:
+            n_kv = 1
+        layers = {
+            "dense": 4, "moe": 4, "ssm": 4, "hybrid": 6, "vlm": 5,
+            "audio": 4,
+        }[self.family]
+        if self.family == "hybrid":
+            hybrid_every = 3
+        else:
+            hybrid_every = self.hybrid_attn_every
+        replace = dict(
+            name=self.name + "-smoke",
+            n_layers=layers,
+            d_model=n_heads * hd,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=hd,
+            d_ff=4 * n_heads * hd,
+            vocab_size=256,
+            sliding_window=8 if self.sliding_window else None,
+            hybrid_attn_every=hybrid_every,
+            cross_attn_every=(3 if self.cross_attn_every else None),
+            n_image_tokens=8,
+            accum_steps=1,
+            sharding="tp",
+        )
+        if self.moe:
+            replace["moe"] = MoEConfig(
+                n_experts=4, top_k=min(2, self.moe.top_k),
+                d_expert=2 * n_heads * hd,
+                capacity_factor=self.moe.capacity_factor)
+        if self.ssm:
+            replace["ssm"] = dataclasses.replace(
+                self.ssm, d_state=8, head_dim=16, chunk=4,
+                dt_rank=8 if self.ssm.version == 1 else self.ssm.dt_rank)
+        return dataclasses.replace(self, **replace)

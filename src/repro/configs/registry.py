@@ -1,0 +1,26 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .archs import ALL
+from .base import ModelConfig
+
+_REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in ALL}
+
+
+def get(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get(name[: -len("-smoke")]).scaled_down()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(_REGISTRY)}")
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def register(cfg: ModelConfig) -> None:
+    _REGISTRY[cfg.name] = cfg

@@ -1,0 +1,48 @@
+"""Assigned input-shape sets (LM transformer shapes: seq_len × global_batch).
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers the prefill
+``serve_step``; ``decode_*`` / ``long_*`` lower the single-token decode
+``serve_step`` with a KV/state cache of seq_len.  ``long_500k`` requires
+sub-quadratic attention: run for SSM/hybrid archs, skip (with a note) for
+pure full-attention archs — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from .base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeSpec("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524288, 1)
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch × shape) cell."""
+    if shape.name == "long_500k" and not cfg.uses_subquadratic():
+        return False, ("full quadratic attention at 524288-token context is "
+                       "out of scope; only SSM/hybrid archs run long_500k")
+    return True, ""
+
+
+def cells(configs, shapes=ALL_SHAPES):
+    """All runnable (config, shape) cells plus the skip list."""
+    run, skipped = [], []
+    for cfg in configs:
+        for sh in shapes:
+            ok, why = shape_applicable(cfg, sh)
+            (run if ok else skipped).append((cfg, sh) if ok else (cfg, sh, why))
+    return run, skipped

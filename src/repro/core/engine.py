@@ -1,0 +1,766 @@
+"""The Floe continuous execution engine (paper §III, Fig. 2).
+
+Component model (no centralized dataflow orchestrator in the data path):
+
+* ``Flake``       — executes a single pellet: holds per-port input channels,
+  de/serialization-free message buffers, an instance pool for data-parallel
+  pellet instances, split-policy routing to neighbour flakes, and the
+  monitoring instrumentation (queue length, message latency) used by the
+  adaptation strategies.
+* ``Container``   — VM-level resource runtime: accounts CPU cores and hands
+  them to flakes; pellet-instance count = cores × α (α = 4, §III).
+* ``Coordinator`` — parses the FloeGraph, acquires cores from containers,
+  instantiates and wires flakes bottom-up (sinks first), activates them, and
+  drives dynamic task / dataflow updates (§II.B).
+
+Threading: one dispatcher thread per flake; data-parallel push pellets fan
+out to a shared worker pool bounded by an adjustable semaphore whose capacity
+tracks the flake's core allocation (so ``set_cores`` takes effect without
+restarting threads — the mechanism behind the dynamic adaptation strategy).
+
+Straggler mitigation: optional speculative re-execution of push-pellet tasks
+that exceed a timeout; first completion wins, duplicates are suppressed by
+message seq id (engine-level analogue of backup tasks).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .graph import FloeGraph
+from .message import Message
+from .patterns import Split, make_split
+from .pellet import (Drop, FnPellet, KeyedEmit, Pellet, PullPellet,
+                     PushPellet, TuplePellet, WindowPellet)
+
+ALPHA = 4  # pellet instances per core (§III)
+
+
+class AdjustableSemaphore:
+    """Counting semaphore whose capacity can change at runtime."""
+
+    def __init__(self, capacity: int):
+        self._capacity = capacity
+        self._in_use = 0
+        self._cond = threading.Condition()
+
+    def acquire(self, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            ok = self._cond.wait_for(lambda: self._in_use < self._capacity,
+                                     timeout=timeout)
+            if not ok:
+                return False
+            self._in_use += 1
+            return True
+
+    def release(self) -> None:
+        with self._cond:
+            self._in_use -= 1
+            self._cond.notify_all()
+
+    def set_capacity(self, capacity: int) -> None:
+        with self._cond:
+            self._capacity = max(0, int(capacity))
+            self._cond.notify_all()
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+
+class Channel:
+    """Bounded FIFO edge buffer with backpressure."""
+
+    def __init__(self, capacity: int = 100_000,
+                 on_put: Optional[Callable[[], None]] = None):
+        self._q: deque = deque()
+        self._capacity = capacity
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._on_put = on_put
+
+    def put(self, msg: Message, timeout: Optional[float] = 30.0) -> None:
+        with self._not_full:
+            if not self._not_full.wait_for(
+                    lambda: len(self._q) < self._capacity, timeout=timeout):
+                raise TimeoutError("channel full: backpressure timeout")
+            self._q.append(msg)
+        if self._on_put:
+            self._on_put()
+
+    def try_pop(self) -> Optional[Message]:
+        with self._not_full:
+            if self._q:
+                msg = self._q.popleft()
+                self._not_full.notify_all()
+                return msg
+            return None
+
+    def peek(self) -> Optional[Message]:
+        with self._lock:
+            return self._q[0] if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class FlakeStats:
+    """Monitoring instrumentation inside flakes (§III).
+
+    Tracks arrival/processing counts and EWMA per-message latency; the
+    adaptation strategies read ``input_rate``, ``service_rate`` and
+    ``queue_length`` at sampling intervals.
+    """
+
+    def __init__(self, ewma: float = 0.2):
+        self._lock = threading.Lock()
+        self.arrived = 0
+        self.processed = 0
+        self.emitted = 0
+        self.ewma = ewma
+        self.avg_latency = 0.0    # seconds per message, single instance
+        self._win_arrived = 0
+        self._win_processed = 0
+        self._win_start = time.time()
+
+    def on_arrive(self, n: int = 1) -> None:
+        with self._lock:
+            self.arrived += n
+            self._win_arrived += n
+
+    def on_process(self, latency: float, n: int = 1) -> None:
+        with self._lock:
+            self.processed += n
+            self._win_processed += n
+            per_msg = latency / max(n, 1)
+            if self.avg_latency == 0.0:
+                self.avg_latency = per_msg
+            else:
+                self.avg_latency += self.ewma * (per_msg - self.avg_latency)
+
+    def on_emit(self, n: int = 1) -> None:
+        with self._lock:
+            self.emitted += n
+
+    def sample_rates(self) -> Tuple[float, float]:
+        """Return (input_rate, processed_rate) msgs/sec since last sample."""
+        with self._lock:
+            now = time.time()
+            dt = max(now - self._win_start, 1e-9)
+            rates = (self._win_arrived / dt, self._win_processed / dt)
+            self._win_arrived = 0
+            self._win_processed = 0
+            self._win_start = now
+            return rates
+
+    @property
+    def selectivity(self) -> float:
+        return self.emitted / max(self.processed, 1)
+
+
+class Flake:
+    """Executes one pellet; coordinates dataflow with neighbour flakes."""
+
+    def __init__(self, name: str, factory: Callable[[], Pellet], *,
+                 cores: int = 1, engine: "Coordinator" = None,
+                 channel_capacity: int = 100_000,
+                 speculative_timeout: Optional[float] = None):
+        self.name = name
+        self.factory = factory
+        self.engine = engine
+        self.cores = cores
+        self._proto = factory()            # prototype for port/semantic info
+        self.stats = FlakeStats()
+        self._channel_capacity = channel_capacity
+        self._wake = threading.Condition()
+        self.inputs: Dict[str, Channel] = {
+            p: Channel(channel_capacity, on_put=self._notify)
+            for p in self._proto.in_ports}
+        #: routing: src_port -> (split, [(flake, dst_port)])
+        self.routes: Dict[str, Tuple[Split, List[Tuple["Flake", str]]]] = {}
+        self.state: Any = self._proto.initial_state()
+        self._state_lock = threading.Lock()
+        self._pellet_lock = threading.RLock()  # guards factory swap
+        self._paused = threading.Event()
+        self._stop = threading.Event()
+        self._drain = threading.Event()        # sync update: block dispatch
+        self._sem = AdjustableSemaphore(max(1, cores * ALPHA))
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._thread: Optional[threading.Thread] = None
+        self._window_buf: List[Any] = []
+        self._inflight = 0
+        self._inflight_cond = threading.Condition()
+        self._done_seqs: set = set()           # speculative dedup
+        self.speculative_timeout = speculative_timeout
+        self.version = 0                       # bumps on dynamic task update
+        #: landmark alignment (watermark semantics): a flush landmark is
+        #: delivered to the pellet only once a copy has arrived from every
+        #: inbound edge (set by the coordinator during wiring).  Without this,
+        #: a reducer fed by m mappers would flush m times per logical window.
+        #: NOTE: do not send flush landmarks around cycles — back-edges count
+        #: toward the in-degree and the round would never complete.
+        self.in_degree = 1
+        self._lm_count = 0
+        self._lm_lock = threading.Lock()
+
+    # -- wiring --------------------------------------------------------------
+    def add_route(self, src_port: str, split: Split,
+                  targets: List[Tuple["Flake", str]]) -> None:
+        self.routes[src_port] = (split, targets)
+
+    # -- lifecycle -----------------------------------------------------------
+    def activate(self) -> None:
+        self._pool = ThreadPoolExecutor(
+            max_workers=64, thread_name_prefix=f"flake-{self.name}")
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name=f"dispatch-{self.name}", daemon=True)
+        self._thread.start()
+
+    def deactivate(self) -> None:
+        self._stop.set()
+        self._notify()
+        if self._thread:
+            self._thread.join(timeout=10)
+        if self._pool:
+            self._pool.shutdown(wait=True, cancel_futures=True)
+
+    def pause(self) -> None:
+        self._paused.set()
+
+    def resume(self) -> None:
+        self._paused.clear()
+        self._notify()
+
+    def set_cores(self, cores: int) -> None:
+        """Fine-grained runtime resource control (§III): resize instance pool."""
+        self.cores = max(0, int(cores))
+        self._sem.set_capacity(max(1, self.cores * ALPHA) if self.cores else 0)
+
+    # -- dynamic task update (§II.B) ------------------------------------------
+    def swap_pellet(self, factory: Callable[[], Pellet], *,
+                    mode: str = "sync", emit_update_landmark: bool = True) -> None:
+        """In-place task update without halting other pellets.
+
+        sync  — stop dispatching, let in-flight messages finish to completion
+                and deliver their outputs, then swap; optionally emit an
+                "update landmark" downstream before resuming.
+        async — swap the factory immediately: new messages are processed by
+                the new logic while old in-flight instances run to completion
+                (outputs may interleave). Zero downtime.
+        """
+        if mode not in ("sync", "async"):
+            raise ValueError("mode must be 'sync' or 'async'")
+        new_proto = factory()
+        if tuple(new_proto.in_ports) != tuple(self._proto.in_ports) or \
+           tuple(new_proto.out_ports) != tuple(self._proto.out_ports):
+            raise ValueError(
+                "in-place task update requires identical ports; use a "
+                "dynamic dataflow update instead (§II.B)")
+        if mode == "sync":
+            self._drain.set()          # stop pulling new messages
+            self._wait_quiescent()     # in-flight finish; outputs delivered
+        with self._pellet_lock:
+            old = self._proto
+            self.factory = factory
+            self._proto = new_proto
+            self.version += 1
+            # internal state survives the update if stateful (§II.B)
+            if not new_proto.stateful:
+                self.state = new_proto.initial_state()
+        try:
+            old.teardown()
+        except Exception:
+            pass
+        if emit_update_landmark:
+            from .message import update_landmark
+            self._route(update_landmark(tag={"flake": self.name,
+                                             "version": self.version}))
+        if mode == "sync":
+            self._drain.clear()
+            self._notify()
+
+    # -- input side ------------------------------------------------------------
+    def enqueue(self, port: str, msg: Message) -> None:
+        if port not in self.inputs:
+            raise KeyError(f"{self.name}: no input port {port!r}")
+        if msg.landmark and self.in_degree > 1:
+            with self._lm_lock:
+                self._lm_count += 1
+                if self._lm_count < self.in_degree:
+                    return  # swallow: wait for copies from remaining edges
+                self._lm_count = 0
+        if self.engine is not None:
+            self.engine._inflight_inc()
+        self.stats.on_arrive()
+        self.inputs[port].put(msg)
+
+    def queue_length(self) -> int:
+        return sum(len(c) for c in self.inputs.values())
+
+    def _notify(self) -> None:
+        with self._wake:
+            self._wake.notify_all()
+
+    # -- dispatch ---------------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        proto = self._proto
+        while not self._stop.is_set():
+            if self._paused.is_set() or self._drain.is_set() or self.cores == 0:
+                with self._wake:
+                    self._wake.wait(timeout=0.05)
+                continue
+            work = self._collect()
+            if work is None:
+                with self._wake:
+                    if (self.queue_length() == 0 and not self._stop.is_set()
+                            and not self._ready()):
+                        self._wake.wait(timeout=0.05)
+                continue
+            kind, item, credits = work
+            with self._pellet_lock:
+                proto = self._proto
+            if kind == "landmark":
+                # a landmark must not overtake data: wait for in-flight
+                # data-parallel instances to complete and deliver outputs
+                # before forwarding the flush marker downstream
+                self._wait_quiescent()
+                self._finish(item, credits, forward=True)
+            elif proto.sequential or isinstance(proto, PullPellet):
+                self._run_task(kind, item, credits)
+            else:
+                self._submit(kind, item, credits)
+
+    def _ready(self) -> bool:
+        """Is a unit of work available right now?"""
+        proto = self._proto
+        if isinstance(proto, TuplePellet):
+            return all(len(c) > 0 for c in self.inputs.values())
+        return any(len(c) > 0 for c in self.inputs.values())
+
+    def _collect(self):
+        """Pop one unit of work: ('msg', Message, credits) |
+        ('tuple', {port: Message}, credits) | ('window', [Message], credits) |
+        ('pull', [Message], credits) | ('landmark', Message, 1) | None."""
+        proto = self._proto
+        if isinstance(proto, TuplePellet):
+            # synchronous merge: align one message per port (Fig. 1, P5);
+            # landmarks bypass alignment and are forwarded immediately.
+            for c in self.inputs.values():
+                head = c.peek()
+                if head is not None and not head.is_data():
+                    return ("landmark", c.try_pop(), 1)
+            if all(len(c) > 0 for c in self.inputs.values()):
+                tup = {p: c.try_pop() for p, c in self.inputs.items()}
+                if any(m is None for m in tup.values()):   # lost a race
+                    for p, m in tup.items():
+                        if m is not None:
+                            self.inputs[p]._q.appendleft(m)  # restore
+                    return None
+                return ("tuple", tup, len(tup))
+            return None
+        if isinstance(proto, PullPellet):
+            msgs: List[Message] = []
+            for c in self.inputs.values():
+                while True:
+                    m = c.try_pop()
+                    if m is None:
+                        break
+                    msgs.append(m)
+            if msgs:
+                return ("pull", msgs, len(msgs))
+            return None
+        if isinstance(proto, WindowPellet):
+            # count window (Fig. 1, P3): gather up to `window` data messages;
+            # a landmark flushes a partial window.
+            for c in self.inputs.values():
+                while True:
+                    head = c.peek()
+                    if head is None:
+                        break
+                    m = c.try_pop()
+                    if m is None:
+                        break
+                    if not m.is_data():
+                        buf, self._window_buf = self._window_buf, []
+                        if buf:
+                            # flush partial window, then forward the landmark
+                            # (credits include the landmark message itself)
+                            self._requeue_landmark_after = m
+                            return ("window", buf, len(buf) + 1)
+                        return ("landmark", m, 1)
+                    self._window_buf.append(m)
+                    if len(self._window_buf) >= proto.window:
+                        buf, self._window_buf = self._window_buf, []
+                        return ("window", buf, len(buf))
+            return None
+        # plain push pellet (interleaved merge across ports, Fig. 1, P6)
+        for c in self.inputs.values():
+            m = c.try_pop()
+            if m is not None:
+                if not m.is_data():
+                    return ("landmark", m, 1)
+                return ("msg", m, 1)
+        return None
+
+    # -- execution ---------------------------------------------------------------
+    def _submit(self, kind: str, item, credits: int) -> None:
+        if not self._sem.acquire(timeout=30):
+            # no instance slot (cores may be 0) — run inline as fallback
+            self._run_task(kind, item, credits)
+            return
+        self._inflight_inc_local()
+        fut = self._pool.submit(self._run_pooled, kind, item, credits)
+        if self.speculative_timeout is not None and kind == "msg":
+            threading.Timer(self.speculative_timeout,
+                            self._speculate, args=(fut, item, credits)).start()
+
+    def _speculate(self, fut, item: Message, credits: int) -> None:
+        """Backup-task execution for stragglers (first-done-wins)."""
+        if fut.done() or self._stop.is_set():
+            return
+        self._inflight_inc_local()
+        self._pool.submit(self._run_pooled, "msg", item, credits)
+
+    def _run_pooled(self, kind: str, item, credits: int) -> None:
+        try:
+            self._run_task(kind, item, credits)
+        finally:
+            self._sem.release()
+            self._inflight_dec_local()
+
+    def _run_task(self, kind: str, item, credits: int) -> None:
+        with self._pellet_lock:
+            proto = self._proto
+            version = self.version
+        t0 = time.time()
+        outputs: List[Message] = []
+        seq_for_dedup = item.seq if isinstance(item, Message) else None
+        try:
+            if kind == "msg":
+                if seq_for_dedup is not None and self.speculative_timeout is not None:
+                    with self._inflight_cond:
+                        if seq_for_dedup in self._done_seqs:
+                            return  # duplicate speculative task lost the race
+                result = proto.compute(item.payload)
+                outputs = self._wrap(result, item)
+            elif kind == "tuple":
+                payloads = {p: m.payload for p, m in item.items()}
+                anchor = next(iter(item.values()))
+                result = proto.compute(payloads)
+                outputs = self._wrap(result, anchor)
+            elif kind == "window":
+                payloads = [m.payload for m in item]
+                result = proto.compute(payloads)
+                outputs = self._wrap(result, item[0])
+            elif kind == "pull":
+                emitted: List[Message] = []
+                anchor = item[0]
+
+                def emit(payload, *, port: str = None, key: Any = None,
+                         landmark: bool = False):
+                    m = anchor.derive(payload, key=key,
+                                      port=port or proto.out_ports[0])
+                    m.landmark = landmark
+                    emitted.append(m)
+
+                with self._state_lock:
+                    st = self.state
+                new_state = proto.compute(iter(item), emit, st)
+                with self._state_lock:
+                    self.state = new_state
+                outputs = emitted
+        except Exception as e:  # pellet error: count and drop (log upstream)
+            self.stats.on_process(time.time() - t0, n=credits)
+            if self.engine is not None:
+                self.engine._record_error(self.name, e)
+                for _ in range(credits):
+                    self.engine._inflight_dec()
+            return
+        if seq_for_dedup is not None and self.speculative_timeout is not None:
+            with self._inflight_cond:
+                if seq_for_dedup in self._done_seqs:
+                    return  # another speculative copy already delivered
+                self._done_seqs.add(seq_for_dedup)
+        self.stats.on_process(time.time() - t0, n=credits)
+        for out in outputs:
+            self._route(out)
+        self.stats.on_emit(len(outputs))
+        # forward a landmark that flushed a partial window
+        lm = getattr(self, "_requeue_landmark_after", None)
+        if lm is not None:
+            self._requeue_landmark_after = None
+            self._route(lm)
+        if self.engine is not None:
+            for _ in range(credits):
+                self.engine._inflight_dec()
+
+    def _wrap(self, result: Any, anchor: Message) -> List[Message]:
+        """Normalize a compute() return value into output Messages."""
+        if result is Drop or isinstance(result, Drop):
+            return []
+        default_port = self._proto.out_ports[0]
+        outs: List[Message] = []
+
+        def one(r):
+            if r is Drop or isinstance(r, Drop) or r is None:
+                return
+            if isinstance(r, KeyedEmit):
+                outs.append(anchor.derive(r.payload, key=r.key,
+                                          port=r.port or default_port))
+            elif isinstance(r, dict) and set(r) <= set(self._proto.out_ports):
+                # multi-port emission: switch / if-then-else control flow
+                for port, payload in r.items():
+                    if payload is not Drop and payload is not None:
+                        outs.append(anchor.derive(payload, port=port))
+            else:
+                outs.append(anchor.derive(r, port=default_port))
+
+        if isinstance(result, list):
+            for r in result:
+                one(r)
+        else:
+            one(result)
+        return outs
+
+    def _finish(self, msg: Message, credits: int, forward: bool) -> None:
+        """Forward landmarks/control messages downstream on all routes."""
+        if forward:
+            self._route(msg, broadcast=True)
+        if self.engine is not None:
+            for _ in range(credits):
+                self.engine._inflight_dec()
+
+    # -- output side -----------------------------------------------------------
+    def _route(self, msg: Message, broadcast: bool = False) -> None:
+        route = self.routes.get(msg.port)
+        if route is None:
+            if broadcast and self.routes:  # landmark: fan out on every route
+                for split, targets in self.routes.values():
+                    for flake, dst_port in targets:
+                        flake.enqueue(dst_port, msg)
+                return
+            if self.engine is not None:  # sink: collect (landmarks included)
+                self.engine._collect_output(self.name, msg)
+            return
+        split, targets = route
+        if not msg.is_data() and split.broadcast_specials():
+            idxs = range(len(targets))
+        else:
+            depths = [t[0].queue_length() for t in targets]
+            idxs = split.choose(msg, len(targets), depths)
+        for i in idxs:
+            flake, dst_port = targets[i]
+            flake.enqueue(dst_port, msg)
+
+    # -- quiescence bookkeeping --------------------------------------------------
+    def _inflight_inc_local(self) -> None:
+        with self._inflight_cond:
+            self._inflight += 1
+
+    def _inflight_dec_local(self) -> None:
+        with self._inflight_cond:
+            self._inflight -= 1
+            self._inflight_cond.notify_all()
+
+    def _wait_quiescent(self, timeout: float = 30.0) -> None:
+        deadline = time.time() + timeout
+        with self._inflight_cond:
+            self._inflight_cond.wait_for(lambda: self._inflight == 0,
+                                         timeout=max(0.0, deadline - time.time()))
+
+
+class Container:
+    """Resource runtime at VM granularity (§III): core accounting for flakes."""
+
+    def __init__(self, name: str, cores: int = 8):
+        self.name = name
+        self.total_cores = cores
+        self.allocated: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def free_cores(self) -> int:
+        return self.total_cores - sum(self.allocated.values())
+
+    def allocate(self, flake_name: str, cores: int) -> bool:
+        with self._lock:
+            if cores > self.free_cores:
+                return False
+            self.allocated[flake_name] = self.allocated.get(flake_name, 0) + cores
+            return True
+
+    def release(self, flake_name: str, cores: Optional[int] = None) -> None:
+        with self._lock:
+            if flake_name not in self.allocated:
+                return
+            if cores is None or cores >= self.allocated[flake_name]:
+                self.allocated.pop(flake_name)
+            else:
+                self.allocated[flake_name] -= cores
+
+
+class Coordinator:
+    """Application runtime at graph granularity (§III).
+
+    Parses the FloeGraph, acquires cores on containers via best-fit,
+    instantiates flakes, wires them bottom-up (sinks before sources), and
+    exposes management operations: inject inputs, pause/resume, dynamic task
+    and dataflow updates, and graceful shutdown.  Outputs of sink pellets are
+    collected into ``self.outputs``.
+    """
+
+    def __init__(self, graph: FloeGraph, *,
+                 containers: Optional[List[Container]] = None,
+                 channel_capacity: int = 100_000,
+                 speculative_timeout: Optional[float] = None):
+        graph.validate()
+        self.graph = graph
+        self.containers = containers or [Container("c0", cores=64)]
+        self.flakes: Dict[str, Flake] = {}
+        self.outputs: List[Message] = []
+        self._out_lock = threading.Lock()
+        self.errors: List[Tuple[str, Exception]] = []
+        self._inflight = 0
+        self._iq = threading.Condition()
+        self._active = False
+        self._channel_capacity = channel_capacity
+        self._speculative_timeout = speculative_timeout
+
+    # -- engine-wide quiescence ---------------------------------------------
+    def _inflight_inc(self) -> None:
+        with self._iq:
+            self._inflight += 1
+
+    def _inflight_dec(self) -> None:
+        with self._iq:
+            self._inflight -= 1
+            if self._inflight <= 0:
+                self._iq.notify_all()
+
+    def _record_error(self, flake: str, exc: Exception) -> None:
+        self.errors.append((flake, exc))
+
+    def _collect_output(self, flake: str, msg: Message) -> None:
+        with self._out_lock:
+            self.outputs.append(msg)
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> "Coordinator":
+        order = self.graph.wiring_order()  # bottom-up BFS, loops ignored (§III)
+        for name in order:
+            v = self.graph.vertices[name]
+            placed = False
+            # best-fit container selection (§III)
+            for c in sorted(self.containers, key=lambda c: c.free_cores):
+                if c.allocate(name, v.cores):
+                    placed = True
+                    break
+            if not placed:
+                # elastic acquisition: the resource manager would request a
+                # new VM from the Cloud fabric; locally we add a container.
+                c = Container(f"c{len(self.containers)}", cores=max(8, v.cores))
+                c.allocate(name, v.cores)
+                self.containers.append(c)
+            self.flakes[name] = Flake(
+                name, v.factory, cores=v.cores, engine=self,
+                channel_capacity=self._channel_capacity,
+                speculative_timeout=self._speculative_timeout)
+        # wire: group out-edges by (src, src_port); one split policy per group
+        for name in order:
+            flake = self.flakes[name]
+            by_port: Dict[str, List] = {}
+            for e in self.graph.out_edges(name):
+                by_port.setdefault(e.src_port, []).append(e)
+            for port, edges in by_port.items():
+                split = make_split(edges[0].split)
+                targets = [(self.flakes[e.dst], e.dst_port) for e in edges]
+                flake.add_route(port, split, targets)
+        # landmark alignment: in-degree = number of inbound edges
+        for name in order:
+            n_in = len(self.graph.in_edges(name))
+            self.flakes[name].in_degree = max(1, n_in)
+        # activate in wiring order: downstream pellets first (§III)
+        for name in order:
+            self.flakes[name].activate()
+        self._active = True
+        return self
+
+    def stop(self) -> None:
+        for f in self.flakes.values():
+            f.deactivate()
+        self._active = False
+
+    # -- I/O ---------------------------------------------------------------------
+    def inject(self, flake_name: str, payload: Any, *, port: str = "in",
+               key: Any = None) -> None:
+        """Pass inputs to the dataflow via the input port endpoint (§III)."""
+        self.flakes[flake_name].enqueue(port, Message(payload=payload, key=key))
+
+    def inject_landmark(self, flake_name: str, tag: Any = None,
+                        port: str = "in") -> None:
+        from .message import landmark
+        self.flakes[flake_name].enqueue(port, landmark(tag))
+
+    def run_until_quiescent(self, timeout: float = 60.0) -> bool:
+        """Block until no message is in flight anywhere in the graph."""
+        deadline = time.time() + timeout
+        with self._iq:
+            return self._iq.wait_for(
+                lambda: self._inflight <= 0,
+                timeout=max(0.0, deadline - time.time()))
+
+    def drain_outputs(self) -> List[Message]:
+        with self._out_lock:
+            out, self.outputs = self.outputs, []
+            return out
+
+    # -- dynamism (§II.B) ----------------------------------------------------------
+    def update_pellet(self, name: str, factory: Callable[[], Pellet], *,
+                      mode: str = "sync", emit_update_landmark: bool = True) -> None:
+        """Dynamic task update: in-place swap of one pellet's logic."""
+        self.flakes[name].swap_pellet(factory, mode=mode,
+                                      emit_update_landmark=emit_update_landmark)
+
+    def update_subgraph(self, factories: Dict[str, Callable[[], Pellet]], *,
+                        mode: str = "sync") -> None:
+        """Dynamic dataflow update: coordinated multi-pellet swap (§II.B).
+
+        All named pellets are drained together (slowest pellet bounds the
+        synchronization cost, as the paper notes), then swapped
+        simultaneously, then resumed together.
+        """
+        flakes = [self.flakes[n] for n in factories]
+        if mode == "sync":
+            for f in flakes:
+                f._drain.set()
+            for f in flakes:
+                f._wait_quiescent()
+        for n, factory in factories.items():
+            self.flakes[n].swap_pellet(factory, mode="async",
+                                       emit_update_landmark=False)
+        # one coordinated update landmark from each updated pellet
+        from .message import update_landmark
+        for n in factories:
+            self.flakes[n]._route(update_landmark(tag={"subgraph": list(factories)}),
+                                  broadcast=True)
+        if mode == "sync":
+            for f in flakes:
+                f._drain.clear()
+                f._notify()
+
+    def set_cores(self, name: str, cores: int) -> None:
+        self.flakes[name].set_cores(cores)
+
+    # -- introspection ---------------------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        return {n: {"queue": f.queue_length(),
+                    "arrived": f.stats.arrived,
+                    "processed": f.stats.processed,
+                    "emitted": f.stats.emitted,
+                    "avg_latency": f.stats.avg_latency,
+                    "cores": f.cores,
+                    "version": f.version}
+                for n, f in self.flakes.items()}

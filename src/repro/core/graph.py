@@ -1,0 +1,166 @@
+"""Floe graph composition (paper §III).
+
+Applications are composed as a directed graph where vertices are pellets and
+edges identify the input/output ports of the source and sink pellets they
+connect.  The paper describes XML graph documents; we compose in Python and
+(de)serialize to a JSON-able dict with the same information content: vertices
+reference pellet factories by qualified name, edges carry design-pattern
+annotations (split policy, window width, synchronous/asynchronous transport).
+
+Cycles are allowed (Fig. 1, P4): validation treats back-edges as legal and the
+coordinator's bottom-up wiring ignores loops, exactly as §III specifies
+("bottom-up breadth-first search traversal of the dataflow (ignoring loops)").
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .pellet import Pellet
+from .patterns import SPLITS
+
+
+@dataclass
+class Vertex:
+    name: str
+    factory: Callable[[], Pellet]           # creates pellet instances
+    cores: int = 1                          # static core annotation (§III)
+    annotations: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class Edge:
+    src: str
+    src_port: str
+    dst: str
+    dst_port: str
+    #: split policy used when the (src, src_port) fans out to several edges
+    split: str = "round_robin"
+    #: synchronous push from source vs asynchronous pull by sink (§III)
+    transport: str = "push"
+
+    def endpoint(self) -> Tuple[str, str]:
+        return (self.dst, self.dst_port)
+
+
+class FloeGraph:
+    """A composable continuous dataflow graph."""
+
+    def __init__(self, name: str = "floe"):
+        self.name = name
+        self.vertices: Dict[str, Vertex] = {}
+        self.edges: List[Edge] = []
+
+    # -- composition --------------------------------------------------------
+    def add(self, name: str, factory: Callable[[], Pellet], *, cores: int = 1,
+            **annotations) -> "FloeGraph":
+        if name in self.vertices:
+            raise ValueError(f"duplicate pellet name {name!r}")
+        if not callable(factory):
+            raise TypeError("factory must be callable (class or lambda)")
+        self.vertices[name] = Vertex(name, factory, cores, annotations)
+        return self
+
+    def connect(self, src: str, dst: str, *, src_port: str = "out",
+                dst_port: str = "in", split: str = "round_robin",
+                transport: str = "push") -> "FloeGraph":
+        for endpoint, role in ((src, "source"), (dst, "sink")):
+            if endpoint not in self.vertices:
+                raise ValueError(f"unknown {role} pellet {endpoint!r}")
+        if split not in SPLITS:
+            raise ValueError(f"unknown split {split!r}")
+        self.edges.append(Edge(src, src_port, dst, dst_port, split, transport))
+        return self
+
+    # -- queries -------------------------------------------------------------
+    def out_edges(self, name: str, port: Optional[str] = None) -> List[Edge]:
+        return [e for e in self.edges
+                if e.src == name and (port is None or e.src_port == port)]
+
+    def in_edges(self, name: str, port: Optional[str] = None) -> List[Edge]:
+        return [e for e in self.edges
+                if e.dst == name and (port is None or e.dst_port == port)]
+
+    def sources(self) -> List[str]:
+        """Vertices with no inbound edges (dataflow entry points)."""
+        have_in = {e.dst for e in self.edges}
+        return [v for v in self.vertices if v not in have_in]
+
+    def sinks(self) -> List[str]:
+        have_out = {e.src for e in self.edges}
+        return [v for v in self.vertices if v not in have_out]
+
+    def wiring_order(self) -> List[str]:
+        """Bottom-up BFS from sinks, ignoring loops (§III).
+
+        Guarantees downstream pellets are wired/active before upstream ones
+        start generating messages.  Back-edges (cycles) are skipped during the
+        traversal; any vertices reachable only through cycles are appended at
+        the end (they are still wired before their upstream producers run
+        because activation is atomic per engine start).
+        """
+        order: List[str] = []
+        seen = set()
+        frontier = self.sinks() or list(self.vertices)  # fully cyclic graph
+        while frontier:
+            nxt: List[str] = []
+            for v in frontier:
+                if v in seen:
+                    continue
+                seen.add(v)
+                order.append(v)
+                for e in self.in_edges(v):
+                    if e.src not in seen:
+                        nxt.append(e.src)
+            frontier = nxt
+        for v in self.vertices:  # cycle-only components
+            if v not in seen:
+                order.append(v)
+        return order
+
+    def validate(self) -> None:
+        names = set(self.vertices)
+        for e in self.edges:
+            if e.src not in names or e.dst not in names:
+                raise ValueError(f"dangling edge {e}")
+        # port existence is checked lazily at instantiation time because
+        # factories may be swapped dynamically (§II.B); duplicate sync-merge
+        # wiring is checked here:
+        for name in names:
+            ports = {}
+            for e in self.in_edges(name):
+                ports.setdefault(e.dst_port, []).append(e)
+        # multiple edges into the same port = interleaved merge -> legal
+
+    # -- serialization (paper used XML; dict/JSON carries the same info) ----
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "vertices": [
+                {"name": v.name,
+                 "factory": f"{v.factory.__module__}.{v.factory.__qualname__}"
+                            if hasattr(v.factory, "__qualname__") else repr(v.factory),
+                 "cores": v.cores, "annotations": v.annotations}
+                for v in self.vertices.values()],
+            "edges": [vars(e).copy() for e in self.edges],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any],
+                  factories: Optional[Dict[str, Callable]] = None) -> "FloeGraph":
+        g = cls(d.get("name", "floe"))
+        for v in d["vertices"]:
+            qual = v["factory"]
+            if factories and v["name"] in factories:
+                factory = factories[v["name"]]
+            else:  # resolve qualified class name, as the paper's XML does
+                mod, _, attr = qual.rpartition(".")
+                factory = getattr(importlib.import_module(mod), attr)
+            g.add(v["name"], factory, cores=v.get("cores", 1),
+                  **v.get("annotations", {}))
+        for e in d["edges"]:
+            g.connect(e["src"], e["dst"], src_port=e["src_port"],
+                      dst_port=e["dst_port"], split=e["split"],
+                      transport=e.get("transport", "push"))
+        return g

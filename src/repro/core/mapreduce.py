@@ -1,0 +1,143 @@
+"""Streaming MapReduce+ (paper §II.A, Fig. 1 P9).
+
+Map and Reduce pellets wired as a bipartite graph; the shuffle uses the
+**dynamic port mapping** pattern (``split="hash"``): the framework hashes the
+emitted key to pick the edge, so all messages from any Map pellet with the
+same key reach the same Reduce pellet — like Hadoop's partitioner, but
+*streaming*: reducers start before mappers complete, operate over incremental
+data, and flush on user-defined **landmark** messages.
+
+Reducers can feed further reducers (MapReduce+: one Map stage, 1+ Reduce
+stages) and can appear anywhere in a dataflow composition, including in
+cycles (used by the stream-clustering case study, Fig. 3b).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from .graph import FloeGraph
+from .message import Message
+from .pellet import KeyedEmit, PullPellet, PushPellet
+
+
+class Mapper(PushPellet):
+    """Subclass and implement ``map(payload) -> iterable[(key, value)]``."""
+
+    def map(self, payload: Any) -> Iterable[Tuple[Any, Any]]:
+        raise NotImplementedError
+
+    def compute(self, payload: Any) -> List[KeyedEmit]:
+        return [KeyedEmit(value, key=key) for key, value in self.map(payload)]
+
+
+class FnMapper(Mapper):
+    def __init__(self, fn: Callable[[Any], Iterable[Tuple[Any, Any]]]):
+        self.fn = fn
+
+    def map(self, payload):
+        return self.fn(payload)
+
+
+class Reducer(PullPellet):
+    """Streaming reducer: combines values per key; flushes on landmark.
+
+    Implement ``zero()`` and ``combine(acc, value) -> acc``.  On a landmark
+    message the reducer emits ``(key, acc)`` pairs for every key seen in the
+    logical window and (if ``incremental`` is False) resets its state; with
+    ``incremental=True`` the accumulators persist, supporting operation over
+    incremental datasets as they arrive (§II.A).
+    """
+
+    incremental = False
+
+    def __init__(self, incremental: Optional[bool] = None):
+        if incremental is not None:
+            self.incremental = incremental
+
+    def zero(self) -> Any:
+        return None
+
+    def combine(self, acc: Any, value: Any) -> Any:
+        raise NotImplementedError
+
+    def finalize(self, key: Any, acc: Any) -> Any:
+        """Map (key, acc) to the flushed output payload."""
+        return (key, acc)
+
+    def rekey(self, key: Any, acc: Any) -> Any:
+        """Routing key attached to the flushed payload — override to re-key
+        for a subsequent Reduce stage (MapReduce+ chains reducers without an
+        intermediate Map, §II.A)."""
+        return key
+
+    def initial_state(self) -> Dict[Any, Any]:
+        return {}
+
+    def compute(self, messages: Iterable[Message], emit, state: Dict) -> Dict:
+        state = dict(state) if state else {}
+        for msg in messages:
+            if msg.landmark:
+                for k, acc in sorted(state.items(), key=lambda kv: repr(kv[0])):
+                    emit(self.finalize(k, acc), key=self.rekey(k, acc))
+                emit(msg.payload, landmark=True)   # propagate the flush marker
+                if not self.incremental:
+                    state = {}
+            elif msg.is_data():
+                k = msg.key
+                state[k] = self.combine(state.get(k, self.zero()), msg.payload)
+        return state
+
+
+class FnReducer(Reducer):
+    def __init__(self, zero: Callable[[], Any], combine: Callable[[Any, Any], Any],
+                 finalize: Optional[Callable[[Any, Any], Any]] = None,
+                 rekey: Optional[Callable[[Any, Any], Any]] = None,
+                 incremental: bool = False):
+        super().__init__(incremental=incremental)
+        self._zero, self._combine = zero, combine
+        self._finalize, self._rekey = finalize, rekey
+
+    def zero(self):
+        return self._zero()
+
+    def combine(self, acc, value):
+        return self._combine(acc, value)
+
+    def finalize(self, key, acc):
+        return self._finalize(key, acc) if self._finalize else (key, acc)
+
+    def rekey(self, key, acc):
+        return self._rekey(key, acc) if self._rekey else key
+
+
+def add_mapreduce(graph: FloeGraph, *, prefix: str,
+                  mapper_factory: Callable[[], Mapper],
+                  reducer_factory: Callable[[], Reducer],
+                  n_mappers: int, n_reducers: int,
+                  source: Optional[str] = None,
+                  sink: Optional[str] = None,
+                  mapper_cores: int = 1, reducer_cores: int = 1
+                  ) -> Tuple[List[str], List[str]]:
+    """Wire an m×r streaming MapReduce stage into ``graph``.
+
+    source (if given) round-robins into the mappers; every mapper hash-splits
+    into every reducer (dynamic port mapping); reducers connect to sink (if
+    given).  Returns (mapper_names, reducer_names) so callers can extend the
+    graph (e.g. chain a second Reduce stage for MapReduce+).
+    """
+    mappers = [f"{prefix}_map{i}" for i in range(n_mappers)]
+    reducers = [f"{prefix}_red{j}" for j in range(n_reducers)]
+    for name in mappers:
+        graph.add(name, mapper_factory, cores=mapper_cores)
+    for name in reducers:
+        graph.add(name, reducer_factory, cores=reducer_cores)
+    if source is not None:
+        for name in mappers:
+            graph.connect(source, name, split="round_robin")
+    for m in mappers:
+        for r in reducers:
+            graph.connect(m, r, split="hash")
+    if sink is not None:
+        for r in reducers:
+            graph.connect(r, sink, split="round_robin")
+    return mappers, reducers

@@ -1,0 +1,62 @@
+"""Messages — the unit of data flowing on Floe channels.
+
+The paper (§II.A) models messages as serialized Java objects or files moving
+between pellet ports.  Here a message carries an arbitrary payload (any Python
+object or JAX pytree), an optional routing ``key`` (used by dynamic port
+mapping, §II.A "Advanced Dataflow Abstractions"), and metadata used by the
+runtime: a monotonically increasing sequence id, the emitting port, creation
+time, and landmark/control flags.
+
+Landmark messages (paper: "user-defined 'landmark' messages to indicate when a
+logical window of message streams have been processed") flush windows and
+streaming reducers.  Update landmarks (§II.B) notify downstream pellets that a
+new task logic is in place.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+_seq = itertools.count()
+_seq_lock = threading.Lock()
+
+
+def _next_seq() -> int:
+    with _seq_lock:
+        return next(_seq)
+
+
+@dataclass
+class Message:
+    payload: Any = None
+    key: Optional[Any] = None          # routing key for dynamic port mapping
+    port: str = "out"                  # port on which the message was emitted
+    seq: int = field(default_factory=_next_seq)
+    ts: float = field(default_factory=time.time)
+    landmark: bool = False             # window/reduce flush marker
+    update_landmark: bool = False      # §II.B "update landmark"
+    control: bool = False              # BSP control message (manager gating)
+    meta: dict = field(default_factory=dict)
+
+    def is_data(self) -> bool:
+        return not (self.landmark or self.update_landmark or self.control)
+
+    def derive(self, payload: Any, *, key: Any = None, port: str = "out") -> "Message":
+        """Create a downstream message, inheriting lineage metadata."""
+        return Message(payload=payload, key=key, port=port,
+                       meta={**self.meta, "parent_seq": self.seq})
+
+
+def landmark(tag: Any = None) -> Message:
+    return Message(payload=tag, landmark=True)
+
+
+def update_landmark(tag: Any = None) -> Message:
+    return Message(payload=tag, update_landmark=True)
+
+
+def control(payload: Any = None) -> Message:
+    return Message(payload=payload, control=True)

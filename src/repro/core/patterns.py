@@ -1,0 +1,119 @@
+"""Channel patterns: splits, merges, and dynamic port mapping (paper §II.A).
+
+A *split* governs how messages leaving one logical output port are routed to
+multiple sink edges:
+
+* ``DuplicateSplit``  — every outgoing edge receives a copy (Fig. 1, P7).
+* ``RoundRobinSplit`` — load balance across edges (Fig. 1, P8, the default).
+* ``HashSplit``       — **dynamic port mapping**: hash the message key to pick
+  the edge, so all messages with the same key reach the same sink pellet —
+  the streaming MapReduce shuffle (Fig. 1, P9).  This is the pattern the
+  paper singles out as missing from generic dataflow frameworks; at the
+  SPMD layer it becomes the MoE ``all_to_all`` dispatch (see
+  ``repro.kernels.moe_dispatch``).
+* ``BalancedSplit``   — the paper's "more sophisticated strategy ... e.g.
+  depending on the numbers of messages pending in the input queue": route to
+  the sink with the shortest pending queue (join-the-shortest-queue).
+
+A *merge* governs how multiple inbound edges feed a pellet's input side:
+
+* interleaved merge (Fig. 1, P6) — edges share one port; messages interleave
+  by arrival. This is the default when several edges target the same port.
+* synchronous merge (Fig. 1, P5) — edges target distinct ports; the flake
+  aligns one message per port into a tuple (dict) before triggering.
+
+Both merge flavours are implemented inside ``core.engine.Flake``; this module
+provides the split policies and the stable key hash.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+from typing import Any, List, Sequence
+
+from .message import Message
+
+
+def stable_hash(key: Any) -> int:
+    """Deterministic cross-process hash of a routing key.
+
+    ``hash()`` is salted per-process for strings; the shuffle contract
+    (same key -> same reducer, even across restarts/checkpoint resume)
+    needs a stable hash, so we use blake2b over the repr.
+    """
+    h = hashlib.blake2b(repr(key).encode(), digest_size=8).digest()
+    return int.from_bytes(h, "big")
+
+
+class Split:
+    """Base split policy: choose target edge indices for a message."""
+
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        raise NotImplementedError
+
+    def broadcast_specials(self) -> bool:
+        """Landmarks/control messages go to *all* edges regardless of policy."""
+        return True
+
+
+class DuplicateSplit(Split):
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        return list(range(n_edges))
+
+
+class RoundRobinSplit(Split):
+    def __init__(self):
+        self._counter = itertools.count()
+
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        return [next(self._counter) % n_edges]
+
+
+class HashSplit(Split):
+    """Dynamic port mapping: same key -> same edge, Hadoop-style."""
+
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        key = msg.key if msg.key is not None else msg.payload
+        return [stable_hash(key) % n_edges]
+
+
+class DirectSplit(Split):
+    """Addressed delivery: the integer key *is* the target edge index.
+
+    Used by the BSP pattern (Fig. 1, P10) where a worker emits a message to a
+    specific peer; a degenerate (identity) case of dynamic port mapping.
+    """
+
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        key = msg.key if msg.key is not None else 0
+        return [int(key) % n_edges]
+
+
+class BalancedSplit(Split):
+    """Join-the-shortest-queue (paper's suggested future refinement of P8)."""
+
+    def __init__(self):
+        self._tie = itertools.count()
+
+    def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
+        if not queue_depths or len(queue_depths) != n_edges:
+            return [next(self._tie) % n_edges]
+        m = min(queue_depths)
+        candidates = [i for i, d in enumerate(queue_depths) if d == m]
+        return [candidates[next(self._tie) % len(candidates)]]
+
+
+SPLITS = {
+    "duplicate": DuplicateSplit,
+    "round_robin": RoundRobinSplit,
+    "hash": HashSplit,
+    "direct": DirectSplit,
+    "balanced": BalancedSplit,
+}
+
+
+def make_split(name: str) -> Split:
+    try:
+        return SPLITS[name]()
+    except KeyError:
+        raise ValueError(f"unknown split policy {name!r}; one of {sorted(SPLITS)}")

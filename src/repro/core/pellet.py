@@ -1,0 +1,148 @@
+"""Pellets — user application logic units (paper §II.A).
+
+A pellet implements one of several ``compute()`` interfaces that determine the
+triggering model:
+
+* ``PushPellet``   — framework invokes ``compute(payload)`` once per message
+  (Fig. 1, P1).  Implicitly stateless; every input produces one output
+  (or a ``Drop``), which makes push pellets safely data-parallel.
+* ``PullPellet``   — ``compute(messages, emit, state) -> state`` receives an
+  iterator of messages and an emitter, and may consume zero or more messages
+  to emit zero or more (Fig. 1, P2).  Pull pellets may retain local state via
+  the explicit state object, enabling transparent checkpointing (§II.A).
+* ``WindowPellet`` — receives a list of messages falling in a count window
+  whose width is fixed at composition time (Fig. 1, P3).
+* ``TuplePellet``  — multi-port synchronous merge: ``compute`` receives a dict
+  keyed by port name (Fig. 1, P5).
+
+Pellets expose named input and output ports.  Multi-output pellets return
+``{port: payload}`` dicts (used for switch/if-then-else control flow and
+feedback loops, Fig. 1, P4).
+
+``Drop`` is a sentinel: a push pellet returning ``Drop`` emits nothing (used
+by filters / switch branches).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from .message import Message
+
+
+class Drop:
+    """Sentinel return value: emit no output for this input."""
+
+
+class Pellet:
+    """Base pellet.  Subclass one of the concrete triggering variants."""
+
+    #: named ports (order matters for synchronous merge alignment)
+    in_ports: tuple = ("in",)
+    out_ports: tuple = ("out",)
+    #: pull pellets and window reducers may hold state; push pellets must not
+    stateful: bool = False
+    #: force sequential (in-order) execution — disables data parallelism
+    sequential: bool = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def setup(self) -> None:  # called once per instance before first compute
+        pass
+
+    def teardown(self) -> None:  # called when the pellet is retired/swapped
+        pass
+
+    # -- explicit state object (§II.A) -------------------------------------
+    def initial_state(self) -> Any:
+        return None
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{type(self).__name__} in={self.in_ports} out={self.out_ports}>"
+
+
+class PushPellet(Pellet):
+    """One compute() call per message; stateless; data-parallel by default."""
+
+    def compute(self, payload: Any) -> Any:
+        raise NotImplementedError
+
+
+class TuplePellet(Pellet):
+    """Synchronous merge over multiple input ports (Fig. 1, P5).
+
+    ``compute`` receives ``{port_name: payload}`` with one aligned message per
+    port.
+    """
+
+    def compute(self, inputs: Dict[str, Any]) -> Any:
+        raise NotImplementedError
+
+
+class WindowPellet(Pellet):
+    """Count-window pellet (Fig. 1, P3): compute() gets a list of payloads.
+
+    ``window`` is the count-window width, set at composition time; a landmark
+    message flushes a partial window.
+    """
+
+    window: int = 1
+
+    def __init__(self, window: Optional[int] = None):
+        if window is not None:
+            self.window = int(window)
+
+    def compute(self, payloads: List[Any]) -> Any:
+        raise NotImplementedError
+
+
+class PullPellet(Pellet):
+    """Streamed execution (Fig. 1, P2): iterate input, emit 0..n outputs.
+
+    ``compute(messages, emit, state) -> new_state``.  ``messages`` is an
+    iterable of Message objects currently available; ``emit(payload, port=,
+    key=)`` pushes to the output queue.  The returned state object survives
+    across invocations and across dynamic task updates (§II.B), and is what
+    the checkpointer persists.
+    """
+
+    stateful = True
+    sequential = True  # stateful pellets run sequentially by default
+
+    def compute(self, messages: Iterable[Message],
+                emit: Callable[..., None], state: Any) -> Any:
+        raise NotImplementedError
+
+
+class FnPellet(PushPellet):
+    """Convenience: wrap a plain callable (possibly a jitted JAX fn)."""
+
+    def __init__(self, fn: Callable[[Any], Any], *, name: str = None,
+                 in_ports: tuple = ("in",), out_ports: tuple = ("out",),
+                 sequential: bool = False, latency: float = 0.0,
+                 selectivity: float = 1.0):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "fn")
+        self.in_ports = in_ports
+        self.out_ports = out_ports
+        self.sequential = sequential
+        # declared profile hints used by the static look-ahead strategy (§III)
+        self.latency_hint = latency
+        self.selectivity_hint = selectivity
+
+    def compute(self, payload: Any) -> Any:
+        return self.fn(payload)
+
+
+class KeyedEmit:
+    """Payload wrapper letting push pellets attach a routing key / port.
+
+    Returned from ``compute`` as ``KeyedEmit(value, key=k, port=p)`` (or a
+    list thereof) — this is how Map pellets emit <key, value> pairs for the
+    dynamic port mapping shuffle (§II.A MapReduce).
+    """
+
+    __slots__ = ("payload", "key", "port")
+
+    def __init__(self, payload: Any, key: Any = None, port: str = None):
+        self.payload = payload
+        self.key = key
+        self.port = port

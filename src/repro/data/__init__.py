@@ -1,0 +1,3 @@
+from .pipeline import StreamSource, TokenPipeline
+
+__all__ = ["StreamSource", "TokenPipeline"]

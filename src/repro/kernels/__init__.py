@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Validated on CPU via ``interpret=True`` against the pure-jnp oracles in
+``ref.py``; on TPU the same ``pallas_call`` graphs lower to Mosaic.
+"""
+from .ops import (decode_attention_op, flash_attention_op, moe_combine_op,
+                  moe_dispatch_op, moe_ffn_pallas, route, ssm_scan_op)
+
+__all__ = ["decode_attention_op", "flash_attention_op", "moe_combine_op",
+           "moe_dispatch_op", "moe_ffn_pallas", "route", "ssm_scan_op"]

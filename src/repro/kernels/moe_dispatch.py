@@ -1,0 +1,125 @@
+"""Pallas TPU MoE dispatch/combine kernels — dynamic port mapping on-chip.
+
+The paper's key compositional primitive (§II.A) is the hash-split that
+routes each keyed message to exactly one reducer.  Inside a TPU MoE layer
+the same shuffle appears twice per layer:
+
+* **dispatch** — permute token rows into per-expert capacity buffers
+  (E, C, D) according to the router's choices;
+* **combine**  — gather each token's k expert outputs back and reduce them
+  with the routing weights.
+
+Both are pure data-movement (memory-roofline), so the kernels stream rows
+HBM→VMEM→HBM once, using scalar-prefetched index matrices in SMEM to drive
+dynamic row addressing — the TPU-native equivalent of the warp-level shuffle
+a CUDA implementation would use.
+
+Routing itself (top-k + slot assignment) is cheap dense math left in jnp
+(``ops.route``); the kernels consume its outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# dispatch: x (T,D), src_idx (E,C), valid (E,C) -> buffers (E,C,D)
+# ---------------------------------------------------------------------------
+
+def _dispatch_kernel(idx_ref, valid_ref, x_ref, buf_ref, *, block_c: int,
+                     d: int):
+    e = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    def row(i, _):
+        slot = ci * block_c + i
+        src = idx_ref[e, slot]
+        ok = valid_ref[e, slot]
+        r = x_ref[pl.dslice(src, 1), pl.dslice(0, d)]
+        r = jnp.where(ok, r, jnp.zeros_like(r))
+        buf_ref[pl.dslice(0, 1), pl.dslice(i, 1), pl.dslice(0, d)] = r[None]
+        return 0
+
+    jax.lax.fori_loop(0, block_c, row, 0)
+
+
+def moe_dispatch(x: jnp.ndarray, src_idx: jnp.ndarray, valid: jnp.ndarray,
+                 *, block_c: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Gather token rows into expert buffers (the shuffle 'send' side)."""
+    T, D = x.shape
+    E, C = src_idx.shape
+    block_c = min(block_c, C)
+    assert C % block_c == 0
+    grid = (E, C // block_c)
+    kernel = functools.partial(_dispatch_kernel, block_c=block_c, d=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,     # src_idx, valid in SMEM
+        grid=grid,
+        in_specs=[pl.BlockSpec((T, D), lambda e, c, *_: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_c, D), lambda e, c, *_: (e, c, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), valid.astype(jnp.int32), x)
+
+
+# ---------------------------------------------------------------------------
+# combine: buf (E,C,D), expert/pos/keep/weight (T,k) -> y (T,D)
+# ---------------------------------------------------------------------------
+
+def _combine_kernel(e_ref, p_ref, keep_ref, w_ref, buf_ref, y_ref, *,
+                    block_t: int, top_k: int, d: int):
+    ti = pl.program_id(0)
+
+    def row(i, _):
+        t = ti * block_t + i
+        acc = jnp.zeros((1, d), jnp.float32)
+
+        def one(j, acc):
+            e = e_ref[t, j]
+            c = p_ref[t, j]
+            ok = keep_ref[t, j]
+            w = w_ref[t, j]
+            r = buf_ref[pl.dslice(e, 1), pl.dslice(c, 1),
+                        pl.dslice(0, d)][0].astype(jnp.float32)
+            return acc + jnp.where(ok, w * r, 0.0)
+
+        acc = jax.lax.fori_loop(0, top_k, one, acc)
+        y_ref[pl.dslice(i, 1), pl.dslice(0, d)] = acc.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, block_t, row, 0)
+
+
+def moe_combine(buf: jnp.ndarray, expert: jnp.ndarray, pos: jnp.ndarray,
+                weight: jnp.ndarray, keep: jnp.ndarray, *,
+                block_t: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Weighted gather of expert outputs back to tokens ('receive' side)."""
+    E, C, D = buf.shape
+    T, k = expert.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    grid = (T // block_t,)
+    kernel = functools.partial(_combine_kernel, block_t=block_t, top_k=k,
+                               d=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,     # expert, pos, keep, weight(f32 in SMEM)
+        grid=grid,
+        in_specs=[pl.BlockSpec((E, C, D), lambda t, *_: (0, 0, 0))],
+        out_specs=pl.BlockSpec((block_t, D), lambda t, *_: (t, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, D), buf.dtype),
+        interpret=interpret,
+    )(expert.astype(jnp.int32), pos.astype(jnp.int32),
+      keep.astype(jnp.int32), weight.astype(jnp.float32), buf)

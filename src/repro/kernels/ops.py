@@ -1,0 +1,133 @@
+"""jit'd wrappers around the Pallas kernels (padding, routing, interpret).
+
+These are the public entry points: they handle TPU lane-alignment padding
+(head dims to multiples of 128), compute MoE routing tables, and expose an
+``interpret=`` switch so the same code paths run on CPU for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import moe_dispatch as _moe
+from . import ssm_scan as _ssm
+
+LANE = 128
+
+
+def _pad_last(x: jnp.ndarray, mult: int = LANE) -> Tuple[jnp.ndarray, int]:
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x, d
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, block_q: int = 128,
+                       block_k: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Padded/aligned flash attention: q (B,S,H,hd), kv (B,S,Hkv,hd)."""
+    B, Sq, H, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    qp, _ = _pad_last(q)
+    kp, _ = _pad_last(k)
+    vp, _ = _pad_last(v)
+    bq = min(block_q, max(8, Sq))
+    pad_q = (-Sq) % bq
+    if pad_q:
+        qp = jnp.pad(qp, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              block_q=bq, block_k=min(block_k, kp.shape[1]),
+                              sm_scale=scale, interpret=interpret)
+    return out[:, :Sq, :, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention_op(q, k_cache, v_cache, lengths, *,
+                        window: Optional[int] = None, block_k: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Padded flash-decode: q (B,H,hd), caches (B,S,Hkv,hd), lengths (B,)."""
+    B, H, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    qp, _ = _pad_last(q)
+    kp, _ = _pad_last(k_cache)
+    vp, _ = _pad_last(v_cache)
+    out = _dec.decode_attention(qp, kp, vp, lengths, window=window,
+                                block_k=min(block_k, kp.shape[1]),
+                                sm_scale=scale, interpret=interpret)
+    return out[:, :, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan_op(x, dt, A, B_, C_, h0=None, *, block_d: int = 128,
+                interpret: bool = False):
+    """Selective scan: x/dt (B,S,di), A (di,N), B_/C_ (B,S,N)."""
+    di = x.shape[-1]
+    bd = min(block_d, di)
+    while di % bd:
+        bd //= 2
+    return _ssm.ssm_scan(x, dt, A, B_, C_, h0, block_d=bd,
+                         interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing (dense jnp math) + kernel-backed dispatch/combine
+# ---------------------------------------------------------------------------
+
+def route(router_logits: jnp.ndarray, top_k: int, capacity: int):
+    """Compute the dynamic port mapping tables from router logits (T,E).
+
+    Returns (weight (T,k) f32, expert (T,k) i32, pos (T,k) i32,
+    keep (T,k) bool, src_idx (E,C) i32, valid (E,C) bool)."""
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weight, expert = jax.lax.top_k(probs, top_k)
+    weight = weight / jnp.sum(weight, axis=-1, keepdims=True)
+    flat_e = expert.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1)
+    pos_flat = jnp.take_along_axis(pos_flat, flat_e[:, None], axis=1)[:, 0]
+    keep_flat = pos_flat < capacity
+    tok = jnp.arange(T * top_k, dtype=jnp.int32) // top_k
+    # out-of-capacity writes fall outside (E,C) and are dropped
+    src_idx = jnp.zeros((E, capacity), jnp.int32).at[
+        flat_e, pos_flat].set(tok, mode="drop")
+    valid = jnp.zeros((E, capacity), bool).at[
+        flat_e, pos_flat].set(True, mode="drop")
+    return (weight, expert, pos_flat.reshape(T, top_k),
+            keep_flat.reshape(T, top_k), src_idx, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_dispatch_op(x, src_idx, valid, *, interpret: bool = False):
+    return _moe.moe_dispatch(x, src_idx, valid, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_combine_op(buf, expert, pos, weight, keep, *,
+                   interpret: bool = False):
+    return _moe.moe_combine(buf, expert, pos, weight, keep,
+                            interpret=interpret)
+
+
+def moe_ffn_pallas(x, router_w, w_gate, w_up, w_down, top_k: int,
+                   capacity: int, *, interpret: bool = False):
+    """End-to-end kernel-backed MoE FFN (route→dispatch→experts→combine)."""
+    weight, expert, pos, keep, src_idx, valid = route(
+        x @ router_w, top_k, capacity)
+    buf = moe_dispatch_op(x, src_idx, valid, interpret=interpret)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w_up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+    return moe_combine_op(out_buf, expert, pos, weight, keep,
+                          interpret=interpret)

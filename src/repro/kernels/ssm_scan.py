@@ -1,0 +1,97 @@
+"""Pallas TPU selective-scan kernel (Mamba recurrence).
+
+The recurrence h_t = exp(dt_t·A)·h_{t-1} + (dt_t·x_t)·B_t is sequential in
+time but embarrassingly parallel over (batch, channel): the kernel tiles
+``d_inner`` into VMEM-resident channel blocks and keeps the (block_d, N)
+state in VMEM scratch for the whole sequence, so HBM traffic is exactly one
+read of (x, dt, B, C) and one write of y — the memory-roofline optimum for
+this op.  The time loop is a ``fori_loop`` over VMEM (no HBM round-trips per
+step), which is the TPU-native adaptation of the CUDA selective-scan (whose
+shared-memory tiling plays the same role).
+
+Grid: (B, d_inner/block_d); the sequence stays whole inside the kernel
+(S·block_d elements of x in VMEM: with block_d=128, S=4096, bf16 that is
+1 MB — comfortably inside the ~16 MB VMEM budget alongside B/C/dt/y).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, h0_ref,
+                y_ref, hout_ref, h_scr, *, seq_len: int):
+    # blocks: x/dt (1, S, bd); A (bd, N); B/C (1, S, N); h (1, bd, N)
+    h_scr[...] = h0_ref[0].astype(jnp.float32)
+    A = A_ref[...].astype(jnp.float32)                   # (bd, N)
+
+    def step(t, _):
+        xt = x_ref[0, t, :].astype(jnp.float32)          # (bd,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)        # (bd,)
+        Bt = B_ref[0, t, :].astype(jnp.float32)          # (N,)
+        Ct = C_ref[0, t, :].astype(jnp.float32)          # (N,)
+        decay = jnp.exp(dtt[:, None] * A)                # (bd, N)
+        h = decay * h_scr[...] + (dtt * xt)[:, None] * Bt[None, :]
+        h_scr[...] = h
+        y_ref[0, t, :] = jnp.sum(h * Ct[None, :], axis=-1).astype(
+            y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    hout_ref[0] = h_scr[...]
+
+
+def ssm_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B_: jnp.ndarray, C_: jnp.ndarray,
+             h0: Optional[jnp.ndarray] = None, *, block_d: int = 128,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt (B,S,di); A (di,N); B_, C_ (B,S,N) -> (y (B,S,di), h (B,di,N))."""
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    block_d = min(block_d, di)
+    assert di % block_d == 0
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    grid = (Bsz, di // block_d)
+
+    def xdt_map(b, d):
+        return (b, 0, d)
+
+    def a_map(b, d):
+        return (d, 0)
+
+    def bc_map(b, d):
+        return (b, 0, 0)
+
+    def h_map(b, d):
+        return (b, d, 0)
+
+    kernel = functools.partial(_ssm_kernel, seq_len=S)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), xdt_map),
+            pl.BlockSpec((1, S, block_d), xdt_map),
+            pl.BlockSpec((block_d, N), a_map),
+            pl.BlockSpec((1, S, N), bc_map),
+            pl.BlockSpec((1, S, N), bc_map),
+            pl.BlockSpec((1, block_d, N), h_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_d), xdt_map),
+            pl.BlockSpec((1, block_d, N), h_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, di), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_, C_, h0)
+    return y, h

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train and serve CLIs.
+
+NOTE: importing `dryrun` sets XLA_FLAGS for 512 host devices — never import
+it from tests or benches; use `mesh`, `steps`, `sharding` directly.
+"""

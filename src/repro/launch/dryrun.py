@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell, lower + compile the step
+function on the production mesh — single-pod (16 data × 16 model = 256
+chips) and multi-pod (2 pods × 256 = 512 chips) — with ShapeDtypeStruct
+inputs (no allocation), then record:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits HBM);
+* ``cost_analysis()``    — HLO FLOPs / bytes for the §Roofline terms;
+* the collective schedule — parsed from the optimized HLO: operand bytes of
+  every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import registry
+from ..configs.base import ModelConfig
+from ..configs.shapes import ALL_SHAPES, ShapeSpec, shape_applicable
+from ..models import Model
+from ..models.common import shapes_tree
+from ..optim.optimizer import init_state
+from .mesh import make_production_mesh
+from .sharding import (batch_pspecs, cache_pspecs, param_pspecs,
+                       state_pspecs, to_named)
+from .steps import make_ctx, make_decode_step, make_prefill_step, \
+    make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no device allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.family == "vlm":
+        out["images"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), bf16)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+    return out
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Public entry: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = registry.get(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    return batch_specs(cfg, shape)
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    model = Model(cfg)
+    cache = shapes_tree(model.cache_layout(shape.global_batch, shape.seq_len))
+    return tokens, cache
+
+
+# ---------------------------------------------------------------------------
+# collective-byte extraction from optimized HLO
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output-shape bytes per collective op kind (per-device bytes)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(2), m.group(3)
+        b = _shape_bytes(shape_str)
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             lower_only: bool = False,
+             override_cfg: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    cfg = override_cfg or registry.get(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step, model = make_train_step(cfg, ctx=ctx)
+        state_shapes = jax.eval_shape(init_state, model.param_shapes())
+        sspec = state_pspecs(model, multi_pod=multi_pod)
+        bspec = batch_pspecs(cfg, shape, multi_pod=multi_pod)
+        args = (state_shapes, batch_specs(cfg, shape))
+        in_sh = (to_named(sspec, mesh), to_named(bspec, mesh))
+        out_sh = (to_named(sspec, mesh), None)
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    elif shape.kind == "prefill":
+        step, model = make_prefill_step(cfg, max_len=shape.seq_len, ctx=ctx)
+        pspec = param_pspecs(model, multi_pod=multi_pod,
+                             profile=cfg.inference_sharding)
+        bspec = batch_pspecs(cfg, shape, multi_pod=multi_pod)
+        cspec = cache_pspecs(model, shape.global_batch, shape.seq_len,
+                             multi_pod=multi_pod)
+        args = (model.param_shapes(), batch_specs(cfg, shape))
+        in_sh = (to_named(pspec, mesh), to_named(bspec, mesh))
+        out_sh = (None, to_named(cspec, mesh))
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+    else:  # decode
+        step, model = make_decode_step(cfg, ctx=ctx)
+        pspec = param_pspecs(model, multi_pod=multi_pod,
+                             profile=cfg.inference_sharding)
+        cspec = cache_pspecs(model, shape.global_batch, shape.seq_len,
+                             multi_pod=multi_pod)
+        tokens, cache_shapes = decode_batch_specs(cfg, shape)
+        args = (model.param_shapes(), cache_shapes, tokens)
+        in_sh = (to_named(pspec, mesh), to_named(cspec, mesh), None)
+        out_sh = (None, to_named(cspec, mesh))
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        result: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "lower_s": round(t_lower, 1),
+        }
+        if lower_only:
+            return result
+        compiled = lowered.compile()
+        t_total = time.time() - t0
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    result.update({
+        "compile_s": round(t_total - t_lower, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": collective_bytes(hlo),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            # two bounds on per-device HBM peak: XLA's buffer-assignment
+            # peak (accounts donation/aliasing but, on the CPU dry-run
+            # backend, under-counts while-body temps) and args+temp (an
+            # upper bound that double-counts reused temp slots).  True TPU
+            # peak lies between; both are reported in EXPERIMENTS.md.
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "peak_upper_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                                 + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    })
+    return result
+
+
+# ---------------------------------------------------------------------------
+# roofline cost extraction: two-point unrolled extrapolation
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis counts a while/scan body ONCE regardless of trip count
+# (verified empirically — see EXPERIMENTS.md §Perf iteration 0), so the
+# production scanned lowering cannot give total FLOPs.  Instead we lower the
+# step with layers UNROLLED at two reduced depths (flop_exact mode: quadratic
+# attention, one-shot SSM stand-in, unchunked CE — all trip-count-free HLO)
+# and extrapolate linearly in depth, which is exact because layers are
+# homogeneous within a family's repeating group.
+
+import dataclasses
+
+ROOFLINE_DEPTHS = {"vlm": (5, 10), "hybrid": (6, 12)}
+
+
+def run_roofline_cell(arch: str, shape_name: str, *,
+                      multi_pod: bool = False,
+                      override_cfg: Optional[ModelConfig] = None
+                      ) -> Dict[str, Any]:
+    cfg = override_cfg or registry.get(arch)
+    L1, L2 = ROOFLINE_DEPTHS.get(cfg.family, (2, 4))
+    L = cfg.n_layers
+    rs = []
+    for Lx in (L1, L2):
+        c = dataclasses.replace(cfg, n_layers=Lx, scan_layers=False,
+                                flop_exact=True, accum_steps=1)
+        r = run_cell(arch, shape_name, multi_pod=multi_pod, override_cfg=c)
+        if "error" in r or "skipped" in r:
+            return r
+        rs.append(r)
+    r1, r2 = rs
+
+    def lin(a, b):
+        return a + (b - a) * (L - L1) / (L2 - L1)
+
+    colls: Dict[str, Dict[str, float]] = {}
+    kinds = set(r1["collectives"]) | set(r2["collectives"])
+    for k in kinds:
+        c1 = r1["collectives"].get(k, {"count": 0, "bytes": 0})
+        c2 = r2["collectives"].get(k, {"count": 0, "bytes": 0})
+        colls[k] = {"count": round(lin(c1["count"], c2["count"]), 1),
+                    "bytes": lin(c1["bytes"], c2["bytes"])}
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "depths": [L1, L2], "extrapolated_layers": L,
+        "flops": lin(r1["flops"], r2["flops"]),
+        "bytes_accessed": lin(r1["bytes_accessed"], r2["bytes_accessed"]),
+        "collectives": colls,
+        "compile_s": r1["compile_s"] + r2["compile_s"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="two-point unrolled cost extraction instead of the "
+                         "production compile")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in registry.names():
+            for s in ALL_SHAPES:
+                cells.append((arch, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                if args.roofline:
+                    r = run_roofline_cell(arch, shape, multi_pod=mp)
+                else:
+                    r = run_cell(arch, shape, multi_pod=mp,
+                                 lower_only=args.lower_only)
+            except Exception as e:  # a failure here is a bug in the system
+                r = {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "error": f"{type(e).__name__}: {e}"}
+            results.append(r)
+            print(json.dumps(r))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

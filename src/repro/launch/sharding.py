@@ -1,0 +1,99 @@
+"""Sharding specs for params, train state, batches and caches.
+
+Conventions:
+* ``model`` axis — tensor parallel (attention heads / FFN hidden / experts /
+  vocab / d_inner);
+* ``data`` axis — data parallel over the batch; under the ``fsdp_tp``
+  profile weights are additionally sharded over ``data`` (FSDP) and gathered
+  per layer;
+* ``pod`` axis (multi-pod) — pure data parallel: batch sharded over
+  ``(pod, data)``, weights replicated across pods, gradient all-reduce
+  crosses pods (the BSP barrier at pod scale).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+from ..models import Model
+from ..models.common import PSpec, specs_tree
+from ..optim.optimizer import TrainState
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def param_pspecs(model: Model, *, multi_pod: bool = False,
+                 profile: Optional[str] = None) -> Any:
+    """PartitionSpec tree for model params (FSDP stays within a pod).
+
+    ``profile`` overrides the config's training profile (inference uses
+    ``cfg.inference_sharding`` to avoid per-token FSDP weight gathers)."""
+    return specs_tree(model.layout(), profile or model.cfg.sharding,
+                      data_axes=("data",))
+
+
+def state_pspecs(model: Model, *, multi_pod: bool = False) -> TrainState:
+    p = param_pspecs(model, multi_pod=multi_pod)
+    return TrainState(step=P(), params=p, master=p, m=p, v=p)
+
+
+def cache_pspecs(model: Model, batch: int, max_len: int, *,
+                 multi_pod: bool = False) -> Any:
+    """Decode-cache specs; for batch=1 (long-context) the batch dim cannot
+    shard, so attention caches shard their *sequence* dim over data instead
+    (flash-decode style)."""
+    layout = model.cache_layout(batch, max_len)
+    n_batch_shards = (32 if multi_pod else 16)
+
+    def conv(l: PSpec):
+        spec = list(l.spec)
+        if batch < n_batch_shards:
+            # batch too small to shard (long-context decode): move the data
+            # axis onto the KV-cache sequence dim (already model-sharded),
+            # drop it elsewhere
+            new = []
+            for i, s in enumerate(spec):
+                if s == ("data",) or s == "data":
+                    new.append(None)
+                elif s == "model" and len(l.shape) >= 4 and \
+                        i == len(spec) - 3 and l.shape[i] % (16 * 16) == 0:
+                    new.append(("data", "model"))
+                else:
+                    new.append(s)
+            spec = new
+        else:
+            spec = [("pod", "data") if (s == ("data",) or s == "data")
+                    and multi_pod else s for s in spec]
+        return P(*spec)
+
+    return jax.tree.map(conv, layout, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, *,
+                 multi_pod: bool = False) -> Dict[str, P]:
+    ba = batch_axes(multi_pod)
+    n = 32 if multi_pod else 16
+    bspec = ba if shape.global_batch % n == 0 else (
+        ("data",) if shape.global_batch % 16 == 0 else None)
+    out = {"tokens": P(bspec, None)}
+    if shape.kind == "train":
+        out["labels"] = P(bspec, None)
+    if cfg.family == "vlm":
+        out["images"] = P(bspec, None, None)
+    if cfg.family == "audio":
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def to_named(tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

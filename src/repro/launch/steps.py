@@ -1,0 +1,172 @@
+"""Step-function builders shared by the dry-run, trainer and server.
+
+``make_train_step`` builds the jit-able (state, batch) -> (state, metrics)
+function with gradient accumulation (``cfg.accum_steps`` microbatches via
+``lax.scan`` — compute/comm overlap comes for free: XLA overlaps the
+previous microbatch's reduce with the next microbatch's compute since the
+accumulation carries no data dependence between them).
+
+``make_prefill_step`` / ``make_decode_step`` build the serving steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from ..models.common import ShardCtx
+from ..optim.optimizer import (OptConfig, TrainState, apply_updates,
+                               init_state)
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def make_ctx(multi_pod: bool = False, enabled: bool = True) -> ShardCtx:
+    if not enabled:
+        return ShardCtx()
+    axes = {"data": 16, "model": 16}
+    if multi_pod:
+        axes["pod"] = 2
+    return ShardCtx(axes=axes)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+CE_CHUNK = 512
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head: jnp.ndarray,
+                          labels: jnp.ndarray, *, vocab: Optional[int] = None,
+                          chunk: int = CE_CHUNK) -> jnp.ndarray:
+    """Memory-efficient CE: apply the LM head per sequence chunk under remat
+    so the full (B,S,V) logits tensor is never materialized (peak extra
+    memory is one (B,chunk,V) f32 block).  ``vocab`` slices off padded
+    embedding columns before the softmax."""
+    B, S, D = x.shape
+    Vp = head.shape[-1]
+    vslice = vocab if (vocab is not None and vocab != Vp) else None
+    if S <= chunk or S % chunk:
+        logits = x @ head
+        if vslice:
+            logits = logits[..., :vslice]
+        return cross_entropy(logits, labels)
+    nb = S // chunk
+    xb = x.reshape(B, nb, chunk, D).transpose(1, 0, 2, 3)
+    lb = labels.reshape(B, nb, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(total, inp):
+        xc, lc = inp
+        logits = (xc @ head).astype(jnp.float32)
+        if vslice:
+            logits = logits[..., :vslice]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xb, lb))
+    return total / (B * S)
+
+
+def make_loss_fn(model: Model, ctx: ShardCtx) -> Callable:
+    def loss_fn(params, batch):
+        x, _, aux = model.forward_hidden(params, batch, ctx=ctx)
+        if model.cfg.flop_exact:  # roofline lowering: trip-count-free CE
+            logits = x @ model.head_matrix(params)
+            ce = cross_entropy(logits[..., :model.cfg.vocab_size],
+                               batch["labels"])
+        else:
+            ce = chunked_cross_entropy(x, model.head_matrix(params),
+                                       batch["labels"],
+                                       vocab=model.cfg.vocab_size)
+        return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, *, ctx: Optional[ShardCtx] = None,
+                    opt: Optional[OptConfig] = None
+                    ) -> Tuple[Callable, Model]:
+    model = Model(cfg)
+    ctx = ctx if ctx is not None else ShardCtx()
+    opt = opt or OptConfig()
+    loss_fn = make_loss_fn(model, ctx)
+    base_accum = max(1, cfg.accum_steps)
+    #: microbatches must stay shardable over the batch axes: cap accum so
+    #: each microbatch has >= one sequence per (pod×data) shard (a multi-pod
+    #: mesh halves the usable accumulation depth vs single-pod)
+    batch_shards = 1
+    for a in ("pod", "data"):
+        batch_shards *= ctx.axes.get(a, 1)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        B = batch["tokens"].shape[0]
+        accum = base_accum
+        while accum > 1 and (B % accum or (B // accum) % batch_shards):
+            accum //= 2
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(acc, (zeros, jnp.float32(0.0)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        new_state, opt_metrics = apply_updates(state, grads, opt)
+        out = {"loss": loss, **opt_metrics}
+        return new_state, out
+
+    return train_step, model
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: Optional[int] = None,
+                      ctx: Optional[ShardCtx] = None
+                      ) -> Tuple[Callable, Model]:
+    model = Model(cfg)
+    ctx = ctx if ctx is not None else ShardCtx()
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len, ctx=ctx)
+
+    return prefill_step, model
+
+
+def make_decode_step(cfg: ModelConfig, *, ctx: Optional[ShardCtx] = None
+                     ) -> Tuple[Callable, Model]:
+    model = Model(cfg)
+    ctx = ctx if ctx is not None else ShardCtx()
+
+    def decode_step(params, cache, tokens):
+        return model.decode(params, cache, tokens, ctx=ctx)
+
+    return decode_step, model
+
+
+def init_train_state(cfg: ModelConfig, rng) -> TrainState:
+    model = Model(cfg)
+    return init_state(model.init(rng))

@@ -1,0 +1,7 @@
+"""Model zoo: unified JAX implementation of the assigned architectures."""
+from .common import (DTYPE, NO_SHARD, PSpec, ShardCtx, init_tree, rms_norm,
+                     rope, shapes_tree, specs_tree, stack_layout)
+from .model import Model
+
+__all__ = ["DTYPE", "NO_SHARD", "PSpec", "ShardCtx", "init_tree", "rms_norm",
+           "rope", "shapes_tree", "specs_tree", "stack_layout", "Model"]

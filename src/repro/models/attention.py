@@ -1,0 +1,329 @@
+"""Attention blocks: GQA self-attention (causal / sliding-window / qk-norm),
+cross-attention (VLM image layers, enc-dec), and single-token decode against
+a KV cache.
+
+The reference path is pure jnp (the oracle used by tests and the dry-run);
+``repro.kernels.flash_attention`` / ``decode_attention`` provide the Pallas
+TPU kernels for the same math (validated against this path in interpret
+mode).  ``impl="pallas"`` switches the hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import (DTYPE, NO_SHARD, PSpec, ShardCtx, head_rms_norm, rope,
+                     softmax_f32)
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def attn_layout(cfg: ModelConfig, cross: bool = False) -> Dict[str, PSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    out = {
+        "wq": PSpec((d, nh * hd), ("fsdp", "model")),
+        "wk": PSpec((d, nkv * hd), ("fsdp", "model")),
+        "wv": PSpec((d, nkv * hd), ("fsdp", "model")),
+        "wo": PSpec((nh * hd, d), ("model", "fsdp")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = PSpec((hd,), (None,), init="ones")
+        out["k_norm"] = PSpec((hd,), (None,), init="ones")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mask construction
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, *, window: Optional[int] = None,
+                q_offset: Any = None) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask; True = attend.
+
+    q_offset: starting absolute position of the query block (scalar, may be a
+    traced int for decode); kv positions are 0..kv_len-1.
+    """
+    q_pos = jnp.arange(q_len)[:, None]
+    if q_offset is not None:
+        q_pos = q_pos + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# core attention math (reference path)
+# ---------------------------------------------------------------------------
+
+#: full-sequence attention switches to the blocked online-softmax form when
+#: S exceeds this (memory: O(S·block) instead of O(S²))
+FLASH_THRESHOLD = 1024
+FLASH_BLOCK = 512
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: Optional[jnp.ndarray],
+                  ctx: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k/v (B,Skv,Hkv,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(
+        jnp.asarray(hd, dtype=jnp.float32)).astype(q.dtype)
+    if mask is not None:
+        if mask.ndim == 3:      # per-sequence mask (B, Sq, Skv)
+            mb = mask[:, None, None, :, :]
+        else:                   # shared mask (Sq, Skv)
+            mb = mask[None, None, None, :, :]
+        scores = jnp.where(mb, scores, jnp.asarray(-1e9, dtype=scores.dtype))
+    probs = softmax_f32(scores).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def flash_attention_jnp(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window=None,
+                        block: int = FLASH_BLOCK) -> jnp.ndarray:
+    """Blocked online-softmax attention (pure jnp; O(S·block) memory).
+
+    Scans over KV blocks carrying running (max, denominator, accumulator) —
+    the same algorithm the Pallas ``flash_attention`` kernel implements with
+    VMEM tiles.  Masked blocks are still computed and masked (no block-sparse
+    skip at this layer; the TPU kernel skips them structurally).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    nb = -(-Skv // block)
+    pad = nb * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q.reshape(B, Sq, Hkv, group, hd).astype(jnp.float32)
+          / jnp.sqrt(jnp.float32(hd)))
+    kb = k.reshape(B, nb, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, start = inp
+        scores = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                            kc.astype(jnp.float32))
+        k_pos = start + jnp.arange(block)
+        valid = k_pos[None, :] < Skv
+        keep = valid
+        if causal:
+            keep = keep & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            keep = keep & (k_pos[None, :] > q_pos[:, None] - window)
+        scores = jnp.where(keep[None, :, None, None, :], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, hd), jnp.float32)
+    starts = jnp.arange(nb) * block
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_shard_mode(cfg: ModelConfig, ctx: ShardCtx) -> str:
+    """How full-sequence attention shards over the ``model`` axis.
+
+    "heads"        — q and kv head axes both divide: Megatron-style.
+    "heads_repeat" — q heads divide but kv heads don't (GQA, e.g. Hkv=8 on
+                     a 16-way axis): kv is REPLICATED over model and
+                     repeated to H heads locally, so every einsum carries a
+                     model-sharded head axis.  Without this, GSPMD emits
+                     ~GB-scale f32 all-gathers per layer trying to reshard
+                     the grouped (Hkv, G) einsum (observed: 60 GB/layer on
+                     qwen3-1.7b train).
+    "seq"          — q heads don't divide either (15/20/40-head archs):
+                     shard the query-sequence dim instead (any H works).
+    """
+    m = ctx.size("model")
+    if m <= 1 or cfg.n_heads % m == 0:
+        return "heads" if (m <= 1 or cfg.n_kv_heads % m == 0) \
+            else "heads_repeat"
+    return "seq"
+
+
+def heads_shardable(cfg: ModelConfig, ctx: ShardCtx) -> bool:
+    return attn_shard_mode(cfg, ctx) != "seq"
+
+
+def qkv_project(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                cfg: ModelConfig, ctx: ShardCtx,
+                kv_source: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B = x.shape[0]
+    hd = cfg.hd
+    kv_in = x if kv_source is None else kv_source
+    q = (x @ params["wq"]).reshape(B, x.shape[1], cfg.n_heads, hd)
+    k = (kv_in @ params["wk"]).reshape(B, kv_in.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_in @ params["wv"]).reshape(B, kv_in.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    mode = attn_shard_mode(cfg, ctx)
+    if mode == "heads":
+        q = ctx.constrain(q, ctx.batch_axes(), None, "model", None)
+        k = ctx.constrain(k, ctx.batch_axes(), None, "model", None)
+        v = ctx.constrain(v, ctx.batch_axes(), None, "model", None)
+    elif mode == "heads_repeat":
+        q = ctx.constrain(q, ctx.batch_axes(), None, "model", None)
+        k = ctx.constrain(k, ctx.batch_axes(), None, None, None)
+        v = ctx.constrain(v, ctx.batch_axes(), None, None, None)
+    else:
+        # head count does not divide the model axis (smollm 15H, qwen3-14b
+        # 40H, whisper 20H): without an annotation GSPMD REPLICATES the
+        # attention einsums over the model axis (observed 8-15x per-device
+        # FLOP inflation).  Shard the query-sequence dim over `model`
+        # instead — k/v are replicated (small); any H shards.
+        q = ctx.constrain(q, ctx.batch_axes(), "model", None, None)
+        k = ctx.constrain(k, ctx.batch_axes(), None, None, None)
+        v = ctx.constrain(v, ctx.batch_axes(), None, None, None)
+    return q, k, v
+
+
+def _expand_kv(q, k, v, cfg: ModelConfig, ctx: ShardCtx):
+    """heads_repeat mode: repeat kv to H heads so every attention einsum
+    carries a model-shardable head axis (local op — no collectives)."""
+    if attn_shard_mode(cfg, ctx) != "heads_repeat":
+        return k, v
+    g = q.shape[2] // k.shape[2]
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    k = ctx.constrain(k, ctx.batch_axes(), None, "model", None)
+    v = ctx.constrain(v, ctx.batch_axes(), None, "model", None)
+    return k, v
+
+
+def self_attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                   cfg: ModelConfig, *, window: Optional[int] = None,
+                   positions: Optional[jnp.ndarray] = None,
+                   causal: bool = True,
+                   ctx: ShardCtx = NO_SHARD
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence self attention (train / prefill).
+
+    Returns (output (B,S,D), kv = {"k","v"} for cache population).
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_project(params, x, cfg, ctx)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if attn_shard_mode(cfg, ctx) == "seq":
+        q = ctx.constrain(q, ctx.batch_axes(), "model", None, None)
+    kv_cache = {"k": k, "v": v}      # cache keeps the compact Hkv layout
+    ka, va = _expand_kv(q, k, v, cfg, ctx)
+    if cfg.flop_exact:
+        # roofline cost-extraction path: one-shot quadratic attention whose
+        # HLO op count is trip-count-free (same FLOPs as the blocked form)
+        mask = causal_mask(S, S, window=window) if causal else None
+        out = gqa_attention(q, ka, va, mask, ctx)
+    elif S > FLASH_THRESHOLD:
+        out = flash_attention_jnp(q, ka, va, causal=causal, window=window)
+    else:
+        mask = causal_mask(S, S, window=window) if causal else None
+        out = gqa_attention(q, ka, va, mask, ctx)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    y = out @ params["wo"]
+    return y, kv_cache
+
+
+def cross_attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                    memory: jnp.ndarray, cfg: ModelConfig, *,
+                    ctx: ShardCtx = NO_SHARD
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Cross attention from x (B,S,D) over memory (B,M,D); no RoPE/causal."""
+    B, S, _ = x.shape
+    q, k, v = qkv_project(params, x, cfg, ctx, kv_source=memory)
+    kv_cache = {"k": k, "v": v}
+    ka, va = _expand_kv(q, k, v, cfg, ctx)
+    if memory.shape[1] > FLASH_THRESHOLD and not cfg.flop_exact:
+        out = flash_attention_jnp(q, ka, va, causal=False)
+    else:
+        out = gqa_attention(q, ka, va, None, ctx)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ params["wo"], kv_cache
+
+
+def decode_self_attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                          cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                          cur_len: jnp.ndarray, cfg: ModelConfig, *,
+                          window: Optional[int] = None,
+                          ctx: ShardCtx = NO_SHARD
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode: x (B,1,D); cache (B,Smax,Hkv,hd); cur_len (B,) —
+    per-sequence lengths (continuous batching: slots decode at different
+    positions).
+
+    Writes each row's new k/v at its own position and attends over positions
+    < cur_len[b]+1 (respecting an optional sliding window).
+    Returns (y (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    Smax = cache_k.shape[1]
+    q, k, v = qkv_project(params, x, cfg, ctx)
+    lengths = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    pos = lengths[:, None]
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    rows = jnp.arange(B)
+    cache_k = cache_k.at[rows, lengths].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, lengths].set(v[:, 0].astype(cache_v.dtype))
+    k_pos = jnp.arange(Smax)[None, :]
+    mask = k_pos <= lengths[:, None]
+    if window is not None:
+        mask = mask & (k_pos > lengths[:, None] - window)
+    out = gqa_attention(q, cache_k, cache_v, mask[:, None, :], ctx)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return out @ params["wo"], cache_k, cache_v
+
+
+def decode_cross_attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                           mem_k: jnp.ndarray, mem_v: jnp.ndarray,
+                           cfg: ModelConfig, *, ctx: ShardCtx = NO_SHARD
+                           ) -> jnp.ndarray:
+    """Decode-time cross attention over precomputed memory KV (B,M,Hkv,hd)."""
+    B = x.shape[0]
+    hd = cfg.hd
+    q = (x @ params["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+    out = gqa_attention(q, mem_k, mem_v, None, ctx)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return out @ params["wo"]
+
+
+def layer_window(cfg: ModelConfig, layer_idx: int) -> Optional[int]:
+    """Sliding-window width for a layer (None = global attention).
+
+    h2o-danube mix: every ``swa_global_every``-th layer is global; the rest
+    use the sliding window.
+    """
+    if cfg.sliding_window is None:
+        return None
+    if (layer_idx + 1) % cfg.swa_global_every == 0:
+        return None
+    return cfg.sliding_window

@@ -1,0 +1,195 @@
+"""Shared model utilities: norms, RoPE, initializers, sharding context.
+
+Compute dtype is bf16; normalization statistics and softmax accumulate in
+f32.  ``ShardCtx`` threads mesh-axis knowledge through the model code so the
+same functions trace (a) unsharded on CPU smoke tests and (b) with
+``with_sharding_constraint`` annotations under the production mesh — the
+constraints are applied only when the named axes exist and divide the dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-axis sizes available at trace time (empty = no constraints)."""
+    axes: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.axes)
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.axes)
+
+    def size(self, names) -> int:
+        if names is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        s = 1
+        for n in names:
+            s *= self.axes.get(n, 1)
+        return s
+
+    def constrain(self, x: jnp.ndarray, *dim_axes) -> jnp.ndarray:
+        """Apply a sharding constraint; each element of ``dim_axes`` is None,
+        an axis name, or a tuple of axis names for that dimension.  Skipped
+        entirely when no mesh context / non-divisible dims."""
+        if not self.enabled:
+            return x
+        spec = []
+        for d, names in zip(x.shape, dim_axes):
+            if names is None:
+                spec.append(None)
+                continue
+            size = self.size(names)
+            if size > 1 and d % size == 0:
+                spec.append(names)
+            else:
+                spec.append(None)
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except Exception:
+            return x  # outside a mesh context (e.g. eval_shape on CPU)
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """qk-norm: RMS over the head dim of (..., heads, hd)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding over (..., S, H, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) *
+                    jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_f32(scores: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# parameter layout: single source of truth for shape/init/sharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter's shape, initializer and TP partition spec.
+
+    ``spec`` uses axis names "model" (tensor parallel) and the placeholder
+    "fsdp" which the launcher rewrites to the data axis for ``fsdp_tp``
+    profiles or drops for ``tp`` profiles.
+    """
+    shape: Tuple[int, ...]
+    spec: Tuple[Any, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    dtype: Any = DTYPE
+
+
+def init_leaf(key, p: PSpec, stddev_scale: float = 1.0) -> jnp.ndarray:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    scale = 0.02 * stddev_scale if p.init != "embed" else 0.02
+    return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(p.dtype)
+
+
+def init_tree(key, layout: Any) -> Any:
+    """Initialize a pytree of PSpec leaves with split keys."""
+    leaves, treedef = jax.tree.flatten(
+        layout, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, l) for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shapes_tree(layout: Any) -> Any:
+    """ShapeDtypeStructs for a PSpec layout (no allocation — dry-run path)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), layout,
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def specs_tree(layout: Any, profile: str, data_axes=("data",)) -> Any:
+    """PartitionSpec pytree for a layout under a sharding profile.
+
+    "fsdp" placeholders become the data axis tuple under ``fsdp_tp`` and
+    None under plain ``tp``.
+    """
+    def conv(l: PSpec):
+        out = []
+        for s in l.spec:
+            if s == "fsdp":
+                out.append(tuple(data_axes) if profile == "fsdp_tp" else None)
+            else:
+                out.append(s)
+        return P(*out)
+
+    return jax.tree.map(conv, layout, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def scan_or_loop(body, carry, xs, *, unroll: bool, remat: bool):
+    """``lax.scan`` (production) or a Python loop over the leading axis
+    (roofline cost-extraction mode — XLA cost_analysis counts scan bodies
+    once, so exact totals need unrolled HLO).  Same (carry, ys) contract."""
+    fn = jax.checkpoint(body) if remat else body
+    if not unroll:
+        return jax.lax.scan(fn, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys_list = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, x_i)
+        ys_list.append(y)
+    if ys_list and ys_list[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_list)
+    else:
+        ys = None
+    return carry, ys
+
+
+def stack_layout(layout: Any, n: int) -> Any:
+    """Prepend a stacking (layer) axis of size n to every PSpec."""
+    return jax.tree.map(
+        lambda l: PSpec((n,) + l.shape, (None,) + tuple(l.spec), l.init,
+                        l.dtype),
+        layout, is_leaf=lambda x: isinstance(x, PSpec))

@@ -1,0 +1,201 @@
+"""Feed-forward blocks: SwiGLU dense MLP and top-k routed MoE.
+
+The MoE dispatch is the SPMD incarnation of the paper's **dynamic port
+mapping** (§II.A): the router key (expert id) hashes each token to exactly
+one of E "reducer" buffers, implemented with static-shaped capacity buffers
+so XLA can shard experts over the ``model`` axis (expert parallelism); the
+token→expert scatter/gather lowers to ``all_to_all`` style collectives on a
+real mesh.  The pure-jnp dispatch here doubles as the oracle for the
+``repro.kernels.moe_dispatch`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .common import DTYPE, NO_SHARD, PSpec, ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def mlp_layout(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PSpec((d, f), ("fsdp", "model")),
+        "w_up": PSpec((d, f), ("fsdp", "model")),
+        "w_down": PSpec((f, d), ("model", "fsdp")),
+    }
+
+
+def swiglu(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+           ctx: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = ctx.constrain(h, ctx.batch_axes(), None, "model")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+def moe_layout(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, m = cfg.d_model, cfg.moe
+    return {
+        "router": PSpec((d, m.n_experts), (None, None)),
+        "w_gate": PSpec((m.n_experts, d, m.d_expert), ("model", "fsdp", None)),
+        "w_up": PSpec((m.n_experts, d, m.d_expert), ("model", "fsdp", None)),
+        "w_down": PSpec((m.n_experts, m.d_expert, d), ("model", None, "fsdp")),
+    }
+
+
+def capacity(n_tokens: int, m: MoEConfig) -> int:
+    c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+def route_topk(router_logits: jnp.ndarray, top_k: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T,E) -> (weights (T,k), experts (T,k)); weights renormalized."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+    return vals, idx
+
+
+def dispatch_indices(experts: jnp.ndarray, n_experts: int, cap: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute per-assignment slot positions within expert buffers.
+
+    experts: (A,) int32 flat expert assignments (A = T*k).
+    Returns (pos (A,), keep (A,) bool): pos = slot index within the expert's
+    capacity buffer (first-come-first-served in token order, like the paper's
+    hash split preserving per-source FIFO); keep=False for overflow drops.
+    """
+    onehot = jax.nn.one_hot(experts, n_experts, dtype=jnp.int32)  # (A,E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                      # (A,E)
+    pos = jnp.take_along_axis(pos_in_e, experts[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    return pos, keep
+
+
+def moe_ffn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+            cfg: ModelConfig, ctx: ShardCtx = NO_SHARD
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (T, D) -> ((T, D), aux_loss) with top-k routing (capacity-bounded)."""
+    m = cfg.moe
+    T, D = x.shape
+    cap = capacity(T, m)
+    router_logits = x @ params["router"]
+    weights, experts = route_topk(router_logits, m.top_k)         # (T,k)
+    flat_e = experts.reshape(-1)                                  # (A,)
+    pos, keep = dispatch_indices(flat_e, m.n_experts, cap)
+    # scatter tokens into expert buffers (E, C, D) — the "shuffle"
+    x_rep = jnp.repeat(x, m.top_k, axis=0)                        # (A, D)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((m.n_experts, cap, D), dtype=x.dtype)
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], x_rep, 0), mode="drop")
+    buf = ctx.constrain(buf, "model", None, None)
+    # batched expert SwiGLU: (E,C,D) x (E,D,F)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = ctx.constrain(out_buf, "model", None, None)
+    # gather back + weighted combine
+    y_rep = out_buf[flat_e, safe_pos]                             # (A, D)
+    y_rep = jnp.where(keep[:, None], y_rep, 0)
+    w = weights.reshape(-1)[:, None].astype(y_rep.dtype)
+    y = jnp.sum((y_rep * w).reshape(T, m.top_k, D), axis=1)
+    return y, moe_aux_loss(router_logits, experts, m)
+
+
+def moe_aux_loss(router_logits: jnp.ndarray, experts: jnp.ndarray,
+                 m: MoEConfig) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    assign = jax.nn.one_hot(experts[:, 0], m.n_experts)           # top-1 share
+    ce = jnp.mean(assign, axis=0)
+    return m.n_experts * jnp.sum(me * ce)
+
+
+def moe_ffn_grouped(params: Dict[str, jnp.ndarray], xg: jnp.ndarray,
+                    cfg: ModelConfig, ctx: ShardCtx = NO_SHARD
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-wise MoE: xg (G, T, D) -> ((G, T, D), aux).
+
+    Each group = one data shard's tokens; dispatch/combine stay LOCAL to
+    the group (GShard semantics: capacity per shard), so the expert einsum
+    shards over both mesh axes — (G→data, E→model).  Without grouping the
+    capacity buffers carry the GLOBAL token count and the data axis idles
+    through the expert compute (measured 16× per-device FLOP inflation on
+    the MoE trains — see EXPERIMENTS.md §Perf iteration 2).
+    """
+    m = cfg.moe
+    G, T, D = xg.shape
+    cap = capacity(T, m)
+    ba = ctx.batch_axes()
+    router_logits = jnp.einsum("gtd,de->gte", xg, params["router"])
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, m.top_k)          # (G,T,k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    A = T * m.top_k
+    flat_e = experts.reshape(G, A)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos_e = jnp.cumsum(onehot, axis=1) - 1                    # (G,A,E)
+    pos = jnp.take_along_axis(pos_e, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    x_rep = jnp.repeat(xg, m.top_k, axis=1)                   # (G,A,D)
+    x_rep = jnp.where(keep[..., None], x_rep, 0)
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, A))
+    buf = jnp.zeros((G, m.n_experts, cap, D), dtype=xg.dtype)
+    safe_pos = jnp.where(keep, pos, cap)                      # cap -> dropped
+    buf = buf.at[g_idx, flat_e, safe_pos].add(x_rep, mode="drop")
+    # keep the scatter LOCAL to each data shard (expert dim unsharded),
+    # THEN redistribute to expert parallelism — this is the all_to_all of
+    # the paper's dynamic port mapping.  Scattering directly into
+    # model-sharded buffers makes GSPMD replicate+all-reduce the whole
+    # buffer per layer (measured 750 s collective term on moonshot train —
+    # §Perf iteration 7).
+    buf = ctx.constrain(buf, ba, None, None, None)
+    buf = ctx.constrain(buf, ba, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = ctx.constrain(h, ba, "model", None, None)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    out_buf = ctx.constrain(out_buf, ba, "model", None, None)
+    # redistribute back before the token gather (combine side of the
+    # shuffle), so the gather is local to each data shard
+    out_buf = ctx.constrain(out_buf, ba, None, None, None)
+    safe_gather = jnp.where(keep, pos, cap - 1)
+    y_rep = out_buf[g_idx, flat_e, safe_gather]               # (G,A,D)
+    y_rep = jnp.where(keep[..., None], y_rep, 0)
+    w = weights.reshape(G, A)[..., None].astype(y_rep.dtype)
+    y = jnp.sum((y_rep * w).reshape(G, T, m.top_k, D), axis=2)
+    # load-balance aux (mean over groups)
+    me = jnp.mean(probs, axis=1)                              # (G,E)
+    ce = jnp.mean(jax.nn.one_hot(experts[..., 0], m.n_experts), axis=1)
+    aux = m.n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return y, aux
+
+
+def ffn(params: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
+        ctx: ShardCtx = NO_SHARD) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch to dense or MoE FFN on (B,S,D); returns (y, aux_loss)."""
+    if cfg.moe is None:
+        return swiglu(params, x, ctx), jnp.float32(0.0)
+    B, S, D = x.shape
+    G = ctx.size(ctx.batch_axes()) if ctx.enabled else 1
+    if G > 1 and B % G == 0:
+        y, aux = moe_ffn_grouped(params, x.reshape(G, (B // G) * S, D),
+                                 cfg, ctx)
+        return y.reshape(B, S, D), aux
+    y, aux = moe_ffn(params, x.reshape(B * S, D), cfg, ctx)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,303 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2 backbone).
+
+The selective scan is implemented as a chunked recurrence: an outer
+``lax.scan`` over sequence chunks carries the (B, d_inner, N) state in f32;
+the inner per-chunk recurrence is a short ``lax.scan`` that remat recomputes
+on the backward pass.  The SSM state *is* the pellet state object of the
+paper's stateful-pellet model — it is exactly what the checkpointer persists
+and what decode carries between steps.
+
+``repro.kernels.ssm_scan`` provides the Pallas TPU kernel for the same
+recurrence (VMEM-resident state, chunk-parallel over channels); this module
+is its oracle.
+
+Both Mamba versions share one scan core: Mamba-2's per-head scalar decay is
+broadcast to per-channel (d_inner, N) form.  Projections are kept unfused
+(separate x/z/B/C/dt matmuls) so each shards cleanly over the ``model`` axis
+without segment-crossing reshards; this deviates from the fused in_proj of
+the reference CUDA implementations and is recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .common import DTYPE, NO_SHARD, PSpec, ShardCtx, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# selective scan core (shared by Mamba-1/2)
+# ---------------------------------------------------------------------------
+
+def selective_scan_flopmock(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                            B_: jnp.ndarray, C_: jnp.ndarray,
+                            h0: Optional[jnp.ndarray] = None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Roofline cost-extraction stand-in for the selective scan.
+
+    Computes a NON-recurrent expression with the same per-element op
+    structure as one scan step over the whole (B,S,di,N) volume (exp, two
+    multiplies, add, and the C contraction), so XLA's cost_analysis counts
+    the true FLOP/byte volume without a while loop.  Numerically it is NOT
+    the scan — never use outside the roofline lowering."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None, None])
+    contrib = (dtf * xf)[..., None] * B_.astype(jnp.float32)[:, :, None, :]
+    h_seq = decay * (contrib + (h0[:, None] if h0 is not None else 0.0))
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, C_.astype(jnp.float32))
+    return y.astype(x.dtype), h_seq[:, -1]
+
+
+def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B_: jnp.ndarray, C_: jnp.ndarray, *, chunk: int,
+                   h0: Optional[jnp.ndarray] = None,
+                   flop_exact: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Diagonal selective scan.
+
+    x, dt: (B, S, di); A: (di, N); B_, C_: (B, S, N).
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t ;  y_t = h_t · C_t
+    Returns (y (B,S,di), h_final (B,di,N) f32).
+    """
+    if flop_exact:
+        return selective_scan_flopmock(x, dt, A, B_, C_, h0)
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 gives decay=1 and zero input contribution,
+        # so the final state is unaffected; padded outputs are sliced off.
+        padw = ((0, 0), (0, pad), (0, 0))
+        x, dt = jnp.pad(x, padw), jnp.pad(dt, padw)
+        B_, C_ = jnp.pad(B_, padw), jnp.pad(C_, padw)
+    Sp = S + pad
+    nc = Sp // chunk
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, di)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, di)
+    Bf = B_.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cf = C_.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+
+    # remat per chunk: the backward pass stores only one (B,di,N) carry per
+    # chunk and recomputes the inner steps — without this, linearizing the
+    # inner scan would stack per-STEP residuals (S× the state size)
+    @jax.checkpoint
+    def chunk_body(h, inputs):
+        xc, dtc, Bc, Cc = inputs  # (B, chunk, ...)
+
+        def step(h, t_in):
+            xt, dtt, Bt, Ct = t_in  # (B,di),(B,di),(B,N),(B,N)
+            decay = jnp.exp(dtt[..., None] * Af[None])        # (B,di,N)
+            h = decay * h + (dtt * xt)[..., None] * Bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, Ct)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h,
+            (xc.transpose(1, 0, 2), dtc.transpose(1, 0, 2),
+             Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2)))
+        return h, ys.transpose(1, 0, 2)  # (B, chunk, di)
+
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2, 3),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, Sp, di)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def selective_step(h: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                   A: jnp.ndarray, B_: jnp.ndarray, C_: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x,dt (B,di); B_,C_ (B,N); h (B,di,N) f32."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    h = decay * h + (dtf * xf)[..., None] * B_.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_.astype(jnp.float32))
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                ) -> jnp.ndarray:
+    """x (B,S,C), w (C,K), b (C): left-padded depthwise convolution."""
+    K = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + x.shape[1], :] * w[:, j][None, None, :]
+            for j in range(K))
+    return y + b[None, None, :]
+
+
+def conv_step(state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode conv: state (B,K-1,C) holds the trailing inputs.
+
+    Returns (new_state, y_t (B,C))."""
+    full = jnp.concatenate([state, x_t[:, None, :]], axis=1)   # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", full, w) + b[None]
+    return full[:, 1:, :], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba1_layout(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, s = cfg.d_model, cfg.ssm
+    di, N = s.d_inner(d), s.d_state
+    r = s.dt_rank_for(d)
+    return {
+        "in_x": PSpec((d, di), ("fsdp", "model")),
+        "in_z": PSpec((d, di), ("fsdp", "model")),
+        "conv_w": PSpec((di, s.d_conv), ("model", None)),
+        "conv_b": PSpec((di,), ("model",), init="zeros"),
+        "x_dt": PSpec((di, r), ("model", None)),
+        "x_B": PSpec((di, N), ("model", None)),
+        "x_C": PSpec((di, N), ("model", None)),
+        "dt_w": PSpec((r, di), (None, "model")),
+        "dt_b": PSpec((di,), ("model",), init="zeros"),
+        "A_log": PSpec((di, N), ("model", None), init="ones"),
+        "D": PSpec((di,), ("model",), init="ones"),
+        "out": PSpec((di, d), ("model", "fsdp")),
+    }
+
+
+def mamba1_forward(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                   cfg: ModelConfig, *, ctx: ShardCtx = NO_SHARD,
+                   h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence Mamba-1. Returns (y (B,S,D), cache {conv_state, h})."""
+    s = cfg.ssm
+    xi = x @ p["in_x"]
+    z = x @ p["in_z"]
+    xi = ctx.constrain(xi, ctx.batch_axes(), None, "model")
+    xc = jax.nn.silu(causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt_raw = xc @ p["x_dt"]
+    B_ = xc @ p["x_B"]
+    C_ = xc @ p["x_C"]
+    dt = jax.nn.softplus(dt_raw @ p["dt_w"] + p["dt_b"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = selective_scan(xc, dt, A, B_, C_, chunk=s.chunk, h0=h0,
+                          flop_exact=cfg.flop_exact)
+    y = y + xc * p["D"][None, None, :]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out"]
+    conv_state = xi[:, -(s.d_conv - 1):, :]
+    return out, {"conv": conv_state, "h": h}
+
+
+def mamba1_decode(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                  cache: Dict[str, jnp.ndarray], cfg: ModelConfig, *,
+                  ctx: ShardCtx = NO_SHARD
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token Mamba-1. x (B,1,D); cache {conv (B,K-1,di), h (B,di,N)}."""
+    s = cfg.ssm
+    xt = (x[:, 0, :] @ p["in_x"])
+    zt = (x[:, 0, :] @ p["in_z"])
+    conv_state, xct = conv_step(cache["conv"], xt, p["conv_w"], p["conv_b"])
+    xct = jax.nn.silu(xct)
+    dt_raw = xct @ p["x_dt"]
+    B_ = xct @ p["x_B"]
+    C_ = xct @ p["x_C"]
+    dt = jax.nn.softplus(dt_raw @ p["dt_w"] + p["dt_b"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h, y = selective_step(cache["h"], xct, dt, A, B_, C_)
+    y = y + xct * p["D"][None, :]
+    y = y * jax.nn.silu(zt)
+    return (y @ p["out"])[:, None, :], {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+def mamba2_layout(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, s = cfg.d_model, cfg.ssm
+    di, N = s.d_inner(d), s.d_state
+    nh = di // s.head_dim
+    return {
+        "in_x": PSpec((d, di), ("fsdp", "model")),
+        "in_z": PSpec((d, di), ("fsdp", "model")),
+        "in_B": PSpec((d, N), ("fsdp", None)),
+        "in_C": PSpec((d, N), ("fsdp", None)),
+        "in_dt": PSpec((d, nh), ("fsdp", None)),
+        "conv_w": PSpec((di, s.d_conv), ("model", None)),
+        "conv_b": PSpec((di,), ("model",), init="zeros"),
+        "convBC_w": PSpec((2 * N, s.d_conv), (None, None)),
+        "convBC_b": PSpec((2 * N,), (None,), init="zeros"),
+        "dt_b": PSpec((nh,), (None,), init="zeros"),
+        "A_log": PSpec((nh,), (None,), init="ones"),
+        "D": PSpec((nh,), (None,), init="ones"),
+        "gate_norm": PSpec((di,), ("model",), init="ones"),
+        "out": PSpec((di, d), ("model", "fsdp")),
+    }
+
+
+def _mamba2_expand(p, cfg: ModelConfig):
+    """Broadcast per-head A/dt/D to per-channel (d_inner) form."""
+    s = cfg.ssm
+    hd = s.head_dim
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (nh,)
+    A_c = jnp.repeat(A, hd)[:, None] * jnp.ones(
+        (1, s.d_state), jnp.float32)                     # (di, N)
+    return A_c, hd
+
+
+def mamba2_forward(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                   cfg: ModelConfig, *, ctx: ShardCtx = NO_SHARD,
+                   h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    s = cfg.ssm
+    xi = x @ p["in_x"]
+    z = x @ p["in_z"]
+    BC = jnp.concatenate([x @ p["in_B"], x @ p["in_C"]], axis=-1)
+    dt_h = jax.nn.softplus(x @ p["in_dt"] + p["dt_b"])   # (B,S,nh)
+    xi = ctx.constrain(xi, ctx.batch_axes(), None, "model")
+    xc = jax.nn.silu(causal_conv(xi, p["conv_w"], p["conv_b"]))
+    BCc = jax.nn.silu(causal_conv(BC, p["convBC_w"], p["convBC_b"]))
+    B_, C_ = jnp.split(BCc, 2, axis=-1)
+    A_c, hd = _mamba2_expand(p, cfg)
+    dt = jnp.repeat(dt_h, hd, axis=-1)                   # (B,S,di)
+    y, h = selective_scan(xc, dt, A_c, B_, C_, chunk=s.chunk, h0=h0,
+                          flop_exact=cfg.flop_exact)
+    y = y + xc * jnp.repeat(p["D"], hd)[None, None, :]
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out"]
+    cache = {"conv": xi[:, -(s.d_conv - 1):, :],
+             "convBC": BC[:, -(s.d_conv - 1):, :],
+             "h": h}
+    return out, cache
+
+
+def mamba2_decode(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                  cache: Dict[str, jnp.ndarray], cfg: ModelConfig, *,
+                  ctx: ShardCtx = NO_SHARD
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    s = cfg.ssm
+    xt = x[:, 0, :] @ p["in_x"]
+    zt = x[:, 0, :] @ p["in_z"]
+    BCt = jnp.concatenate([x[:, 0, :] @ p["in_B"], x[:, 0, :] @ p["in_C"]],
+                          axis=-1)
+    dt_h = jax.nn.softplus(x[:, 0, :] @ p["in_dt"] + p["dt_b"])
+    conv_state, xct = conv_step(cache["conv"], xt, p["conv_w"], p["conv_b"])
+    convBC_state, BCc = conv_step(cache["convBC"], BCt, p["convBC_w"],
+                                  p["convBC_b"])
+    xct = jax.nn.silu(xct)
+    BCc = jax.nn.silu(BCc)
+    B_, C_ = jnp.split(BCc, 2, axis=-1)
+    A_c, hd = _mamba2_expand(p, cfg)
+    dt = jnp.repeat(dt_h, hd, axis=-1)
+    h, y = selective_step(cache["h"], xct, dt, A_c, B_, C_)
+    y = y + xct * jnp.repeat(p["D"], hd)[None, :]
+    y = rms_norm(y * jax.nn.silu(zt), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out"])[:, None, :]
+    return out, {"conv": conv_state, "convBC": convBC_state, "h": h}

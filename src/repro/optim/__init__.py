@@ -1,0 +1,10 @@
+from .optimizer import (OptConfig, TrainState, apply_updates,
+                        clip_by_global_norm, global_norm, init_state,
+                        lr_schedule)
+from .grad_compress import (compress_tree_fused, dequantize_int8,
+                            quantize_int8, zeros_error_like)
+
+__all__ = ["OptConfig", "TrainState", "apply_updates", "clip_by_global_norm",
+           "global_norm", "init_state", "lr_schedule",
+           "compress_tree_fused", "dequantize_int8", "quantize_int8",
+           "zeros_error_like"]

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (cross-pod all-reduce trick).
+
+At multi-pod scale the pod-crossing gradient all-reduce rides the slowest
+links.  int8 quantization with per-tensor scales cuts those bytes 4× vs f32
+(2× vs bf16); the residual (quantization error) is fed back into the next
+step's gradient so the compression is unbiased over time (EF-SGD).
+
+Used by ``launch/train.py --grad-compress`` which performs the cross-pod
+reduction explicitly under ``shard_map``: within-pod reduce-scatter in full
+precision, pod-axis all-reduce on the int8 payload, then dequantize.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Quantize grads+error; returns (q_tree, scale_tree, new_error_tree)."""
+    def one(g, e):
+        corrected = g + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return q, s, corrected - deq
+
+    qs = jax.tree.map(lambda g, e: one(g, e)[0], grads, error)
+    ss = jax.tree.map(lambda g, e: one(g, e)[1], grads, error)
+    es = jax.tree.map(lambda g, e: one(g, e)[2], grads, error)
+    return qs, ss, es
+
+
+def compress_tree_fused(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Same as compress_tree but one pass (no re-tracing per output)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    qs, ss, es = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        corrected = g + e
+        q, s = quantize_int8(corrected)
+        qs.append(q)
+        ss.append(s)
+        es.append(corrected - dequantize_int8(q, s))
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, ss),
+            jax.tree.unflatten(treedef, es))
+
+
+def zeros_error_like(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

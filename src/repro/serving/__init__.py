@@ -1,0 +1,3 @@
+from .engine import Request, Response, ServingEngine
+
+__all__ = ["Request", "Response", "ServingEngine"]

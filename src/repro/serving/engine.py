@@ -1,0 +1,233 @@
+"""Continuous serving engine: the paper's always-on dataflow, for inference.
+
+The engine is a Floe application: a request stream flows through a
+prefill pellet into a continuously-batched decode pellet.  Mechanics:
+
+* **slots** — a fixed decode batch of ``n_slots`` sequences; per-slot
+  lengths (the model's decode step handles ragged positions natively);
+* **continuous batching** — finished sequences free their slot between
+  decode steps; waiting requests are prefilled and spliced into the cache;
+* **adaptive scaling** — a §III Strategy watches the request queue
+  (arrival rate vs decode throughput) and drives replica counts through
+  ``adaptation.elastic`` (resize at step boundaries only);
+* **live model update** (§II.B) — ``update_params`` swaps weights between
+  steps: *sync* drains in-flight decodes, swaps, and tags subsequent
+  responses with the new version (the "update landmark"); *async* swaps
+  immediately (in-flight steps finish on the old weights — zero downtime).
+
+This engine runs on whatever mesh the step functions were jitted for; on
+CPU tests it is exercised with reduced configs and a 1-device mesh.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from ..models.common import ShardCtx
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    submitted: float = dataclasses.field(default_factory=time.time)
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    tokens: List[int]
+    model_version: int
+    latency: float
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 n_slots: int = 4, max_len: int = 128,
+                 ctx: Optional[ShardCtx] = None,
+                 greedy: bool = True):
+        if cfg.family in ("vlm", "audio"):
+            raise NotImplementedError(
+                "serving engine currently drives LM-shaped archs; "
+                "vlm/audio run through launch.serve batch mode")
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.version = 0
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ctx = ctx or ShardCtx()
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len=max_len,
+                                            ctx=self.ctx))
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode(p, c, t, ctx=self.ctx))
+        # slot state
+        self.cache = None                        # batched cache (n_slots)
+        self.slot_rid = [-1] * n_slots
+        self.slot_out: List[List[int]] = [[] for _ in range(n_slots)]
+        self.slot_budget = [0] * n_slots
+        self.slot_version = [0] * n_slots
+        self.queue: collections.deque = collections.deque()
+        self.responses: List[Response] = []
+        self._rid = 0
+        self._lock = threading.RLock()
+        self._t0: Dict[int, float] = {}
+        # monitoring for the adaptation strategies
+        self.arrived = 0
+        self.decoded_tokens = 0
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+            self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                      max_new_tokens))
+            self._t0[rid] = time.time()
+            self.arrived += 1
+            return rid
+
+    # -- live model update (§II.B) --------------------------------------------
+    def update_params(self, new_params: Any, *, mode: str = "sync") -> int:
+        """Swap model weights without stopping the serving loop.
+
+        sync: performed between steps (the engine loop is single-threaded
+        per replica, so 'drain' means: applied at the next step boundary,
+        and every response started after the swap carries the new version).
+        async: identical mechanics here, but in a multi-replica deployment
+        the coordinator staggers per-replica swaps so old/new outputs
+        interleave — zero downtime (per-slot versions record which).
+        """
+        with self._lock:
+            self.params = new_params
+            self.version += 1
+            if mode == "sync":
+                # update landmark: subsequent tokens are new-version
+                for i in range(self.n_slots):
+                    if self.slot_rid[i] >= 0:
+                        self.slot_version[i] = self.version
+            return self.version
+
+    # -- engine step -----------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_rid[slot] >= 0 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = req.prompt[: self.max_len - req.max_new_tokens - 1]
+            tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+            last, cache = self._prefill(self.params, {"tokens": tokens})
+            next_tok = int(jnp.argmax(last[0, -1]))
+            self._splice(slot, cache)
+            self.slot_rid[slot] = req.rid
+            self.slot_out[slot] = [next_tok]
+            self.slot_budget[slot] = req.max_new_tokens - 1
+            self.slot_version[slot] = self.version
+
+    def _splice(self, slot: int, cache1: Any) -> None:
+        """Copy a 1-sequence prefilled cache into slot ``slot``."""
+        if self.cache is None:
+            self.cache = self.model.cache_layout(self.n_slots, self.max_len)
+            from ..models.common import shapes_tree
+            self.cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                shapes_tree(self.cache))
+
+        def put(full, one):
+            # batch dim: first dim whose size == n_slots beyond layer dims
+            return _splice_batched(full, one, slot, self.n_slots)
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+
+    def step(self) -> int:
+        """One engine iteration: admit + one decode for all active slots.
+
+        Returns the number of live slots decoded."""
+        with self._lock:
+            self._admit()
+            live = [i for i in range(self.n_slots) if self.slot_rid[i] >= 0]
+            if not live:
+                return 0
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for i in live:
+                toks[i, 0] = self.slot_out[i][-1]
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            for i in live:
+                self.slot_out[i].append(int(nxt[i]))
+                self.slot_budget[i] -= 1
+                self.decoded_tokens += 1
+                if self.slot_budget[i] <= 0:
+                    rid = self.slot_rid[i]
+                    self.responses.append(Response(
+                        rid=rid, tokens=self.slot_out[i],
+                        model_version=self.slot_version[i],
+                        latency=time.time() - self._t0.pop(rid, time.time())))
+                    self.slot_rid[i] = -1
+                    self.slot_out[i] = []
+            return len(live)
+
+    def run(self, *, until_idle: bool = True, max_steps: int = 10_000) -> int:
+        steps = 0
+        while steps < max_steps:
+            n = self.step()
+            steps += 1
+            if until_idle and n == 0 and not self.queue:
+                break
+        return steps
+
+    # -- monitoring (for §III strategies) ---------------------------------------
+    def observation(self, strategy_dt: float, t: float):
+        from ..adaptation.strategies import Observation
+        with self._lock:
+            arrived, self.arrived = self.arrived, 0
+            decoded, self.decoded_tokens = self.decoded_tokens, 0
+            q = len(self.queue)
+        rate = arrived / max(strategy_dt, 1e-9)
+        thr = decoded / max(strategy_dt, 1e-9)
+        lat = 1.0 / max(thr, 1e-9) if decoded else 0.05
+        return Observation(t=t, queue_length=q, input_rate=rate,
+                           service_latency=lat, cores=max(1, self.n_slots // 4))
+
+
+def _splice_batched(full: jnp.ndarray, one: jnp.ndarray, slot: int,
+                    n_slots: int) -> jnp.ndarray:
+    """Write a batch-1 cache leaf into row ``slot`` of the batched leaf.
+
+    Handles leading layer/group dims of arbitrary depth: the batch dim is
+    the first axis where ``full`` has n_slots and ``one`` has 1; KV leaves
+    additionally need sequence padding (prefill length <= max_len)."""
+    if full.ndim == 0 or one.ndim == 0:
+        return full
+    axis = None
+    for ax in range(full.ndim):
+        if full.shape[ax] == n_slots and (one.ndim > ax and
+                                          one.shape[ax] == 1):
+            axis = ax
+            break
+    if axis is None:   # e.g. "len" vector (n_slots,) vs (1,)
+        if full.ndim == 1 and one.ndim == 1 and one.shape[0] == 1:
+            return full.at[slot].set(one[0])
+        return full
+    # pad remaining dims (sequence capacity) up to the full shape
+    pads = []
+    for ax in range(one.ndim):
+        target = 1 if ax == axis else full.shape[ax]
+        pads.append((0, target - one.shape[ax]))
+    one = jnp.pad(one, pads)
+    idx = tuple(slice(None) if ax != axis else slot
+                for ax in range(full.ndim))
+    return full.at[idx].set(one[tuple(
+        slice(None) if ax != axis else 0 for ax in range(one.ndim))])

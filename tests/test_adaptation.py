@@ -1,0 +1,260 @@
+"""Adaptation strategies (paper §III) + Fig. 4 simulation reproduction."""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.adaptation import (ALPHA, AdaptationController, DynamicAdaptation,
+                              HybridAdaptation, Observation, PelletHints,
+                              StaticLookahead, divisor_floor,
+                              static_allocation)
+from repro.adaptation.simulator import (DURATION, EPSILON, PERIOD,
+                                        run_i1_experiment)
+
+
+# ---------------------------------------------------------------------------
+# unit: the closed-form static look-ahead (§III)
+# ---------------------------------------------------------------------------
+
+def test_static_formula_paper_example():
+    """l=1.0s, m=3000 msgs over t=60s, eps=20 -> P=37.5 -> C=10 cores."""
+    s = StaticLookahead(latency=1.0, expected_window_messages=3000,
+                        window_duration=60.0, epsilon=20.0)
+    assert s.cores == 10
+    assert s.decide(Observation(0, 0, 0.0, 1.0, 0)) == 10  # never adapts
+
+
+def test_static_allocation_cascades_selectivity():
+    hints = [PelletHints(latency=1.0, selectivity=2.0),
+             PelletHints(latency=0.5, selectivity=1.0),
+             PelletHints(latency=1.0, selectivity=1.0)]
+    cores = static_allocation(hints, m1=800, window_duration=60, epsilon=20)
+    # m = [800, 1600, 1600]; P = [10, 10, 20]; C = [3, 3, 5]
+    assert cores == [3, 3, 5]
+
+
+# ---------------------------------------------------------------------------
+# unit: Algorithm 1 dynamics
+# ---------------------------------------------------------------------------
+
+def obs(rate, queue=0, cores=1, latency=1.0, t=0.0):
+    return Observation(t=t, queue_length=queue, input_rate=rate,
+                       service_latency=latency, cores=cores)
+
+
+def test_dynamic_scales_up_under_load():
+    d = DynamicAdaptation()
+    assert d.decide(obs(rate=50.0, cores=1)) > 1
+
+
+def test_dynamic_holds_at_capacity():
+    d = DynamicAdaptation()
+    # 2 cores * 4 inst / 1s = 8 msgs/s capacity; rate 7.5 inside the band
+    assert d.decide(obs(rate=7.5, cores=2)) == 2
+
+
+def test_dynamic_hysteresis_no_flap():
+    """Scale-down only if the reduced allocation still sustains demand."""
+    d = DynamicAdaptation(threshold=0.1)
+    # 3 cores = 12/s; demand 7.5; 2 cores = 8/s; 7.5 > 8*0.9 -> hold
+    assert d.decide(obs(rate=7.5, cores=3)) == 3
+    # demand 5.0 < 8*0.9 -> release one core
+    assert d.decide(obs(rate=5.0, cores=3)) == 2
+
+
+def test_dynamic_quiesces_to_zero():
+    d = DynamicAdaptation()
+    assert d.decide(obs(rate=0.0, queue=0, cores=3)) == 0
+
+
+def test_dynamic_drains_backlog():
+    d = DynamicAdaptation(drain_horizon=30.0)
+    # idle input but 300 queued -> demand 10/s -> needs >0 cores
+    assert d.decide(obs(rate=0.0, queue=300, cores=0)) >= 1
+
+
+def test_dynamic_respects_max_cores():
+    d = DynamicAdaptation(max_cores=8)
+    c = 1
+    for _ in range(20):
+        c = d.decide(obs(rate=1e6, cores=c))
+    assert c == 8
+
+
+# ---------------------------------------------------------------------------
+# unit: hybrid switching (§III, built here — paper future work)
+# ---------------------------------------------------------------------------
+
+def make_hybrid(hint=50.0):
+    return HybridAdaptation(
+        StaticLookahead(1.0, hint * 60, 60, 20),
+        DynamicAdaptation(),
+        hinted_rate=lambda t: hint,
+        veer_threshold=0.5, latency_slo=20.0)
+
+
+def test_hybrid_stays_static_near_hint():
+    h = make_hybrid()
+    c = h.decide(obs(rate=50.0, cores=10))
+    assert h.mode == "static" and c == h.static.cores
+
+
+def test_hybrid_switches_on_veer_and_back():
+    h = make_hybrid()
+    h.decide(obs(rate=50.0, cores=10, t=0.0))
+    assert h.mode == "static"
+    h.decide(obs(rate=200.0, cores=10, t=5.0))     # veered >50%
+    assert h.mode == "dynamic"
+    h.decide(obs(rate=52.0, queue=0, cores=12, t=10.0))  # stabilized
+    assert h.mode == "static"
+    assert [m for _, m in h.switches] == ["dynamic", "static"]
+
+
+def test_hybrid_switches_on_backlog():
+    """Even without a rate veer, a building backlog (predicted latency
+    violation) flips hybrid to dynamic."""
+    h = make_hybrid()
+    h.decide(obs(rate=50.0, queue=10000, cores=10, t=0.0))
+    assert h.mode == "dynamic"
+
+
+def test_hybrid_quiesces_idle():
+    h = make_hybrid()
+    assert h.decide(obs(rate=0.0, queue=0, cores=10)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 reproduction (simulation, as in the paper §IV.C)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fig4():
+    return {k: run_i1_experiment(k, horizon=3600.0)
+            for k in ("periodic", "spiky", "random")}
+
+
+def test_fig4_periodic_static_drains_at_75s(fig4):
+    """Paper: static meets the 80s threshold, draining at ~75s."""
+    drains = fig4["periodic"]["static"].drain_times("I1", PERIOD, DURATION)
+    assert all(70.0 <= d <= 80.0 for d in drains)
+    assert fig4["periodic"]["static"].violations("I1", PERIOD, DURATION,
+                                                 EPSILON) == 0
+
+
+def test_fig4_periodic_dynamic_finishes_earlier_with_more_peak(fig4):
+    """Paper: dynamic finishes earlier (~70s vs 75s) at the cost of extra
+    resources in that duration (larger peak allocation)."""
+    st, dy = fig4["periodic"]["static"], fig4["periodic"]["dynamic"]
+    st_d = st.drain_times("I1", PERIOD, DURATION)
+    dy_d = dy.drain_times("I1", PERIOD, DURATION)
+    assert np.mean(dy_d) < np.mean(st_d)
+    assert max(dy.cores["I1"]) > max(st.cores["I1"])
+
+
+def test_fig4_periodic_hybrid_like_static_but_quiesces(fig4):
+    hy = fig4["periodic"]["hybrid"]
+    assert hy.violations("I1", PERIOD, DURATION, EPSILON) == 0
+    assert min(hy.cores["I1"]) == 0          # quiesces to 0 between windows
+    # cheaper than the always-on static allocation overall
+    assert hy.core_seconds("I1") < fig4["periodic"]["static"].core_seconds("I1")
+
+
+def test_fig4_spiky_static_misses_dynamic_meets(fig4):
+    """Paper: static misses the latency tolerance on data surges; dynamic
+    processes all messages within tolerance; hybrid does too with fewer
+    resources than dynamic."""
+    st = fig4["spiky"]["static"]
+    dy = fig4["spiky"]["dynamic"]
+    hy = fig4["spiky"]["hybrid"]
+    assert st.violations("I1", PERIOD, DURATION, EPSILON) > 0
+    assert dy.violations("I1", PERIOD, DURATION, EPSILON) == 0
+    assert hy.violations("I1", PERIOD, DURATION, EPSILON) == 0
+    assert hy.core_seconds("I1") < dy.core_seconds("I1")
+    assert max(dy.cores["I1"]) > max(st.cores["I1"])
+
+
+def test_fig4_random_static_queue_accumulates(fig4):
+    """Paper: static's queue (hence queueing latency) accumulates over time;
+    dynamic and hybrid keep pending messages negligible."""
+    st = fig4["random"]["static"]
+    dy = fig4["random"]["dynamic"]
+    hy = fig4["random"]["hybrid"]
+    assert st.final_queue("I1") > 5000            # unbounded growth
+    assert dy.max_queue("I1") < 1000              # negligible backlog
+    assert hy.max_queue("I1") < 2000
+    assert hy.final_queue("I1") < 2000
+
+
+def test_fig4_random_resource_ratio_near_paper(fig4):
+    """Paper: cumulative resources static:dynamic:hybrid = 0.87:1.00:0.98."""
+    s = fig4["random"]["static"].core_seconds("I1")
+    d = fig4["random"]["dynamic"].core_seconds("I1")
+    h = fig4["random"]["hybrid"].core_seconds("I1")
+    assert 0.75 <= s / d <= 0.95, f"static:dynamic = {s/d:.2f}, paper 0.87"
+    assert 0.90 <= h / d <= 1.0, f"hybrid:dynamic = {h/d:.2f}, paper 0.98"
+
+
+# ---------------------------------------------------------------------------
+# live controller against a real running graph
+# ---------------------------------------------------------------------------
+
+def test_live_controller_scales_real_flake():
+    from repro.core import Coordinator, FloeGraph, FnPellet
+
+    def work(x):
+        time.sleep(0.02)
+        return x
+
+    g = FloeGraph("live")
+    g.add("p", lambda: FnPellet(work), cores=1)
+    coord = Coordinator(g).start()
+    ctrl = AdaptationController(
+        coord, {"p": DynamicAdaptation(max_cores=8, drain_horizon=1.0)},
+        sample_interval=0.2).start()
+    try:
+        t_end = time.time() + 2.0
+        while time.time() < t_end:      # offered load >> 1-core capacity
+            coord.inject("p", 1)
+            time.sleep(0.002)
+        assert coord.flakes["p"].cores > 1     # controller scaled up
+        assert coord.run_until_quiescent(timeout=60)
+        # after the backlog drains and input stops, it scales back down
+        for _ in range(30):
+            ctrl.step_once()
+        assert coord.flakes["p"].cores == 0    # quiesced
+        processed = coord.flakes["p"].stats.processed
+        assert processed == coord.flakes["p"].stats.arrived
+    finally:
+        ctrl.stop()
+        coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# elastic mesh planning (SPMD layer)
+# ---------------------------------------------------------------------------
+
+def test_divisor_floor():
+    assert divisor_floor(16, 5) == 4
+    assert divisor_floor(16, 16) == 16
+    assert divisor_floor(16, 1) == 1
+    assert divisor_floor(12, 7) == 6
+
+
+def test_elastic_mesh_manager_plans():
+    from repro.adaptation import ElasticMeshManager
+    m = ElasticMeshManager(devices=list(range(16)), model_parallel=4)
+    assert m.max_replicas == 4
+    plan = m.plan(3)   # 3 not a divisor of 4 -> rounds down to 2
+    assert plan.shape == (2, 4) and plan.n_devices == 8
+    assert m.plan(100).shape == (4, 4)
+
+
+def test_elastic_scaler_logs_decisions():
+    from repro.adaptation import ElasticMeshManager, ElasticServingScaler
+    m = ElasticMeshManager(devices=list(range(8)), model_parallel=1)
+    sc = ElasticServingScaler(m, DynamicAdaptation(max_cores=8))
+    assert sc.current_replicas == 8
+    changed = sc.observe(obs(rate=0.5, cores=8, latency=1.0))
+    assert changed and sc.current_replicas < 8
+    assert sc.log[-1].reason == "resize"

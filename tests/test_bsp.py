@@ -1,0 +1,92 @@
+"""BSP pattern tests (paper §II.A, Fig. 1 P10): supersteps, gating, halting."""
+import pytest
+
+from repro.core import Coordinator, FloeGraph, FnPellet, add_bsp, start_bsp
+
+
+def run_bsp(n_workers, logic, init_states=None, seeds=None, max_supersteps=50):
+    g = FloeGraph("bsp")
+    g.add("sink", lambda: FnPellet(lambda x: x))
+    workers, mgr = add_bsp(g, prefix="bsp", n_workers=n_workers, logic=logic,
+                           init_states=init_states,
+                           max_supersteps=max_supersteps, sink="sink")
+    coord = Coordinator(g).start()
+    try:
+        start_bsp(coord, workers, seeds=seeds)
+        assert coord.run_until_quiescent(timeout=60)
+        assert not coord.errors, coord.errors
+        states = [coord.flakes[w].state["user"] for w in workers]
+        results = [m.payload for m in coord.drain_outputs() if m.is_data()]
+        return states, results
+    finally:
+        coord.stop()
+
+
+def test_bsp_fixed_supersteps():
+    """Each worker increments a counter for 5 supersteps, then halts."""
+    def logic(wid, step, state, inbox):
+        state = (state or 0) + 1
+        return state, [], state >= 5
+
+    states, results = run_bsp(3, logic)
+    assert states == [5, 5, 5]
+    assert results and results[0]["supersteps"] == 5
+    assert results[0]["halted"] is True
+
+
+def test_bsp_superstep_barrier_visibility():
+    """Messages sent in superstep k are visible only in superstep k+1."""
+    n = 3
+    trace = {i: [] for i in range(n)}
+
+    def logic(wid, step, state, inbox):
+        trace[wid].append((step, sorted(inbox)))
+        # everyone sends its id to everyone (incl. self) for 3 steps
+        out = [(dst, (step, wid)) for dst in range(n)] if step < 3 else []
+        return state, out, step >= 3
+
+    run_bsp(n, logic)
+    for wid in range(n):
+        steps = dict(trace[wid])
+        assert steps[0] == []                            # nothing yet
+        for k in (1, 2, 3):
+            # inbox at step k = messages emitted at step k-1 by all workers
+            assert steps[k] == sorted((k - 1, w) for w in range(n))
+
+
+def test_bsp_max_iterations_global_max():
+    """Distributed max: workers exchange values until fixpoint (runtime-
+    decided superstep count, the paper's BSP requirement)."""
+    init = [3, 9, 4, 7]
+    n = len(init)
+
+    def logic(wid, step, state, inbox):
+        cur = state
+        new = max([cur] + [v for v in inbox])
+        changed = (new != cur) or step == 0
+        out = [(dst, new) for dst in range(n) if dst != wid] if changed else []
+        return new, out, not changed
+
+    states, results = run_bsp(n, logic, init_states=init)
+    assert states == [9, 9, 9, 9]
+    assert results[0]["halted"] is True
+    assert results[0]["supersteps"] <= 6
+
+
+def test_bsp_seeded_inbox():
+    """start_bsp seeds worker inboxes as superstep-0 data."""
+    def logic(wid, step, state, inbox):
+        total = (state or 0) + sum(inbox)
+        return total, [], True  # single superstep
+
+    states, _ = run_bsp(2, logic, seeds={0: [10, 20], 1: [5]})
+    assert states == [30, 5]
+
+
+def test_bsp_runaway_capped():
+    def logic(wid, step, state, inbox):
+        return state, [(0, "ping")], False  # never halts
+
+    _, results = run_bsp(2, logic, max_supersteps=7)
+    assert results and results[0]["supersteps"] == 7
+    assert results[0]["halted"] is False

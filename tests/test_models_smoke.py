@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+Each assigned architecture instantiates a topology-preserving reduced config
+and runs one forward + one train step, asserting output shapes and no NaNs;
+plus a prefill→decode consistency check against the full forward (exact for
+deterministic families; loose for MoE where capacity dropping depends on
+batch composition).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL, registry
+from repro.configs.shapes import ALL_SHAPES, shape_applicable
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import init_state
+
+ARCHS = [c.name for c in ALL]
+
+
+def make_batch(cfg, B, S, key=0, train=True):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if train:
+        batch["labels"] = jax.random.randint(
+            jax.random.PRNGKey(key + 1), (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, cfg.n_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, S, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = registry.get(arch).scaled_down()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    logits, cache, aux = m.forward(params, make_batch(cfg, B, S, train=False))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = registry.get(arch).scaled_down()
+    step, model = make_train_step(cfg)
+    state = init_state(model.init(jax.random.PRNGKey(0)))
+    batch = make_batch(cfg, 4, 16)
+    state, metrics = jax.jit(step)(state, batch)
+    assert int(state.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(state.params)[0]
+    assert np.all(np.isfinite(np.asarray(l0, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = registry.get(arch).scaled_down()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S, train=False)
+    logits, _, _ = m.forward(params, batch)
+    bp = dict(batch)
+    bp["tokens"] = batch["tokens"][:, :-1]
+    _, cache = m.prefill(params, bp, max_len=S + 4)
+    lg, cache = m.decode(params, cache, batch["tokens"][:, -1:])
+    ref = np.asarray(logits[:, -1, :], np.float32)
+    got = np.asarray(lg[:, 0, :], np.float32)
+    rel = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+    # MoE: token dropping depends on batch composition (capacity is per
+    # forward call), so prefill(S-1) and forward(S) legitimately route a few
+    # tokens differently — only a loose bound is meaningful there
+    tol = 0.25 if cfg.moe is not None else 0.02
+    assert rel < tol, f"{arch}: decode/forward mismatch rel={rel:.4f}"
+    assert np.all(np.asarray(cache["len"]) == S)  # per-sequence lengths
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gradient_accumulation_matches_single_batch(arch):
+    """accum_steps microbatching must match the full-batch gradient step."""
+    cfg = registry.get(arch).scaled_down()
+    cfg1 = dataclasses.replace(cfg, accum_steps=1)
+    cfg2 = dataclasses.replace(cfg, accum_steps=2)
+    step1, m1 = make_train_step(cfg1)
+    step2, m2 = make_train_step(cfg2)
+    params = m1.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 8)
+    s1, met1 = jax.jit(step1)(init_state(params), batch)
+    s2, met2 = jax.jit(step2)(init_state(params), batch)
+    # MoE capacity depends on per-call token count -> exact match only for
+    # non-MoE families; MoE checked loosely
+    l1 = np.asarray(jax.tree.leaves(s1.master)[0], np.float32)
+    l2 = np.asarray(jax.tree.leaves(s2.master)[0], np.float32)
+    tol = 5e-2 if cfg.moe is not None else 5e-3
+    assert np.max(np.abs(l1 - l2)) < tol
+
+
+def test_scan_vs_unrolled_layers_agree():
+    """scan_layers=False (roofline unrolled mode) is numerically identical."""
+    cfg = registry.get("qwen3-1.7b").scaled_down()
+    m_scan = Model(cfg)
+    m_loop = Model(dataclasses.replace(cfg, scan_layers=False))
+    params = m_scan.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 8, train=False)
+    a, _, _ = m_scan.forward(params, batch)
+    b, _, _ = m_loop.forward(params, batch)
+    # bf16: scan vs unrolled fuse/reassociate differently -> one-ulp noise
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=8e-3)
+
+
+def test_param_count_estimates_match_actual():
+    """Analytic param counts (used for MODEL_FLOPS) track actual trees."""
+    for arch in ARCHS:
+        cfg = registry.get(arch)
+        m = Model(cfg)
+        shapes = jax.tree.leaves(m.param_shapes())
+        actual = sum(int(np.prod(s.shape)) for s in shapes)
+        est = cfg.param_count_estimate()
+        assert abs(actual - est) / actual < 0.06, \
+            f"{arch}: actual={actual:.3e} est={est:.3e}"
+
+
+def test_full_param_counts_sane():
+    """Full (unreduced) configs land near their nameplate sizes."""
+    expect = {
+        "smollm-360m": (0.3e9, 0.45e9),
+        "qwen3-1.7b": (1.4e9, 2.1e9),
+        "h2o-danube-3-4b": (3.0e9, 4.5e9),
+        "qwen3-14b": (13e9, 16e9),
+        "llama-3.2-vision-90b": (80e9, 95e9),
+        "falcon-mamba-7b": (6.5e9, 8e9),
+        "zamba2-2.7b": (2.2e9, 3.2e9),
+        "dbrx-132b": (125e9, 140e9),
+        "moonshot-v1-16b-a3b": (24e9, 30e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        m = Model(registry.get(arch))
+        actual = sum(int(np.prod(s.shape))
+                     for s in jax.tree.leaves(m.param_shapes()))
+        assert lo <= actual <= hi, f"{arch}: {actual:.3e} not in [{lo:.0e},{hi:.0e}]"
+
+
+def test_cell_applicability_table():
+    """40 assigned cells: long_500k runs only for SSM/hybrid families."""
+    run, skipped = 0, []
+    for cfg in ALL:
+        for sh in ALL_SHAPES:
+            ok, why = shape_applicable(cfg, sh)
+            if ok:
+                run += 1
+            else:
+                skipped.append((cfg.name, sh.name))
+    assert run + len(skipped) == 40
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "smollm-360m", "qwen3-1.7b", "h2o-danube-3-4b", "qwen3-14b",
+        "llama-3.2-vision-90b", "dbrx-132b", "moonshot-v1-16b-a3b",
+        "whisper-large-v3"}

@@ -1,0 +1,258 @@
+"""Behaviour tests for the Fig. 1 pattern catalogue (P1–P8)."""
+import time
+
+import pytest
+
+from repro.core import (Coordinator, Drop, FloeGraph, FnPellet, KeyedEmit,
+                        Message, PullPellet, PushPellet, TuplePellet,
+                        WindowPellet, stable_hash)
+from repro.core.patterns import (BalancedSplit, DirectSplit, DuplicateSplit,
+                                 HashSplit, RoundRobinSplit)
+
+
+def run_graph(graph, inputs, entry, *, landmark_after=False, timeout=30):
+    coord = Coordinator(graph).start()
+    try:
+        for payload in inputs:
+            coord.inject(entry, payload)
+        if landmark_after:
+            coord.inject_landmark(entry)
+        assert coord.run_until_quiescent(timeout=timeout), "engine did not quiesce"
+        assert not coord.errors, f"pellet errors: {coord.errors}"
+        return [m.payload for m in coord.drain_outputs() if m.is_data()]
+    finally:
+        coord.stop()
+
+
+# -- P1: push pellet, one compute per message ---------------------------------
+def test_push_pellet_p1():
+    g = FloeGraph("p1")
+    g.add("double", lambda: FnPellet(lambda x: 2 * x))
+    out = run_graph(g, [1, 2, 3], "double")
+    assert sorted(out) == [2, 4, 6]
+
+
+# -- P2: pull pellet with stream iterator and state ----------------------------
+def test_pull_pellet_p2_running_sum():
+    class RunningSum(PullPellet):
+        def initial_state(self):
+            return 0
+
+        def compute(self, messages, emit, state):
+            for m in messages:
+                if m.is_data():
+                    state += m.payload
+                    emit(state)
+            return state
+
+    g = FloeGraph("p2")
+    g.add("sum", RunningSum)
+    out = run_graph(g, [1, 2, 3, 4], "sum")
+    assert out == [1, 3, 6, 10]  # sequential => ordered
+
+
+# -- P3: count window -----------------------------------------------------------
+def test_window_pellet_p3():
+    class SumWindow(WindowPellet):
+        window = 3
+
+        def compute(self, payloads):
+            return sum(payloads)
+
+    g = FloeGraph("p3")
+    g.add("w", SumWindow)
+    out = run_graph(g, [1, 2, 3, 4, 5, 6], "w")
+    assert sorted(out) == [6, 15]
+
+
+def test_window_flush_on_landmark():
+    class SumWindow(WindowPellet):
+        window = 10  # bigger than input: only the landmark flushes
+
+        def compute(self, payloads):
+            return sum(payloads)
+
+    g = FloeGraph("p3b")
+    g.add("w", SumWindow)
+    out = run_graph(g, [1, 2, 3], "w", landmark_after=True)
+    assert out == [6]
+
+
+# -- P4: cycles / iteration -------------------------------------------------------
+def test_cycle_for_loop_p4():
+    class CountDown(PushPellet):
+        out_ports = ("loop", "done")
+
+        def compute(self, n):
+            if n > 0:
+                return {"loop": n - 1}
+            return {"done": "finished"}
+
+    g = FloeGraph("p4")
+    g.add("cd", CountDown)
+    g.connect("cd", "cd", src_port="loop", dst_port="in")
+    out = run_graph(g, [5], "cd")
+    assert out == ["finished"]
+
+
+# -- P5: synchronous merge (tuple alignment) ---------------------------------------
+def test_sync_merge_p5():
+    class Join(TuplePellet):
+        in_ports = ("a", "b")
+
+        def compute(self, inputs):
+            return inputs["a"] + inputs["b"]
+
+    g = FloeGraph("p5")
+    # sequential sources: sync merge aligns by arrival order, so in-order
+    # delivery is required for a deterministic alignment (paper §II.A)
+    g.add("sa", lambda: FnPellet(lambda x: x, sequential=True))
+    g.add("sb", lambda: FnPellet(lambda x: x * 10, sequential=True))
+    g.add("join", Join)
+    g.connect("sa", "join", dst_port="a")
+    g.connect("sb", "join", dst_port="b")
+    coord = Coordinator(g).start()
+    try:
+        for i in range(4):
+            coord.inject("sa", i)
+            coord.inject("sb", i)
+        assert coord.run_until_quiescent(timeout=30)
+        out = sorted(m.payload for m in coord.drain_outputs())
+        assert out == [0, 11, 22, 33]
+    finally:
+        coord.stop()
+
+
+# -- P6: interleaved merge -----------------------------------------------------------
+def test_interleaved_merge_p6():
+    g = FloeGraph("p6")
+    g.add("s1", lambda: FnPellet(lambda x: x))
+    g.add("s2", lambda: FnPellet(lambda x: x))
+    g.add("sink", lambda: FnPellet(lambda x: x))
+    g.connect("s1", "sink")
+    g.connect("s2", "sink")
+    coord = Coordinator(g).start()
+    try:
+        for i in range(3):
+            coord.inject("s1", ("a", i))
+            coord.inject("s2", ("b", i))
+        assert coord.run_until_quiescent(timeout=30)
+        out = coord.drain_outputs()
+        assert len(out) == 6
+        assert {p[0] for p in (m.payload for m in out)} == {"a", "b"}
+    finally:
+        coord.stop()
+
+
+# -- P7: duplicate split ----------------------------------------------------------------
+def test_duplicate_split_p7():
+    g = FloeGraph("p7")
+    g.add("src", lambda: FnPellet(lambda x: x))
+    g.add("l", lambda: FnPellet(lambda x: ("l", x)))
+    g.add("r", lambda: FnPellet(lambda x: ("r", x)))
+    g.connect("src", "l", split="duplicate")
+    g.connect("src", "r", split="duplicate")
+    out = run_graph(g, [1, 2], "src")
+    assert sorted(out) == [("l", 1), ("l", 2), ("r", 1), ("r", 2)]
+
+
+# -- P8: round-robin split ---------------------------------------------------------------
+def test_round_robin_split_p8():
+    g = FloeGraph("p8")
+    g.add("src", lambda: FnPellet(lambda x: x, sequential=True))
+    g.add("l", lambda: FnPellet(lambda x: ("l", x)))
+    g.add("r", lambda: FnPellet(lambda x: ("r", x)))
+    g.connect("src", "l", split="round_robin")
+    g.connect("src", "r", split="round_robin")
+    out = run_graph(g, list(range(4)), "src")
+    by_sink = {"l": [], "r": []}
+    for sink, x in out:
+        by_sink[sink].append(x)
+    assert len(by_sink["l"]) == 2 and len(by_sink["r"]) == 2
+
+
+# -- control flow: switch via multi-port + Drop ---------------------------------------------
+def test_switch_control_flow():
+    class Switch(PushPellet):
+        out_ports = ("even", "odd")
+
+        def compute(self, x):
+            return {"even": x} if x % 2 == 0 else {"odd": x}
+
+    g = FloeGraph("switch")
+    g.add("sw", Switch)
+    g.add("se", lambda: FnPellet(lambda x: ("even", x)))
+    g.add("so", lambda: FnPellet(lambda x: ("odd", x)))
+    g.connect("sw", "se", src_port="even")
+    g.connect("sw", "so", src_port="odd")
+    out = run_graph(g, [0, 1, 2, 3], "sw")
+    assert sorted(out) == [("even", 0), ("even", 2), ("odd", 1), ("odd", 3)]
+
+
+def test_filter_with_drop():
+    g = FloeGraph("filter")
+    g.add("f", lambda: FnPellet(lambda x: x if x > 2 else Drop))
+    out = run_graph(g, [1, 2, 3, 4], "f")
+    assert sorted(out) == [3, 4]
+
+
+# -- split policy unit behaviour ----------------------------------------------------------------
+def test_hash_split_same_key_same_edge():
+    s = HashSplit()
+    for key in ["alpha", "beta", 42, ("t", 1)]:
+        m = Message(payload=0, key=key)
+        choices = {tuple(s.choose(m, 5, [0] * 5)) for _ in range(10)}
+        assert len(choices) == 1  # deterministic
+
+
+def test_stable_hash_is_stable():
+    assert stable_hash("k1") == stable_hash("k1")
+    assert stable_hash(("a", 1)) == stable_hash(("a", 1))
+
+
+def test_direct_split_addresses_edge():
+    s = DirectSplit()
+    assert s.choose(Message(payload=0, key=3), 5, [0] * 5) == [3]
+    assert s.choose(Message(payload=0, key=7), 5, [0] * 5) == [2]
+
+
+def test_balanced_split_prefers_short_queue():
+    s = BalancedSplit()
+    m = Message(payload=0)
+    assert s.choose(m, 3, [5, 1, 9]) == [1]
+
+
+def test_duplicate_and_round_robin_units():
+    d = DuplicateSplit()
+    assert d.choose(Message(payload=0), 3, [0, 0, 0]) == [0, 1, 2]
+    r = RoundRobinSplit()
+    seq = [r.choose(Message(payload=0), 3, [0, 0, 0])[0] for _ in range(6)]
+    assert seq == [0, 1, 2, 0, 1, 2]
+
+
+# -- data parallelism ------------------------------------------------------------------------------
+def test_data_parallel_instances_complete_out_of_order_ok():
+    import random
+
+    def slow_id(x):
+        time.sleep(random.uniform(0, 0.01))
+        return x
+
+    g = FloeGraph("dp")
+    g.add("p", lambda: FnPellet(slow_id), cores=4)
+    out = run_graph(g, list(range(32)), "p")
+    assert sorted(out) == list(range(32))  # all arrive, any order
+
+
+def test_sequential_pellet_preserves_order():
+    class Seq(PushPellet):
+        sequential = True
+
+        def compute(self, x):
+            time.sleep(0.001)
+            return x
+
+    g = FloeGraph("seq")
+    g.add("p", Seq)
+    out = run_graph(g, list(range(16)), "p")
+    assert out == list(range(16))

@@ -1,0 +1,199 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.adaptation.simulator import SimPellet, simulate
+from repro.adaptation.strategies import (DynamicAdaptation, Observation,
+                                         PelletHints, static_allocation)
+from repro.core import Message
+from repro.core.patterns import HashSplit, stable_hash
+from repro.kernels import ops
+from repro.optim.grad_compress import (compress_tree_fused, dequantize_int8,
+                                       zeros_error_like)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# dynamic port mapping invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.one_of(st.text(max_size=8), st.integers(), st.tuples(
+    st.integers(), st.text(max_size=4))), min_size=1, max_size=60),
+    st.integers(min_value=1, max_value=12))
+def test_hash_split_is_a_function_of_key(keys, n_edges):
+    """Same key -> same edge, for any key type and edge count (§II.A)."""
+    s = HashSplit()
+    for key in keys:
+        m1 = Message(payload="a", key=key)
+        m2 = Message(payload="b", key=key)
+        assert s.choose(m1, n_edges, [0] * n_edges) == \
+            s.choose(m2, n_edges, [0] * n_edges)
+        (e,) = s.choose(m1, n_edges, [0] * n_edges)
+        assert 0 <= e < n_edges
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=2, max_value=64))
+def test_stable_hash_spreads(n_keys):
+    edges = [stable_hash(("key", i)) % 8 for i in range(n_keys * 8)]
+    counts = np.bincount(edges, minlength=8)
+    assert counts.max() <= 3.5 * counts.mean()  # no catastrophic skew
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants (the shuffle's correctness conditions)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=8, max_value=64),
+       st.integers(min_value=0, max_value=1000))
+def test_route_invariants(e_pow, k, T, seed):
+    E = 2 ** e_pow
+    k = min(k, E)
+    cap = max(4, T * k // E)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+    w, e, pos, keep, src, valid = ops.route(logits, k, cap)
+    w, e, pos, keep = map(np.asarray, (w, e, pos, keep))
+    src, valid = np.asarray(src), np.asarray(valid)
+    # weights are a distribution over the chosen experts
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    # kept slots are within capacity and unique per expert
+    assert (pos[keep] < cap).all()
+    for ex in range(E):
+        taken = pos[(e == ex) & keep]
+        assert len(np.unique(taken)) == len(taken)
+    # valid table marks exactly the kept assignments
+    assert valid.sum() == keep.sum()
+    # every valid slot points at a real token row
+    assert (src[valid] >= 0).all() and (src[valid] < T).all()
+
+
+# ---------------------------------------------------------------------------
+# adaptation invariants (§III)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.floats(min_value=0.0, max_value=500.0),
+       st.integers(min_value=0, max_value=10000),
+       st.floats(min_value=0.01, max_value=5.0),
+       st.integers(min_value=0, max_value=32))
+def test_dynamic_bounds_and_quiesce(rate, queue, latency, cores):
+    d = DynamicAdaptation(max_cores=16)
+    out = d.decide(Observation(0.0, queue, rate, latency, cores))
+    assert 0 <= out <= 16
+    if rate == 0 and queue == 0:
+        assert out == 0                       # idle & drained -> quiesce
+
+
+@settings(**SETTINGS)
+@given(st.floats(min_value=1.0, max_value=100.0),
+       st.floats(min_value=0.01, max_value=2.0))
+def test_dynamic_reaches_fixed_point(rate, latency):
+    """At a constant rate the controller settles (no flapping)."""
+    d = DynamicAdaptation(max_cores=64)
+    cores = 0
+    history = []
+    for _ in range(50):
+        cores = d.decide(Observation(0.0, 0, rate, latency, cores))
+        history.append(cores)
+    assert len(set(history[-5:])) == 1        # fixed point reached
+    # and the fixed point sustains the load
+    cap = history[-1] * 4 / latency
+    assert cap >= rate * 0.8 or history[-1] == 64
+
+
+@settings(**SETTINGS)
+@given(st.floats(min_value=1.0, max_value=1000.0),
+       st.floats(min_value=0.001, max_value=2.0),
+       st.floats(min_value=1.0, max_value=600.0))
+def test_static_allocation_sustains_window(m1, latency, window):
+    hints = [PelletHints(latency=latency)]
+    (c,) = static_allocation(hints, m1, window, epsilon=0.0)
+    # C cores = 4C instances must clear m1 messages within the window
+    assert c * 4 * window / latency >= m1 * 0.999
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_simulator_conserves_messages(seed):
+    rng = np.random.default_rng(seed)
+    rate = float(rng.uniform(1, 30))
+    p = SimPellet("p", latency=0.5)
+    res = simulate([p], {"p": DynamicAdaptation(max_cores=32)},
+                   lambda t: rate, horizon=120.0)
+    offered = rate * 120.0
+    assert p.processed_total <= offered + 1e-6
+    assert abs((p.processed_total + p.queue) - offered) < rate + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# numerics invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=3),
+       st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=100))
+def test_chunked_ce_matches_direct(b, chunks, seed):
+    from repro.launch.steps import chunked_cross_entropy, cross_entropy
+    S, D, V = chunks * 4, 8, 16
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, S, D))
+    head = jax.random.normal(jax.random.PRNGKey(seed + 1), (D, V))
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 2), (b, S), 0, V)
+    a = chunked_cross_entropy(x, head, labels, chunk=4)
+    c = cross_entropy(x @ head, labels)
+    np.testing.assert_allclose(float(a), float(c), rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=100))
+def test_error_feedback_identity(seed):
+    """EF-int8: the telescoping identity sum(dequantized) = sum(grads) -
+    final_error holds exactly — compression is unbiased over time."""
+    key = jax.random.PRNGKey(seed)
+    grads = {"w": jax.random.normal(key, (16, 16))}
+    err = zeros_error_like(grads)
+    total_deq = jnp.zeros((16, 16))
+    total_g = jnp.zeros((16, 16))
+    for i in range(5):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (16, 16))}
+        q, s, err = compress_tree_fused(g, err)
+        total_deq += dequantize_int8(q["w"], s["w"])
+        total_g += g["w"]
+    np.testing.assert_allclose(np.asarray(total_deq + err["w"]),
+                               np.asarray(total_g), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=30),
+       st.integers(min_value=0, max_value=50))
+def test_ssm_scan_split_invariance(split, seed):
+    """Scanning [0:split] then [split:] with the carried state equals the
+    full scan — the state object is a faithful stream summary (the paper's
+    stateful-pellet semantics)."""
+    from repro.kernels import ref
+    B, S, di, N = 1, 32, 8, 4
+    split = min(split, S - 1)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (di, N)) * 0.1)
+    B_ = jax.random.normal(ks[3], (B, S, N))
+    C_ = jax.random.normal(ks[4], (B, S, N))
+    y_full, h_full = ref.ssm_scan(x, dt, A, B_, C_)
+    y1, h1 = ref.ssm_scan(x[:, :split], dt[:, :split], A, B_[:, :split],
+                          C_[:, :split])
+    y2, h2 = ref.ssm_scan(x[:, split:], dt[:, split:], A, B_[:, split:],
+                          C_[:, split:], h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,134 @@
+"""Serving engine: continuous batching, ragged decode, live model update."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import Model
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = registry.get("qwen3-1.7b").scaled_down()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_ragged_decode_matches_per_sequence_forward(small):
+    """Per-slot lengths: decoding rows parked at different positions gives
+    the same logits as each row decoded alone (continuous batching
+    correctness)."""
+    cfg, model, params = small
+    S1, S2, cap = 6, 10, 16
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, S1), 0,
+                            cfg.vocab_size)
+    t2 = jax.random.randint(jax.random.PRNGKey(2), (1, S2), 0,
+                            cfg.vocab_size)
+    # individual decode
+    outs = []
+    for t in (t1, t2):
+        _, c = model.prefill(params, {"tokens": t[:, :-1]}, max_len=cap)
+        lg, _ = model.decode(params, c, t[:, -1:])
+        outs.append(np.asarray(lg[0, 0], np.float32))
+    # batched ragged decode: build a batch-2 cache with different lengths
+    _, c1 = model.prefill(params, {"tokens": t1[:, :-1]}, max_len=cap)
+    _, c2 = model.prefill(params, {"tokens": t2[:, :-1]}, max_len=cap)
+
+    def merge(a, b):
+        if a.ndim >= 1 and a.shape != b.shape:  # can't happen: same max_len
+            raise AssertionError
+        # find batch axis: where both have size 1 and dim matches layout
+        return a  # placeholder
+
+    # assemble batched cache through the engine's splice helper
+    from repro.serving.engine import _splice_batched
+    from repro.models.common import shapes_tree
+    layout = model.cache_layout(2, cap)
+    batched = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                           shapes_tree(layout))
+    batched = jax.tree.map(
+        lambda full, one: _splice_batched(full, one, 0, 2), batched, c1)
+    batched = jax.tree.map(
+        lambda full, one: _splice_batched(full, one, 1, 2), batched, c2)
+    toks = jnp.concatenate([t1[:, -1:], t2[:, -1:]], axis=0)
+    lg, newc = model.decode(params, batched, toks)
+    got = np.asarray(lg[:, 0], np.float32)
+    for i in range(2):
+        rel = (np.max(np.abs(got[i] - outs[i]))
+               / (np.max(np.abs(outs[i])) + 1e-9))
+        assert rel < 0.03, f"row {i}: rel={rel:.4f}"
+    assert list(np.asarray(newc["len"])) == [S1, S2]
+
+
+def test_engine_serves_batched_requests(small):
+    cfg, model, params = small
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32)
+    rids = [eng.submit(np.arange(4) + i, max_new_tokens=5) for i in range(5)]
+    eng.run(until_idle=True, max_steps=200)
+    assert len(eng.responses) == 5
+    got = {r.rid for r in eng.responses}
+    assert got == set(rids)
+    for r in eng.responses:
+        assert len(r.tokens) == 5
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+
+
+def test_engine_deterministic_across_batching(small):
+    """The same prompt yields the same tokens whether served alone or
+    alongside other requests (slot isolation)."""
+    cfg, model, params = small
+    prompt = np.arange(6)
+    eng1 = ServingEngine(cfg, params, n_slots=1, max_len=32)
+    eng1.submit(prompt, max_new_tokens=4)
+    eng1.run()
+    alone = next(r.tokens for r in eng1.responses)
+    eng2 = ServingEngine(cfg, params, n_slots=3, max_len=32)
+    eng2.submit(np.arange(8) * 3 % cfg.vocab_size, max_new_tokens=6)
+    rid = eng2.submit(prompt, max_new_tokens=4)
+    eng2.submit(np.arange(5) * 7 % cfg.vocab_size, max_new_tokens=3)
+    eng2.run()
+    together = next(r.tokens for r in eng2.responses if r.rid == rid)
+    assert together == alone
+
+
+def test_live_model_update_sync(small):
+    """§II.B dynamic task update in serving: weights swap mid-stream without
+    dropping requests; responses carry the model version (update landmark)."""
+    cfg, model, params = small
+    params2 = model.init(jax.random.PRNGKey(42))
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32)
+    eng.submit(np.arange(4), max_new_tokens=3)
+    eng.run()                                   # v0 serves request 0
+    eng.submit(np.arange(4), max_new_tokens=3)
+    eng.step()                                  # request 1 in flight on v0
+    v = eng.update_params(params2, mode="sync")  # swap mid-request
+    assert v == 1
+    eng.run()
+    eng.submit(np.arange(4), max_new_tokens=3)   # request 2 fully on v1
+    eng.run()
+    by_rid = {r.rid: r for r in eng.responses}
+    assert by_rid[0].model_version == 0
+    assert by_rid[1].model_version == 1          # landmark: swapped mid-run
+    assert by_rid[2].model_version == 1
+    assert len(by_rid) == 3
+    # v0 and v1 produce different generations for the same prompt
+    assert by_rid[0].tokens != by_rid[2].tokens
+
+
+def test_live_model_update_async_zero_downtime(small):
+    cfg, model, params = small
+    params2 = model.init(jax.random.PRNGKey(7))
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=32)
+    eng.submit(np.arange(4), max_new_tokens=4)
+    eng.step()
+    eng.update_params(params2, mode="async")    # in-flight keeps version 0
+    eng.run()
+    assert eng.responses[0].model_version == 0  # old logic ran to completion
+    eng.submit(np.arange(4), max_new_tokens=4)
+    eng.run()
+    assert eng.responses[1].model_version == 1
