@@ -1,14 +1,13 @@
-"""Quickstart: compose and run a continuous dataflow in ~40 lines.
+"""Quickstart: the Floe Session API in ~40 lines.
 
-Demonstrates the core Floe abstractions (paper §II.A): push pellets, a
-switch (multi-port control flow), a hash-split shuffle, streaming reducers
-with landmark flushes, and a dynamic task update (§II.B) — all on the local
-continuous engine.
+Build -> run -> recompose -> elastic scale, end to end (paper §II–III):
+fluent typed-port composition, a hash-split streaming MapReduce, landmark
+flushes, a transactional live recomposition, and a declarative elasticity
+policy — with zero manual Coordinator/AdaptationController wiring.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (Coordinator, FloeGraph, FnMapper, FnPellet,
-                        FnReducer, PushPellet, add_mapreduce)
+from repro import Flow, FnMapper, FnPellet, FnReducer, PushPellet
 
 
 class Classify(PushPellet):
@@ -20,40 +19,40 @@ class Classify(PushPellet):
 
 
 def main():
-    g = FloeGraph("quickstart")
-    g.add("source", lambda: FnPellet(lambda x: x, sequential=True))
-    g.add("classify", Classify)
-    g.add("scale", lambda: FnPellet(lambda x: x * 10))
-    g.add("sink", lambda: FnPellet(lambda x: x))
-    g.connect("source", "classify")
-    g.connect("classify", "scale", src_port="small")
-    # streaming word-count-style aggregation on the large branch
-    add_mapreduce(
-        g, prefix="agg",
-        mapper_factory=lambda: FnMapper(lambda x: [(x % 3, x)]),
-        reducer_factory=lambda: FnReducer(lambda: 0, lambda a, v: a + v),
-        n_mappers=1, n_reducers=2, source=None, sink="sink")
-    g.connect("classify", "agg_map0", src_port="large")
-    g.connect("scale", "sink")
+    # -- build: fluent, eagerly validated composition ----------------------
+    flow = Flow("quickstart")
+    source = flow.pellet("source", lambda: FnPellet(lambda x: x,
+                                                    sequential=True))
+    classify = flow.pellet("classify", Classify)
+    scale = flow.pellet("scale", lambda: FnPellet(lambda x: x * 10))
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    # typos in port names / split policies fail HERE, not at runtime
+    source >> classify
+    classify["small"] >> scale >> sink
+    # streaming word-count-style aggregation on the large branch:
+    # mappers hash-split into reducers (dynamic port mapping, Fig. 1 P9)
+    flow.mapreduce(prefix="agg",
+                   mapper=lambda: FnMapper(lambda x: [(x % 3, x)]),
+                   reducer=lambda: FnReducer(lambda: 0, lambda a, v: a + v),
+                   n_mappers=1, n_reducers=2,
+                   source=classify["large"], sink=sink)
+    # declarative elasticity: the session manages the controller (§III)
+    scale.elastic(max_cores=4, strategy="dynamic", drain_horizon=0.5)
 
-    coord = Coordinator(g).start()
-    try:
+    # -- run: one handle, guaranteed teardown ------------------------------
+    with flow.session() as s:
         for x in [3, 77, 12, 90, 45, 88]:
-            coord.inject("source", x)
-        coord.inject_landmark("source")          # flush the window
-        assert coord.run_until_quiescent(timeout=30)
-        print("outputs:", sorted((m.payload for m in coord.drain_outputs()
-                                  if m.is_data()), key=repr))
+            s.inject(source, x)
+        s.inject_landmark(source)            # flush the logical window
+        print("outputs:", sorted(s.results(), key=repr))
 
-        # dynamic task update (§II.B): swap the scale pellet live
-        coord.update_pellet("scale",
-                            lambda: FnPellet(lambda x: x * 100), mode="sync")
-        coord.inject("source", 7)
-        assert coord.run_until_quiescent(timeout=30)
-        print("after live update:",
-              [m.payload for m in coord.drain_outputs() if m.is_data()])
-    finally:
-        coord.stop()
+        # -- recompose: transactional live mutation (§II.B) ----------------
+        with s.recompose() as tx:
+            tx.swap(scale, lambda: FnPellet(lambda x: x * 100))
+            tx.scale(scale, cores=2)
+        s.inject(source, 7)
+        print("after live recompose:", s.results())
+        assert not s.errors
 
 
 if __name__ == "__main__":

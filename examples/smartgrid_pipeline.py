@@ -1,20 +1,25 @@
 """The Smart-Grid Information Integration Pipeline (paper Fig. 3a, §IV.A).
 
 Reproduces the USC campus-microgrid pipeline's structure on the Floe
-engine: streamed pull ingest (I0/I1), bulk CSV upload (I6), XML weather
-fetch (I7), interleaved merge into a parser (I2), semantic annotation with
-switch control flow (I3), parallel semantic-DB inserts (I4/I8/I9), and a
-progress output pellet (I5).  The dynamic adaptation controller (§III,
-Algorithm 1) scales pellet cores live against a periodic load profile.
+engine via the Session API: streamed pull ingest (I0/I1), bulk CSV upload
+(I6), XML weather fetch (I7), interleaved merge into a parser (I2),
+semantic annotation with switch control flow (I3), parallel semantic-DB
+inserts (I4/I8), and a progress output pellet (I5).  Declarative
+``.elastic`` policies scale pellet cores live against a periodic load
+profile (§III, Algorithm 1) — the session manages the controller.
+
+Parse propagates each record's ``kind`` as ``source`` so the I3_annotate
+switch routes weather records to the weather port; ``main()`` asserts both
+DB branches (meter -> I4, weather -> I8) receive records (regression guard
+for the historic wiring bug where weather rows fell through to the meter
+branch).
 
 Run:  PYTHONPATH=src python examples/smartgrid_pipeline.py
 """
 import threading
 import time
 
-from repro.adaptation import AdaptationController, DynamicAdaptation
-from repro.core import (Coordinator, Drop, FloeGraph, FnPellet, PullPellet,
-                        PushPellet)
+from repro import Flow, FnPellet, PullPellet, PushPellet
 
 
 class StreamIngest(PullPellet):
@@ -32,7 +37,11 @@ class StreamIngest(PullPellet):
 
 
 class Parse(PushPellet):
-    """I2: parse events / CSV rows / XML docs into tuples."""
+    """I2: parse events / CSV rows / XML docs into tuples.
+
+    The record's ``kind`` must survive parsing as ``source`` — the
+    I3_annotate switch routes on it (weather vs meter).
+    """
 
     def compute(self, rec):
         payload = rec["data"] if isinstance(rec, dict) else rec
@@ -53,78 +62,92 @@ class Annotate(PushPellet):
 
 
 class TripleInsert(PushPellet):
-    """I4/I8/I9: insert semantic triples into the (mock) 4Store DB."""
-    db = []
+    """I4/I8: insert semantic triples into the (mock) 4Store DB.
+
+    Each branch gets its own DB table so the pipeline can verify where
+    records actually landed.
+    """
+    dbs = {}
     _lock = threading.Lock()
+
+    def __init__(self, table="default"):
+        self.table = table
+        with TripleInsert._lock:
+            self.db = TripleInsert.dbs.setdefault(table, [])
 
     def compute(self, rec):
         time.sleep(0.002)  # simulated DB latency
         with TripleInsert._lock:
-            TripleInsert.db.append(rec)
-        return len(TripleInsert.db)
+            self.db.append(rec)
+        return len(self.db)
 
 
-def build() -> FloeGraph:
-    g = FloeGraph("smartgrid")
-    g.add("I0_meters", StreamIngest)
-    g.add("I1_sensors", StreamIngest)
-    g.add("I6_csv", lambda: FnPellet(lambda row: {"kind": "bulk",
-                                                  "data": row}))
-    g.add("I7_weather", lambda: FnPellet(lambda doc: {"kind": "weather",
-                                                      "data": doc}))
-    g.add("I2_parse", Parse, cores=2)
-    g.add("I3_annotate", Annotate, cores=2)
-    g.add("I4_insert", TripleInsert, cores=2)
-    g.add("I8_insert", TripleInsert)
-    g.add("I5_progress", lambda: FnPellet(lambda n: f"ingested:{n}"))
-    for src in ("I0_meters", "I1_sensors", "I6_csv", "I7_weather"):
-        g.connect(src, "I2_parse")                       # interleaved merge
-    g.connect("I2_parse", "I3_annotate")
-    g.connect("I3_annotate", "I4_insert", src_port="meter",
-              split="round_robin")
-    g.connect("I3_annotate", "I8_insert", src_port="weather")
-    g.connect("I4_insert", "I5_progress")
-    g.connect("I8_insert", "I5_progress")
-    return g
+def build() -> Flow:
+    flow = Flow("smartgrid")
+    meters = flow.pellet("I0_meters", StreamIngest)
+    sensors = flow.pellet("I1_sensors", StreamIngest)
+    csv = flow.pellet("I6_csv", lambda: FnPellet(
+        lambda row: {"kind": "bulk", "data": row}))
+    weather = flow.pellet("I7_weather", lambda: FnPellet(
+        lambda doc: {"kind": "weather", "data": doc}))
+    parse = flow.pellet("I2_parse", Parse, cores=2)
+    annotate = flow.pellet("I3_annotate", Annotate, cores=2).elastic(
+        max_cores=8, strategy="dynamic", drain_horizon=0.5)
+    meter_db = flow.pellet("I4_insert",
+                           lambda: TripleInsert("meter"), cores=2).elastic(
+        max_cores=8, strategy="dynamic", drain_horizon=0.5)
+    weather_db = flow.pellet("I8_insert", lambda: TripleInsert("weather"))
+    progress = flow.pellet("I5_progress",
+                           lambda: FnPellet(lambda n: f"ingested:{n}"))
+    for src in (meters, sensors, csv, weather):
+        src >> parse                         # interleaved merge (Fig. 1 P6)
+    parse >> annotate
+    annotate["meter"].split("round_robin") >> meter_db
+    annotate["weather"] >> weather_db
+    meter_db >> progress
+    weather_db >> progress
+    return flow
 
 
 def main():
-    # fix annotation source: weather records must keep their source through
-    # the parser (Parse drops 'kind' for dicts — it propagates it)
-    g = build()
-    coord = Coordinator(g).start()
-    ctrl = AdaptationController(
-        coord,
-        {"I3_annotate": DynamicAdaptation(max_cores=8, drain_horizon=0.5),
-         "I4_insert": DynamicAdaptation(max_cores=8, drain_horizon=0.5)},
-        sample_interval=0.2).start()
-    try:
+    TripleInsert.dbs.clear()
+    flow = build()
+    with flow.session(sample_interval=0.2) as s:
         t0 = time.time()
+        n_weather = 0
         # periodic profile: 1s burst, 1s gap, 3 periods
         for period in range(3):
             for i in range(150):
-                coord.inject("I0_meters", {"meter": i, "w": period})
-                coord.inject("I1_sensors", {"sensor": i})
+                s.inject("I0_meters", {"meter": i, "w": period})
+                s.inject("I1_sensors", {"sensor": i})
                 if i % 10 == 0:
-                    coord.inject("I7_weather", f"<xml>{i}</xml>")
+                    s.inject("I7_weather", f"<xml>{i}</xml>")
+                    n_weather += 1
                 if i % 25 == 0:
-                    coord.inject("I6_csv", [period, i, 42.0])
+                    s.inject("I6_csv", [period, i, 42.0])
                 time.sleep(0.004)
             time.sleep(0.5)
-        assert coord.run_until_quiescent(timeout=60)
-        stats = coord.stats()
+        assert s.quiesce(timeout=60)
+        stats = s.stats()
+        meter_db = TripleInsert.dbs["meter"]
+        weather_db = TripleInsert.dbs["weather"]
+        # regression: BOTH DB branches received records — weather rows must
+        # not fall through to the meter branch (or vanish)
+        assert len(weather_db) == n_weather, \
+            f"weather branch got {len(weather_db)}/{n_weather} records"
+        assert len(meter_db) > 0, "meter branch received no records"
+        assert all(r["units"] == "celsius" for r in weather_db)
+        assert not s.errors, s.errors[:3]
         print(f"wall time: {time.time()-t0:.1f}s")
-        print(f"DB triples: {len(TripleInsert.db)}")
+        print(f"DB triples: meter={len(meter_db)} weather={len(weather_db)}")
         for name in ("I2_parse", "I3_annotate", "I4_insert"):
-            s = stats[name]
-            print(f"  {name:13s} processed={s['processed']:4d} "
-                  f"cores(final)={s['cores']}")
-        scaled = [c for (_, n, _, c) in ctrl.history if n == "I3_annotate"]
+            st = stats[name]
+            print(f"  {name:13s} processed={st['processed']:4d} "
+                  f"cores(final)={st['cores']}")
+        scaled = [c for (_, n, _, c) in s.controller.history
+                  if n == "I3_annotate"]
         print(f"I3 core allocation over time: min={min(scaled)} "
               f"max={max(scaled)} (dynamic adaptation live)")
-    finally:
-        ctrl.stop()
-        coord.stop()
 
 
 if __name__ == "__main__":

@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Coordinator, FloeGraph, FnPellet, KeyedEmit,
-                        PullPellet, PushPellet)
+from repro import Flow, FnPellet, KeyedEmit, PullPellet, PushPellet
 
 DIM = 32          # feature dimension ("dictionary of topic words")
 N_TABLES = 3      # LSH hash tables (candidate buckets per post)
@@ -127,24 +126,23 @@ class Aggregator(PullPellet):
         return state
 
 
-def build_graph() -> FloeGraph:
-    g = FloeGraph("lsh-clustering")
-    g.add("T0_clean", TextClean, cores=2)
-    g.add("T1_bucketize", Bucketizer, cores=2)
-    for i in range(N_SEARCH):
-        g.add(f"T{3+i}_search", ClusterSearch)
-    g.add("T6_aggregate", Aggregator)
-    g.add("sink", lambda: FnPellet(lambda x: x))
-    g.connect("T0_clean", "T1_bucketize")
-    for i in range(N_SEARCH):
+def build_flow() -> Flow:
+    flow = Flow("lsh-clustering")
+    clean = flow.pellet("T0_clean", TextClean, cores=2)
+    bucketize = flow.pellet("T1_bucketize", Bucketizer, cores=2)
+    searchers = [flow.pellet(f"T{3+i}_search", ClusterSearch)
+                 for i in range(N_SEARCH)]
+    aggregate = flow.pellet("T6_aggregate", Aggregator)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    clean >> bucketize
+    for search in searchers:
         # dynamic data mapping: bucket key -> owning search pellet
-        g.connect("T1_bucketize", f"T{3+i}_search", split="hash")
+        bucketize.split("hash") >> search
         # feedback cycle with choice: winning bucket's owner gets the update
-        g.connect("T6_aggregate", f"T{3+i}_search", src_port="feedback",
-                  dst_port="update", split="hash")
-        g.connect(f"T{3+i}_search", "T6_aggregate")
-    g.connect("T6_aggregate", "sink", src_port="result")
-    return g
+        aggregate["feedback"].split("hash") >> search["update"]
+        search >> aggregate["in"]
+    aggregate["result"] >> sink
+    return flow
 
 
 def synthetic_posts(n_posts: int, n_topics: int = 4, seed: int = 1):
@@ -161,17 +159,14 @@ def synthetic_posts(n_posts: int, n_topics: int = 4, seed: int = 1):
 
 
 def run(n_posts: int = 120, quiet: bool = False):
-    g = build_graph()
-    coord = Coordinator(g).start()
+    flow = build_flow()
     posts, truth = synthetic_posts(n_posts)
     t0 = time.time()
-    try:
+    with flow.session(drain_timeout=120) as s:
         for p in posts:
-            coord.inject("T0_clean", p)
-        assert coord.run_until_quiescent(timeout=120)
-        assert not coord.errors, coord.errors[:3]
-        results = [m.payload for m in coord.drain_outputs()
-                   if m.is_data() and isinstance(m.payload, dict)]
+            s.inject("T0_clean", p)
+        results = [p for p in s.results() if isinstance(p, dict)]
+        assert not s.errors, s.errors[:3]
         wall = time.time() - t0
         # purity: posts of one topic should mostly share a cluster bucket
         by_cluster: Dict = {}
@@ -186,8 +181,6 @@ def run(n_posts: int = 120, quiet: bool = False):
                   f"({len(results)/wall:,.0f} posts/s), purity={purity:.2f}")
         return {"posts": len(results), "wall_s": wall,
                 "clusters": len(by_cluster), "purity": purity}
-    finally:
-        coord.stop()
 
 
 if __name__ == "__main__":

@@ -2,5 +2,45 @@
 
 Reproduction + TPU-pod scale-up of "Floe: A Continuous Dataflow Framework
 for Dynamic Cloud Applications" (Simmhan & Kumbhare, 2014).
+
+Public surface — the Session API::
+
+    from repro import Flow, FnPellet
+
+    flow = Flow("pipeline")
+    src  = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    dbl  = flow.pellet("double", lambda: FnPellet(lambda x: 2 * x))
+    src >> dbl
+
+    with flow.session() as s:
+        s.inject(src, 21)
+        print(s.results())          # [42]
+
+The legacy ``FloeGraph`` / ``Coordinator`` objects remain supported (the
+builder compiles down to them) and are re-exported here for interop.
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+# Session API (the documented composition surface)
+from .api import (CompositionError, ElasticPolicy, Flow, PortRef,
+                  Recomposition, RecompositionError, Session,
+                  SessionStateError, StageHandle)
+# Pellet/message vocabulary used by both APIs
+from .core import (Drop, FnMapper, FnPellet, FnReducer, KeyedEmit, Mapper,
+                   Message, Pellet, PullPellet, PushPellet, Reducer,
+                   TuplePellet, WindowPellet)
+# Legacy engine surface (supported; the builder compiles to it)
+from .core import Coordinator, FloeGraph
+
+__all__ = [
+    # session API
+    "Flow", "Session", "Recomposition", "StageHandle", "PortRef",
+    "ElasticPolicy", "CompositionError", "RecompositionError",
+    "SessionStateError",
+    # pellets & messages
+    "Pellet", "PushPellet", "PullPellet", "WindowPellet", "TuplePellet",
+    "FnPellet", "FnMapper", "FnReducer", "Mapper", "Reducer",
+    "KeyedEmit", "Drop", "Message",
+    # legacy engine surface
+    "FloeGraph", "Coordinator",
+]

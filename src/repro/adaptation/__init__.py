@@ -1,4 +1,9 @@
-"""Adaptive resource allocation (paper §III) + elastic SPMD scaling."""
+"""Adaptive resource allocation (paper §III) + elastic SPMD scaling.
+
+The SPMD layer (``elastic``) imports JAX; it is loaded lazily (PEP 562) so
+that pure-engine users — ``import repro`` pulls this package via the
+Session API — don't pay JAX's import cost until they touch mesh scaling.
+"""
 from .strategies import (ALPHA, DynamicAdaptation, HybridAdaptation,
                          Observation, PelletHints, StaticLookahead, Strategy,
                          static_allocation)
@@ -6,8 +11,9 @@ from .simulator import (SimPellet, SimResult, periodic_profile,
                         random_walk_profile, run_i1_experiment, simulate,
                         spiky_profile)
 from .controller import AdaptationController
-from .elastic import (ElasticMeshManager, ElasticServingScaler, MeshPlan,
-                      divisor_floor, reshard)
+
+_ELASTIC = ("ElasticMeshManager", "ElasticServingScaler", "MeshPlan",
+            "divisor_floor", "reshard")
 
 __all__ = [
     "ALPHA", "DynamicAdaptation", "HybridAdaptation", "Observation",
@@ -15,6 +21,12 @@ __all__ = [
     "SimPellet", "SimResult", "periodic_profile", "random_walk_profile",
     "run_i1_experiment", "simulate", "spiky_profile",
     "AdaptationController",
-    "ElasticMeshManager", "ElasticServingScaler", "MeshPlan",
-    "divisor_floor", "reshard",
+    *_ELASTIC,
 ]
+
+
+def __getattr__(name):
+    if name in _ELASTIC:
+        from . import elastic
+        return getattr(elastic, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -6,6 +6,10 @@ and this controller applies the same code to a *running* Floe graph: every
 arrival rate and EWMA service latency, asks the pellet's strategy for a core
 allocation, and applies it through ``Coordinator.set_cores`` (which resizes
 the instance pool semaphore — the paper's "fine-grained resource control").
+
+Most users never construct this directly: annotate stages with
+``StageHandle.elastic(...)`` and ``flow.session()`` builds and manages one
+controller per session (see ``repro.api``).
 """
 from __future__ import annotations
 
@@ -43,7 +47,8 @@ class AdaptationController:
     def step_once(self) -> None:
         """One sampling round (also called by the loop; useful in tests)."""
         now = time.time() - self._t0
-        for name, strat in self.strategies.items():
+        # snapshot: Session.recompose may add/remove policies concurrently
+        for name, strat in list(self.strategies.items()):
             flake = self.coordinator.flakes.get(name)
             if flake is None:
                 continue

@@ -1,0 +1,24 @@
+"""The Floe Session API — the documented way to compose, run, observe,
+and mutate a continuous dataflow.
+
+* :class:`Flow` — fluent builder with typed port handles, eager validation,
+  and pattern combinators (``mapreduce``, ``bsp``); compiles to the legacy
+  :class:`~repro.core.graph.FloeGraph` (which stays supported).
+* :class:`Session` — context-managed lifecycle over the Coordinator plus
+  automatic elasticity controllers; ``inject`` / ``drain`` / ``stats`` /
+  ``recompose`` behind one handle with guaranteed teardown.
+* :class:`Recomposition` — transactional runtime mutation (§II.B):
+  ``swap`` + ``rewire`` + ``scale`` staged, validated, committed atomically.
+* :class:`ElasticPolicy` — declarative ``.elastic(...)`` annotations.
+"""
+from .builder import EdgeSpec, Flow, PortRef, StageHandle
+from .errors import (CompositionError, RecompositionError,
+                     SessionStateError)
+from .policies import ElasticPolicy
+from .session import Recomposition, Session
+
+__all__ = [
+    "Flow", "StageHandle", "PortRef", "EdgeSpec",
+    "Session", "Recomposition", "ElasticPolicy",
+    "CompositionError", "RecompositionError", "SessionStateError",
+]

@@ -1,0 +1,356 @@
+"""Fluent, eagerly-validated dataflow composition (the Session API builder).
+
+``Flow`` is the one documented way to compose a Floe dataflow::
+
+    flow = Flow("pipeline")
+    src    = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    parse  = flow.pellet("parse", Parse, cores=2)
+    insert = flow.pellet("insert", TripleInsert).elastic(max_cores=8)
+
+    src >> parse                                  # default ports
+    parse["meter"].split("hash") >> insert        # typed out-port handle
+    parse["weather"] >> annotate["weather"]       # explicit in-port
+
+Everything is validated *eagerly*, at composition time: unknown port names,
+unknown split policies, conflicting splits on one fan-out group, and
+synchronous-merge fan-in gaps all raise :class:`CompositionError` at the
+offending line — not later when flakes are instantiated.  ``Flow`` compiles
+down to the legacy :class:`~repro.core.graph.FloeGraph`, which remains fully
+supported (the builder is sugar plus proofs, not a new engine).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+from ..core.bsp import BSPManager, BSPWorker, WorkerLogic
+from ..core.graph import FloeGraph
+from ..core.mapreduce import Mapper, Reducer
+from ..core.patterns import SPLITS
+from ..core.pellet import Pellet, TuplePellet
+from .errors import CompositionError
+from .policies import ElasticPolicy
+
+#: anything `>>` accepts as a connection endpoint
+Connectable = Union["StageHandle", "PortRef"]
+
+
+@dataclass
+class EdgeSpec:
+    """One staged edge; ``split=None`` means 'inherit the group default'."""
+    src: str
+    src_port: str
+    dst: str
+    dst_port: str
+    split: Optional[str] = None
+    transport: str = "push"
+
+
+class PortRef:
+    """A typed handle on one named port of a stage.
+
+    Direction is resolved by position around ``>>``: the left operand is an
+    output port, the right operand is an input port.  Port existence is
+    checked when the ref is created (``stage["name"]``), so a typo fails at
+    the subscript, with the stage's real ports in the message.
+    """
+
+    __slots__ = ("stage", "port", "_split", "_transport")
+
+    def __init__(self, stage: "StageHandle", port: str,
+                 split: Optional[str] = None, transport: str = "push"):
+        self.stage = stage
+        self.port = port
+        self._split = split
+        self._transport = transport
+
+    # -- fluent routing annotations -----------------------------------------
+    def split(self, policy: str) -> "PortRef":
+        """Choose the fan-out split policy for edges leaving this port."""
+        if policy not in SPLITS:
+            raise CompositionError(
+                f"unknown split {policy!r}; one of {sorted(SPLITS)}")
+        return PortRef(self.stage, self.port, policy, self._transport)
+
+    def transport(self, kind: str) -> "PortRef":
+        if kind not in ("push", "pull"):
+            raise CompositionError(
+                f"unknown transport {kind!r}; 'push' or 'pull'")
+        return PortRef(self.stage, self.port, self._split, kind)
+
+    # -- composition ---------------------------------------------------------
+    def __rshift__(self, other: Connectable) -> "StageHandle":
+        return self.stage.flow._connect(self, other)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<port {self.stage.name}[{self.port!r}]>"
+
+
+class StageHandle:
+    """A named pellet stage inside a :class:`Flow`.
+
+    Subscripting returns a :class:`PortRef`; ``>>`` composes using default
+    ports; ``.elastic(...)`` attaches a declarative elasticity policy.
+    """
+
+    def __init__(self, flow: "Flow", name: str, factory: Callable[[], Pellet],
+                 proto: Pellet, cores: int, annotations: Dict[str, Any]):
+        self.flow = flow
+        self.name = name
+        self.factory = factory
+        self.proto = proto
+        self.cores = cores
+        self.annotations = annotations
+        self.policy: Optional[ElasticPolicy] = None
+
+    # -- ports ---------------------------------------------------------------
+    @property
+    def in_ports(self) -> Tuple[str, ...]:
+        return tuple(self.proto.in_ports)
+
+    @property
+    def out_ports(self) -> Tuple[str, ...]:
+        return tuple(self.proto.out_ports)
+
+    def __getitem__(self, port: str) -> PortRef:
+        if port not in self.in_ports and port not in self.out_ports:
+            raise CompositionError(
+                f"stage {self.name!r} has no port {port!r}; "
+                f"in={list(self.in_ports)} out={list(self.out_ports)}")
+        return PortRef(self, port)
+
+    def default_out(self) -> str:
+        if len(self.out_ports) == 1:
+            return self.out_ports[0]
+        if "out" in self.out_ports:
+            return "out"
+        raise CompositionError(
+            f"stage {self.name!r} has multiple output ports "
+            f"{list(self.out_ports)}; select one with stage[port]")
+
+    def default_in(self) -> str:
+        if len(self.in_ports) == 1:
+            return self.in_ports[0]
+        if "in" in self.in_ports:
+            return "in"
+        raise CompositionError(
+            f"stage {self.name!r} has multiple input ports "
+            f"{list(self.in_ports)}; select one with stage[port]")
+
+    # -- composition ---------------------------------------------------------
+    def __rshift__(self, other: Connectable) -> "StageHandle":
+        return self.flow._connect(PortRef(self, self.default_out()), other)
+
+    def split(self, policy: str) -> PortRef:
+        """Shorthand for ``stage[default_out].split(policy)``."""
+        return PortRef(self, self.default_out()).split(policy)
+
+    # -- elasticity -----------------------------------------------------------
+    def elastic(self, *, strategy: str = "dynamic", **params) -> "StageHandle":
+        """Attach a declarative elasticity policy (validated now).
+
+        The flow's session turns every policy into a correctly configured
+        ``AdaptationController`` — no manual controller wiring.
+        """
+        self.policy = ElasticPolicy(strategy=strategy, **params)
+        return self
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"<stage {self.name!r} {type(self.proto).__name__} "
+                f"cores={self.cores}>")
+
+
+class Flow:
+    """Fluent builder for a Floe dataflow; compiles to ``FloeGraph``."""
+
+    def __init__(self, name: str = "floe"):
+        self.name = name
+        self.stages: Dict[str, StageHandle] = {}
+        self.edges: List[EdgeSpec] = []
+        #: resolved split policy per fan-out group (src, src_port)
+        self._group_split: Dict[Tuple[str, str], str] = {}
+
+    # -- stage declaration ----------------------------------------------------
+    def pellet(self, name: str, factory: Callable[[], Pellet], *,
+               cores: int = 1, **annotations) -> StageHandle:
+        """Declare a named stage.  ``factory`` is a Pellet subclass or a
+        zero-argument callable returning a fresh Pellet instance."""
+        if name in self.stages:
+            raise CompositionError(f"duplicate stage name {name!r}")
+        if not callable(factory):
+            raise CompositionError(
+                f"stage {name!r}: factory must be callable "
+                "(Pellet class or zero-arg lambda)")
+        if int(cores) < 0:
+            raise CompositionError(f"stage {name!r}: cores must be >= 0")
+        try:
+            proto = factory()
+        except TypeError as e:
+            raise CompositionError(
+                f"stage {name!r}: factory() failed ({e}); wrap constructor "
+                "arguments in a lambda") from e
+        if not isinstance(proto, Pellet):
+            raise CompositionError(
+                f"stage {name!r}: factory produced {type(proto).__name__}, "
+                "expected a Pellet")
+        handle = StageHandle(self, name, factory, proto, int(cores),
+                             annotations)
+        self.stages[name] = handle
+        return handle
+
+    # -- edge declaration ------------------------------------------------------
+    def _as_out(self, ep: Connectable) -> PortRef:
+        if isinstance(ep, StageHandle):
+            return PortRef(ep, ep.default_out())
+        return ep
+
+    def _as_in(self, ep: Connectable) -> PortRef:
+        if isinstance(ep, StageHandle):
+            return PortRef(ep, ep.default_in())
+        return ep
+
+    def _connect(self, src: Connectable, dst: Connectable) -> StageHandle:
+        src, dst = self._as_out(src), self._as_in(dst)
+        if not isinstance(dst, PortRef):
+            raise CompositionError(
+                f"cannot connect to {dst!r}; expected a stage or port")
+        for ref, role in ((src, "source"), (dst, "sink")):
+            if ref.stage.flow is not self:
+                raise CompositionError(
+                    f"{role} stage {ref.stage.name!r} belongs to a "
+                    "different Flow")
+        # direction-checked port typing
+        if src.port not in src.stage.out_ports:
+            raise CompositionError(
+                f"{src.stage.name!r} has no OUTPUT port {src.port!r}; "
+                f"out={list(src.stage.out_ports)}")
+        if dst.port not in dst.stage.in_ports:
+            raise CompositionError(
+                f"{dst.stage.name!r} has no INPUT port {dst.port!r}; "
+                f"in={list(dst.stage.in_ports)}")
+        split = self._resolve_split(src)
+        self.edges.append(EdgeSpec(src.stage.name, src.port,
+                                   dst.stage.name, dst.port,
+                                   split, src._transport))
+        return dst.stage
+
+    def _resolve_split(self, src: PortRef) -> Optional[str]:
+        """Enforce one split policy per fan-out group, eagerly.
+
+        The engine routes each (stage, out_port) group with a single split;
+        the legacy API silently took the first edge's policy.  Here a
+        conflicting second declaration is a composition error.
+        """
+        group = (src.stage.name, src.port)
+        chosen = self._group_split.get(group)
+        if src._split is not None:
+            if chosen is not None and chosen != src._split:
+                raise CompositionError(
+                    f"conflicting splits for {src.stage.name}[{src.port!r}]: "
+                    f"{chosen!r} already declared, got {src._split!r}")
+            self._group_split[group] = src._split
+        return src._split
+
+    # -- combinators (ported pattern helpers) -----------------------------------
+    def mapreduce(self, *, prefix: str,
+                  mapper: Callable[[], Mapper],
+                  reducer: Callable[[], Reducer],
+                  n_mappers: int, n_reducers: int,
+                  source: Optional[Connectable] = None,
+                  sink: Optional[Connectable] = None,
+                  mapper_cores: int = 1, reducer_cores: int = 1,
+                  ) -> Tuple[List[StageHandle], List[StageHandle]]:
+        """Streaming MapReduce+ stage (Fig. 1 P9) as a builder combinator.
+
+        ``source`` (stage or out-port ref) round-robins into the mappers;
+        every mapper hash-splits into every reducer (dynamic port mapping);
+        reducers round-robin into ``sink``.  Returns the stage handles so
+        callers can chain further stages (MapReduce+).
+        """
+        maps = [self.pellet(f"{prefix}_map{i}", mapper, cores=mapper_cores)
+                for i in range(n_mappers)]
+        reds = [self.pellet(f"{prefix}_red{j}", reducer, cores=reducer_cores)
+                for j in range(n_reducers)]
+        if source is not None:
+            src = self._as_out(source)
+            for m in maps:
+                src.split("round_robin") >> m
+        for m in maps:
+            for r in reds:
+                m.split("hash") >> r
+        if sink is not None:
+            for r in reds:
+                r.split("round_robin") >> self._as_in(sink)
+        return maps, reds
+
+    def bsp(self, *, prefix: str, n_workers: int, logic: WorkerLogic,
+            init_states: Optional[Sequence[Any]] = None,
+            max_supersteps: int = 1000,
+            sink: Optional[Connectable] = None,
+            ) -> Tuple[List[StageHandle], StageHandle]:
+        """BSP stage (Fig. 1 P10): fully-connected workers + manager."""
+        inits = list(init_states) if init_states is not None \
+            else [None] * n_workers
+        if len(inits) != n_workers:
+            raise CompositionError(
+                f"bsp {prefix!r}: {len(inits)} init states for "
+                f"{n_workers} workers")
+        workers = [
+            self.pellet(f"{prefix}_w{i}",
+                        (lambda wid=i, st=inits[i]:
+                         BSPWorker(wid, logic, st)))
+            for i in range(n_workers)]
+        manager = self.pellet(
+            f"{prefix}_mgr",
+            lambda: BSPManager(n_workers, max_supersteps=max_supersteps))
+        for src in workers:
+            for dst in workers:
+                src["peers"].split("direct") >> dst["data"]
+            src["done"] >> manager["in"]
+        for dst in workers:
+            manager["tick"].split("duplicate") >> dst["ctrl"]
+        if sink is not None:
+            manager["result"] >> self._as_in(sink)
+        return workers, manager
+
+    # -- compilation ------------------------------------------------------------
+    def build(self) -> FloeGraph:
+        """Compile to a fresh legacy ``FloeGraph`` (whole-flow checks run
+        here: synchronous-merge fan-in coverage)."""
+        self._check_fanin()
+        g = FloeGraph(self.name)
+        for s in self.stages.values():
+            g.add(s.name, s.factory, cores=s.cores, **s.annotations)
+        for e in self.edges:
+            g.connect(e.src, e.dst, src_port=e.src_port, dst_port=e.dst_port,
+                      split=e.split or self._group_split.get(
+                          (e.src, e.src_port), "round_robin"),
+                      transport=e.transport)
+        g.validate()
+        return g
+
+    def _check_fanin(self) -> None:
+        """A synchronous merge (TuplePellet) aligns one message per input
+        port — a port with no inbound edge would stall the whole stage."""
+        fed: Dict[str, set] = {}
+        for e in self.edges:
+            fed.setdefault(e.dst, set()).add(e.dst_port)
+        for s in self.stages.values():
+            if isinstance(s.proto, TuplePellet) and s.name in fed:
+                missing = set(s.in_ports) - fed[s.name]
+                if missing:
+                    raise CompositionError(
+                        f"synchronous merge {s.name!r}: input ports "
+                        f"{sorted(missing)} receive no edges and would "
+                        "stall alignment")
+
+    # -- session ---------------------------------------------------------------
+    def session(self, **options) -> "Session":
+        """Open a :class:`Session` over this flow (see api.session)."""
+        from .session import Session
+        return Session(self, **options)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"<Flow {self.name!r}: {len(self.stages)} stages, "
+                f"{len(self.edges)} edges>")

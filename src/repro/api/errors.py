@@ -1,0 +1,29 @@
+"""Errors raised by the Session API.
+
+Both are ``ValueError`` subclasses so call sites that guarded the legacy
+``FloeGraph``/``Coordinator`` surface with ``except ValueError`` keep
+working unchanged.
+"""
+from __future__ import annotations
+
+
+class CompositionError(ValueError):
+    """A dataflow was composed illegally (unknown port, bad split, ...).
+
+    Raised *eagerly* at composition time — the moment ``>>`` / ``.split()``
+    / ``Flow.pellet()`` is called — instead of at flake-instantiation time
+    like the legacy API.
+    """
+
+
+class RecompositionError(ValueError):
+    """A staged recomposition transaction failed validation.
+
+    Raised at commit time (``with session.recompose() as tx:`` exit) before
+    any change is applied to the running dataflow: the transaction rolls
+    back and the graph keeps executing its previous composition.
+    """
+
+
+class SessionStateError(RuntimeError):
+    """A session operation was attempted in the wrong lifecycle state."""

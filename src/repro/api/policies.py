@@ -1,0 +1,93 @@
+"""Declarative elasticity policies (paper §III, made first-class).
+
+A stage annotated with ``.elastic(...)`` carries an ``ElasticPolicy``; when
+the flow's :class:`~repro.api.session.Session` starts, every policy is
+compiled into a strategy object (``DynamicAdaptation`` / ``StaticLookahead``
+/ ``HybridAdaptation``) and handed to one automatically managed
+``AdaptationController`` — users never construct controllers by hand.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from ..adaptation.strategies import (DynamicAdaptation, HybridAdaptation,
+                                     StaticLookahead, Strategy)
+from .errors import CompositionError
+
+STRATEGIES = ("dynamic", "static", "hybrid")
+
+
+@dataclass
+class ElasticPolicy:
+    """Validated, declarative description of how one stage scales.
+
+    ``strategy`` selects the paper's allocation algorithm; the remaining
+    fields parameterize it.  Validation happens in ``__post_init__`` so a
+    bad policy fails at composition time, not when the controller ticks.
+    """
+
+    strategy: str = "dynamic"
+    max_cores: int = 64
+    # dynamic (Algorithm 1)
+    threshold: float = 0.1
+    drain_horizon: float = 30.0
+    # static look-ahead hints (required for strategy="static"/"hybrid")
+    latency: Optional[float] = None
+    expected_window_messages: Optional[float] = None
+    window_duration: Optional[float] = None
+    epsilon: float = 0.0
+    # hybrid switching
+    hinted_rate: Optional[Callable[[float], float]] = None
+    veer_threshold: float = 0.5
+    latency_slo: float = 20.0
+
+    def __post_init__(self) -> None:
+        if self.strategy not in STRATEGIES:
+            raise CompositionError(
+                f"unknown elasticity strategy {self.strategy!r}; "
+                f"one of {sorted(STRATEGIES)}")
+        if int(self.max_cores) < 1:
+            raise CompositionError("elastic max_cores must be >= 1")
+        if self.drain_horizon <= 0:
+            raise CompositionError("elastic drain_horizon must be > 0")
+        if self.strategy in ("static", "hybrid"):
+            missing = [k for k in ("latency", "expected_window_messages",
+                                   "window_duration")
+                       if getattr(self, k) is None]
+            if missing:
+                raise CompositionError(
+                    f"strategy={self.strategy!r} needs static hints: "
+                    f"missing {missing}")
+            if self.latency <= 0:
+                raise CompositionError("static hint latency must be > 0")
+            if self.expected_window_messages < 0:
+                raise CompositionError(
+                    "static hint expected_window_messages must be >= 0")
+            if self.window_duration + self.epsilon <= 0:
+                raise CompositionError(
+                    "static hints need window_duration + epsilon > 0")
+        if self.strategy == "hybrid" and self.hinted_rate is None:
+            raise CompositionError(
+                "strategy='hybrid' needs hinted_rate (callable t -> msgs/s)")
+
+    # -- compilation ---------------------------------------------------------
+    def build_strategy(self) -> Strategy:
+        """Compile this declaration into a live Strategy object."""
+        if self.strategy == "dynamic":
+            return DynamicAdaptation(threshold=self.threshold,
+                                     max_cores=self.max_cores,
+                                     drain_horizon=self.drain_horizon)
+        static = StaticLookahead(self.latency, self.expected_window_messages,
+                                 self.window_duration, self.epsilon)
+        # StaticLookahead has no cap of its own; the declared ceiling
+        # applies to every strategy (also caps hybrid's static arm)
+        static.cores = min(static.cores, int(self.max_cores))
+        if self.strategy == "static":
+            return static
+        dynamic = DynamicAdaptation(threshold=self.threshold,
+                                    max_cores=self.max_cores,
+                                    drain_horizon=self.drain_horizon)
+        return HybridAdaptation(static, dynamic, self.hinted_rate,
+                                veer_threshold=self.veer_threshold,
+                                latency_slo=self.latency_slo)

@@ -1,0 +1,400 @@
+"""Session: one handle to run, observe, and mutate a Floe dataflow.
+
+``with flow.session() as s:`` compiles the flow, starts the
+:class:`~repro.core.engine.Coordinator`, turns every ``.elastic(...)``
+annotation into a managed :class:`AdaptationController`, and guarantees
+teardown of both on exit — replacing the legacy three-object dance
+(``FloeGraph`` + ``Coordinator`` + ``AdaptationController``).
+
+Runtime mutation is transactional (§II.B made first-class)::
+
+    with s.recompose() as tx:
+        tx.swap("parse", NewParse)         # dynamic task update
+        tx.rewire("annotate", "audit", src_port="meter")
+        tx.unwire("annotate", "insert", src_port="meter")
+        tx.scale("insert", cores=4)        # fine-grained resource control
+
+Staged operations are validated against a scratch copy of the graph at
+commit; on any validation failure *nothing* is applied
+(:class:`RecompositionError`, automatic rollback).  On success the affected
+flakes are drained together, all changes land atomically through the
+engine's existing primitives (``swap_pellet`` / ``apply_wiring`` /
+``set_cores``), and the flakes resume — in-flight messages finish to
+completion and queued messages are preserved.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+from ..adaptation.controller import AdaptationController
+from ..core.engine import Container, Coordinator
+from ..core.graph import FloeGraph
+from ..core.message import Message, landmark
+from ..core.patterns import SPLITS
+from ..core.pellet import Pellet
+from .builder import Flow, StageHandle
+from .errors import RecompositionError, SessionStateError
+
+Target = Union[str, StageHandle]
+
+
+def _name(target: Target) -> str:
+    return target.name if isinstance(target, StageHandle) else target
+
+
+class Session:
+    """Live execution handle over a :class:`Flow` (context manager)."""
+
+    def __init__(self, flow: Flow, *,
+                 containers: Optional[List[Container]] = None,
+                 channel_capacity: int = 100_000,
+                 speculative_timeout: Optional[float] = None,
+                 sample_interval: float = 0.25,
+                 drain_timeout: float = 60.0):
+        self.flow = flow
+        self._containers = containers
+        self._channel_capacity = channel_capacity
+        self._speculative_timeout = speculative_timeout
+        self._sample_interval = sample_interval
+        self.drain_timeout = drain_timeout
+        self._coord: Optional[Coordinator] = None
+        self._controller: Optional[AdaptationController] = None
+        self._tx_lock = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+    def open(self) -> "Session":
+        if self._coord is not None:
+            raise SessionStateError("session already open")
+        graph = self.flow.build()
+        coord = Coordinator(graph, containers=self._containers,
+                            channel_capacity=self._channel_capacity,
+                            speculative_timeout=self._speculative_timeout)
+        coord.start()
+        self._coord = coord
+        strategies = {s.name: s.policy.build_strategy()
+                      for s in self.flow.stages.values()
+                      if s.policy is not None}
+        if strategies:
+            self._controller = AdaptationController(
+                coord, strategies,
+                sample_interval=self._sample_interval).start()
+        return self
+
+    def close(self) -> None:
+        """Idempotent teardown: controller first, then the engine."""
+        ctrl, self._controller = self._controller, None
+        coord, self._coord = self._coord, None
+        try:
+            if ctrl is not None:
+                ctrl.stop()
+        finally:
+            if coord is not None:
+                coord.stop()
+
+    def __enter__(self) -> "Session":
+        return self.open()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    @property
+    def coordinator(self) -> Coordinator:
+        """Escape hatch to the underlying engine (legacy interop)."""
+        if self._coord is None:
+            raise SessionStateError(
+                "session is not open; use 'with flow.session() as s:'")
+        return self._coord
+
+    @property
+    def controller(self) -> Optional[AdaptationController]:
+        """The managed elasticity controller (None when no stage is
+        ``.elastic``)."""
+        return self._controller
+
+    # -- I/O -----------------------------------------------------------------
+    def inject(self, target: Target, payload: Any, *,
+               port: Optional[str] = None, key: Any = None) -> None:
+        name = _name(target)
+        flake = self.coordinator.flakes[name]
+        port = port or self._default_in(name)
+        flake.enqueue(port, Message(payload=payload, key=key))
+
+    def inject_landmark(self, target: Target, tag: Any = None, *,
+                        port: Optional[str] = None) -> None:
+        name = _name(target)
+        port = port or self._default_in(name)
+        self.coordinator.flakes[name].enqueue(port, landmark(tag))
+
+    def _default_in(self, name: str) -> str:
+        stage = self.flow.stages.get(name)
+        if stage is not None:
+            return stage.default_in()
+        return "in"
+
+    def start_bsp(self, workers: Sequence[Target], *,
+                  seeds: Optional[Dict[int, List[Any]]] = None) -> None:
+        """Seed worker inboxes (superstep 0) and broadcast tick 0."""
+        from ..core.bsp import start_bsp
+        start_bsp(self.coordinator, [_name(w) for w in workers], seeds=seeds)
+
+    # -- observation ----------------------------------------------------------
+    def quiesce(self, timeout: Optional[float] = None) -> bool:
+        """Block until no message is in flight anywhere in the graph."""
+        return self.coordinator.run_until_quiescent(
+            timeout=self.drain_timeout if timeout is None else timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> List[Message]:
+        """Quiesce, then return (and clear) collected sink outputs.
+
+        Raises ``TimeoutError`` if the graph does not go quiescent — a
+        silent partial drain would hide lost messages.
+        """
+        if not self.quiesce(timeout):
+            raise TimeoutError(
+                f"dataflow did not quiesce within "
+                f"{self.drain_timeout if timeout is None else timeout}s; "
+                f"stats={self.stats()}")
+        return self.coordinator.drain_outputs()
+
+    def results(self, timeout: Optional[float] = None) -> List[Any]:
+        """``drain()`` filtered down to data payloads."""
+        return [m.payload for m in self.drain(timeout) if m.is_data()]
+
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        return self.coordinator.stats()
+
+    @property
+    def errors(self) -> List:
+        return self.coordinator.errors
+
+    def cores(self, target: Target) -> int:
+        return self.coordinator.flakes[_name(target)].cores
+
+    # -- mutation --------------------------------------------------------------
+    def scale(self, target: Target, *, cores: int) -> None:
+        """Immediate fine-grained resource change for one stage."""
+        self.coordinator.set_cores(_name(target), cores)
+
+    def update(self, target: Target, factory: Callable[[], Pellet], *,
+               mode: str = "sync") -> None:
+        """Single-pellet dynamic task update (thin wrapper; for multi-op
+        changes use :meth:`recompose`)."""
+        self.coordinator.update_pellet(_name(target), factory, mode=mode)
+
+    def recompose(self) -> "Recomposition":
+        """Open a transactional recomposition (use as a context manager).
+
+        Changes apply to this running session only; the :class:`Flow`
+        blueprint is unchanged (a later session starts from the original
+        composition).
+        """
+        return Recomposition(self)
+
+
+class Recomposition:
+    """Staged, validated, atomically-committed dataflow mutation.
+
+    Stage any number of ``swap`` / ``rewire`` / ``unwire`` / ``scale``
+    operations; nothing touches the running graph until the ``with`` block
+    exits cleanly.  Validation failures raise :class:`RecompositionError`
+    with the live graph untouched.
+    """
+
+    def __init__(self, session: Session):
+        self.session = session
+        self._swaps: Dict[str, Callable[[], Pellet]] = {}
+        self._rewires: List[Dict[str, Any]] = []
+        self._unwires: List[Dict[str, Any]] = []
+        self._scales: Dict[str, int] = {}
+        self._validated_protos: Dict[str, Pellet] = {}
+        self._committed = False
+
+    # -- staging ----------------------------------------------------------------
+    def swap(self, target: Target, factory: Callable[[], Pellet]
+             ) -> "Recomposition":
+        """Stage a dynamic task update (same ports, new logic).
+
+        Like every pellet factory in the engine, ``factory`` may be
+        invoked more than once (port validation + instantiation, including
+        for transactions that later abort) — keep it cheap and free of
+        external side effects.
+        """
+        name = _name(target)
+        if name in self._swaps:
+            raise RecompositionError(f"stage {name!r} already swapped in "
+                                     "this transaction")
+        if not callable(factory):
+            raise RecompositionError(f"swap({name!r}): factory must be "
+                                     "callable")
+        self._swaps[name] = factory
+        return self
+
+    def rewire(self, src: Target, dst: Target, *,
+               src_port: str = "out", dst_port: str = "in",
+               split: str = "round_robin",
+               transport: str = "push") -> "Recomposition":
+        """Stage adding an edge between existing stages.
+
+        At commit all ``unwire`` ops apply before all ``rewire`` ops,
+        regardless of staging order — an unwire can only match edges that
+        existed before the transaction.
+        """
+        self._rewires.append(dict(src=_name(src), dst=_name(dst),
+                                  src_port=src_port, dst_port=dst_port,
+                                  split=split, transport=transport))
+        return self
+
+    def unwire(self, src: Target, dst: Target, *,
+               src_port: Optional[str] = None,
+               dst_port: Optional[str] = None) -> "Recomposition":
+        """Stage removing edge(s) between two stages (ports optional)."""
+        self._unwires.append(dict(src=_name(src), dst=_name(dst),
+                                  src_port=src_port, dst_port=dst_port))
+        return self
+
+    def scale(self, target: Target, *, cores: int) -> "Recomposition":
+        """Stage a core-count change."""
+        if int(cores) < 0:
+            raise RecompositionError("cores must be >= 0")
+        self._scales[_name(target)] = int(cores)
+        return self
+
+    # -- context manager ---------------------------------------------------------
+    def __enter__(self) -> "Recomposition":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            return  # user error inside the block: discard staged ops
+        if not self._committed:  # explicit tx.commit() already ran
+            self.commit()
+
+    # -- validation ---------------------------------------------------------------
+    def _validate(self, coord: Coordinator) -> FloeGraph:
+        """Apply staged ops to a scratch graph; raise before any live
+        change if anything is illegal.  Returns the validated graph."""
+        graph = coord.graph.copy()
+        protos: Dict[str, Pellet] = {}
+
+        def proto_of(name: str) -> Pellet:
+            if name not in protos:
+                protos[name] = (self._swaps[name]() if name in self._swaps
+                                else coord.flakes[name]._proto)
+            return protos[name]
+
+        for name, factory in self._swaps.items():
+            if name not in coord.flakes:
+                raise RecompositionError(f"swap: unknown stage {name!r}")
+            old = coord.flakes[name]._proto
+            try:
+                new = factory()
+            except TypeError as e:
+                raise RecompositionError(
+                    f"swap({name!r}): factory() failed ({e})") from e
+            if not isinstance(new, Pellet):
+                raise RecompositionError(
+                    f"swap({name!r}): factory produced "
+                    f"{type(new).__name__}, expected a Pellet")
+            if (tuple(new.in_ports) != tuple(old.in_ports)
+                    or tuple(new.out_ports) != tuple(old.out_ports)):
+                raise RecompositionError(
+                    f"swap({name!r}): port mismatch — a task update keeps "
+                    f"ports identical (old in={list(old.in_ports)} "
+                    f"out={list(old.out_ports)}, new "
+                    f"in={list(new.in_ports)} out={list(new.out_ports)})")
+            protos[name] = new
+            graph.vertices[name].factory = factory
+
+        for op in self._unwires:
+            before = len(graph.edges)
+            graph.edges = [
+                e for e in graph.edges
+                if not (e.src == op["src"] and e.dst == op["dst"]
+                        and (op["src_port"] is None
+                             or e.src_port == op["src_port"])
+                        and (op["dst_port"] is None
+                             or e.dst_port == op["dst_port"]))]
+            if len(graph.edges) == before:
+                raise RecompositionError(
+                    f"unwire: no edge {op['src']!r} -> {op['dst']!r} "
+                    f"(src_port={op['src_port']}, dst_port={op['dst_port']})")
+
+        for op in self._rewires:
+            for ep, role in ((op["src"], "source"), (op["dst"], "sink")):
+                if ep not in graph.vertices:
+                    raise RecompositionError(
+                        f"rewire: unknown {role} stage {ep!r}")
+            if op["split"] not in SPLITS:
+                raise RecompositionError(
+                    f"rewire: unknown split {op['split']!r}; "
+                    f"one of {sorted(SPLITS)}")
+            if op["src_port"] not in proto_of(op["src"]).out_ports:
+                raise RecompositionError(
+                    f"rewire: {op['src']!r} has no OUTPUT port "
+                    f"{op['src_port']!r}; "
+                    f"out={list(proto_of(op['src']).out_ports)}")
+            if op["dst_port"] not in proto_of(op["dst"]).in_ports:
+                raise RecompositionError(
+                    f"rewire: {op['dst']!r} has no INPUT port "
+                    f"{op['dst_port']!r}; "
+                    f"in={list(proto_of(op['dst']).in_ports)}")
+            existing = [e.split for e in graph.out_edges(op["src"],
+                                                         op["src_port"])]
+            if existing and any(s != op["split"] for s in existing):
+                raise RecompositionError(
+                    f"rewire: {op['src']}[{op['src_port']!r}] already "
+                    f"routes with split {existing[0]!r}, got "
+                    f"{op['split']!r}")
+            graph.connect(op["src"], op["dst"], src_port=op["src_port"],
+                          dst_port=op["dst_port"], split=op["split"],
+                          transport=op["transport"])
+
+        for name, cores in self._scales.items():
+            if name not in coord.flakes:
+                raise RecompositionError(f"scale: unknown stage {name!r}")
+            graph.vertices[name].cores = cores
+
+        try:
+            graph.validate()
+        except ValueError as e:
+            raise RecompositionError(f"post-change graph invalid: {e}") from e
+        # hand the already-built swap prototypes to the engine so each
+        # factory runs exactly once per commit
+        self._validated_protos = {n: protos[n] for n in self._swaps}
+        return graph
+
+    # -- commit ---------------------------------------------------------------------
+    def commit(self) -> None:
+        """Validate, then apply all staged changes atomically."""
+        if self._committed:
+            raise RecompositionError("transaction already committed")
+        self._committed = True
+        if not (self._swaps or self._rewires or self._unwires
+                or self._scales):
+            return
+        session = self.session
+        coord = session.coordinator
+        with session._tx_lock:
+            graph = self._validate(coord)     # raises -> nothing applied
+            rewired = bool(self._rewires or self._unwires)
+            affected = set(self._swaps)
+            for op in self._rewires + self._unwires:
+                affected.update((op["src"], op["dst"]))
+            try:
+                # the engine's §II.B primitive: drain the affected set
+                # together, abort-before-change on quiesce timeout, swap +
+                # rewire + rescale, landmark, resume
+                coord.transact(swaps=self._swaps,
+                               graph=graph if rewired else None,
+                               cores=self._scales,
+                               extra_drain=tuple(affected),
+                               quiesce_timeout=session.drain_timeout,
+                               swap_protos=self._validated_protos)
+            except TimeoutError as e:
+                raise RecompositionError(
+                    f"{e}; transaction aborted, nothing applied") from e
+            if not rewired:
+                # wiring unchanged: still adopt the validated graph so the
+                # coordinator reflects swapped factories / new core counts
+                coord.graph = graph

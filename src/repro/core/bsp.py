@@ -15,6 +15,10 @@ The same pattern at the SPMD layer is a ``shard_map`` step with an
 ``examples/stream_clustering.py`` for the distributed-LSH instantiation, and
 the synchronous data-parallel gradient all-reduce in ``launch/train.py``
 which is the degenerate one-superstep case).
+
+``add_bsp``/``start_bsp`` are the legacy graph-level helpers; new code
+should use the Session API combinator ``Flow.bsp(...)`` plus
+``Session.start_bsp(...)`` (``repro.api``).
 """
 from __future__ import annotations
 

@@ -32,7 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .graph import FloeGraph
 from .message import Message
-from .patterns import Split, make_split
+from .patterns import SPLITS, Split, make_split
 from .pellet import (Drop, FnPellet, KeyedEmit, Pellet, PullPellet,
                      PushPellet, TuplePellet, WindowPellet)
 
@@ -186,7 +186,12 @@ class Flake:
         self._pellet_lock = threading.RLock()  # guards factory swap
         self._paused = threading.Event()
         self._stop = threading.Event()
-        self._drain = threading.Event()        # sync update: block dispatch
+        #: sync update: block dispatch.  Refcounted (``_drain_acquire`` /
+        #: ``_drain_release``) so concurrent drainers (a sync task update
+        #: racing a recompose transaction) cannot cancel each other's drain.
+        self._drain = threading.Event()
+        self._drain_depth = 0
+        self._drain_lock = threading.Lock()
         self._sem = AdjustableSemaphore(max(1, cores * ALPHA))
         self._pool: Optional[ThreadPoolExecutor] = None
         self._thread: Optional[threading.Thread] = None
@@ -200,16 +205,14 @@ class Flake:
         #: delivered to the pellet only once a copy has arrived from every
         #: inbound edge (set by the coordinator during wiring).  Without this,
         #: a reducer fed by m mappers would flush m times per logical window.
+        #: The last swallowed copy is retained so a dynamic fan-in change can
+        #: complete a half-counted round instead of losing it.
         #: NOTE: do not send flush landmarks around cycles — back-edges count
         #: toward the in-degree and the round would never complete.
         self.in_degree = 1
         self._lm_count = 0
+        self._lm_pending: Optional[Message] = None
         self._lm_lock = threading.Lock()
-
-    # -- wiring --------------------------------------------------------------
-    def add_route(self, src_port: str, split: Split,
-                  targets: List[Tuple["Flake", str]]) -> None:
-        self.routes[src_port] = (split, targets)
 
     # -- lifecycle -----------------------------------------------------------
     def activate(self) -> None:
@@ -239,9 +242,22 @@ class Flake:
         self.cores = max(0, int(cores))
         self._sem.set_capacity(max(1, self.cores * ALPHA) if self.cores else 0)
 
+    def _drain_acquire(self) -> None:
+        with self._drain_lock:
+            self._drain_depth += 1
+            self._drain.set()
+
+    def _drain_release(self) -> None:
+        with self._drain_lock:
+            self._drain_depth = max(0, self._drain_depth - 1)
+            if self._drain_depth == 0:
+                self._drain.clear()
+        self._notify()
+
     # -- dynamic task update (§II.B) ------------------------------------------
     def swap_pellet(self, factory: Callable[[], Pellet], *,
-                    mode: str = "sync", emit_update_landmark: bool = True) -> None:
+                    mode: str = "sync", emit_update_landmark: bool = True,
+                    new_proto: Optional[Pellet] = None) -> None:
         """In-place task update without halting other pellets.
 
         sync  — stop dispatching, let in-flight messages finish to completion
@@ -250,18 +266,28 @@ class Flake:
         async — swap the factory immediately: new messages are processed by
                 the new logic while old in-flight instances run to completion
                 (outputs may interleave). Zero downtime.
+
+        ``new_proto`` lets callers that already instantiated/validated the
+        new pellet (``Coordinator.transact``) pass it in instead of paying
+        a second ``factory()`` call.
         """
         if mode not in ("sync", "async"):
             raise ValueError("mode must be 'sync' or 'async'")
-        new_proto = factory()
+        if new_proto is None:
+            new_proto = factory()
         if tuple(new_proto.in_ports) != tuple(self._proto.in_ports) or \
            tuple(new_proto.out_ports) != tuple(self._proto.out_ports):
             raise ValueError(
                 "in-place task update requires identical ports; use a "
                 "dynamic dataflow update instead (§II.B)")
         if mode == "sync":
-            self._drain.set()          # stop pulling new messages
-            self._wait_quiescent()     # in-flight finish; outputs delivered
+            self._drain_acquire()      # stop pulling new messages
+            # in-flight finish to completion; outputs delivered
+            if not self._wait_quiescent():
+                self._drain_release()
+                raise TimeoutError(
+                    f"flake {self.name!r} did not quiesce within 30s; "
+                    "task update aborted, nothing applied")
         with self._pellet_lock:
             old = self._proto
             self.factory = factory
@@ -279,8 +305,7 @@ class Flake:
             self._route(update_landmark(tag={"flake": self.name,
                                              "version": self.version}))
         if mode == "sync":
-            self._drain.clear()
-            self._notify()
+            self._drain_release()
 
     # -- input side ------------------------------------------------------------
     def enqueue(self, port: str, msg: Message) -> None:
@@ -290,8 +315,10 @@ class Flake:
             with self._lm_lock:
                 self._lm_count += 1
                 if self._lm_count < self.in_degree:
+                    self._lm_pending = msg
                     return  # swallow: wait for copies from remaining edges
                 self._lm_count = 0
+                self._lm_pending = None
         if self.engine is not None:
             self.engine._inflight_inc()
         self.stats.on_arrive()
@@ -329,7 +356,7 @@ class Flake:
                 self._wait_quiescent()
                 self._finish(item, credits, forward=True)
             elif proto.sequential or isinstance(proto, PullPellet):
-                self._run_task(kind, item, credits)
+                self._run_inline(kind, item, credits)
             else:
                 self._submit(kind, item, credits)
 
@@ -406,10 +433,23 @@ class Flake:
         return None
 
     # -- execution ---------------------------------------------------------------
+    def _run_inline(self, kind: str, item, credits: int) -> None:
+        """Run in the dispatch thread, visible to ``_wait_quiescent``.
+
+        Without the local in-flight accounting, a sequential/pull pellet
+        mid-compute would look quiescent to a concurrent sync update or
+        recompose commit.
+        """
+        self._inflight_inc_local()
+        try:
+            self._run_task(kind, item, credits)
+        finally:
+            self._inflight_dec_local()
+
     def _submit(self, kind: str, item, credits: int) -> None:
         if not self._sem.acquire(timeout=30):
             # no instance slot (cores may be 0) — run inline as fallback
-            self._run_task(kind, item, credits)
+            self._run_inline(kind, item, credits)
             return
         self._inflight_inc_local()
         fut = self._pool.submit(self._run_pooled, kind, item, credits)
@@ -565,11 +605,12 @@ class Flake:
             self._inflight -= 1
             self._inflight_cond.notify_all()
 
-    def _wait_quiescent(self, timeout: float = 30.0) -> None:
+    def _wait_quiescent(self, timeout: float = 30.0) -> bool:
         deadline = time.time() + timeout
         with self._inflight_cond:
-            self._inflight_cond.wait_for(lambda: self._inflight == 0,
-                                         timeout=max(0.0, deadline - time.time()))
+            return self._inflight_cond.wait_for(
+                lambda: self._inflight == 0,
+                timeout=max(0.0, deadline - time.time()))
 
 
 class Container:
@@ -668,20 +709,9 @@ class Coordinator:
                 name, v.factory, cores=v.cores, engine=self,
                 channel_capacity=self._channel_capacity,
                 speculative_timeout=self._speculative_timeout)
-        # wire: group out-edges by (src, src_port); one split policy per group
-        for name in order:
-            flake = self.flakes[name]
-            by_port: Dict[str, List] = {}
-            for e in self.graph.out_edges(name):
-                by_port.setdefault(e.src_port, []).append(e)
-            for port, edges in by_port.items():
-                split = make_split(edges[0].split)
-                targets = [(self.flakes[e.dst], e.dst_port) for e in edges]
-                flake.add_route(port, split, targets)
-        # landmark alignment: in-degree = number of inbound edges
-        for name in order:
-            n_in = len(self.graph.in_edges(name))
-            self.flakes[name].in_degree = max(1, n_in)
+        # wire routes + landmark in-degrees (same derivation as a dynamic
+        # dataflow update, so started and recomposed sessions never drift)
+        self.apply_wiring(self.graph)
         # activate in wiring order: downstream pellets first (§III)
         for name in order:
             self.flakes[name].activate()
@@ -730,29 +760,170 @@ class Coordinator:
 
         All named pellets are drained together (slowest pellet bounds the
         synchronization cost, as the paper notes), then swapped
-        simultaneously, then resumed together.
+        simultaneously, then resumed together.  In sync mode a pellet that
+        cannot quiesce within 30s raises ``TimeoutError`` and NOTHING is
+        applied (abort-before-change; previously the swap proceeded after a
+        silent best-effort wait).
         """
-        flakes = [self.flakes[n] for n in factories]
         if mode == "sync":
-            for f in flakes:
-                f._drain.set()
-            for f in flakes:
-                f._wait_quiescent()
+            self.transact(swaps=factories)
+            return
         for n, factory in factories.items():
             self.flakes[n].swap_pellet(factory, mode="async",
                                        emit_update_landmark=False)
-        # one coordinated update landmark from each updated pellet
         from .message import update_landmark
         for n in factories:
-            self.flakes[n]._route(update_landmark(tag={"subgraph": list(factories)}),
-                                  broadcast=True)
-        if mode == "sync":
+            self.flakes[n]._route(
+                update_landmark(tag={"subgraph": list(factories)}),
+                broadcast=True)
+
+    def transact(self, *, swaps: Optional[Dict[str, Callable[[], Pellet]]] = None,
+                 graph: Optional[FloeGraph] = None,
+                 cores: Optional[Dict[str, int]] = None,
+                 extra_drain: Tuple[str, ...] = (),
+                 quiesce_timeout: float = 30.0,
+                 swap_protos: Optional[Dict[str, Pellet]] = None) -> None:
+        """Coordinated §II.B change set applied as one atomic step.
+
+        Drains the union of swapped pellets and ``extra_drain`` together,
+        aborts with ``TimeoutError`` (before any change) if a flake cannot
+        quiesce within ``quiesce_timeout``, then swaps pellet logic, adopts
+        ``graph``'s wiring (if given), applies core changes, emits one
+        coordinated update landmark per swapped pellet, and resumes.  This
+        is the engine primitive behind ``update_subgraph`` (sync mode) and
+        the Session API's transactional ``recompose``.
+        """
+        swaps = dict(swaps or {})
+        cores = dict(cores or {})
+        # validate EVERYTHING up front so a bad input aborts before any
+        # change is applied (the atomicity contract above)
+        protos = dict(swap_protos or {})
+        for n in {*swaps, *cores, *extra_drain}:
+            if n not in self.flakes:
+                raise ValueError(f"transact: unknown flake {n!r}")
+        for n, factory in swaps.items():
+            new_proto = protos.get(n) or factory()
+            protos[n] = new_proto
+            old = self.flakes[n]._proto
+            if tuple(new_proto.in_ports) != tuple(old.in_ports) or \
+               tuple(new_proto.out_ports) != tuple(old.out_ports):
+                raise ValueError(
+                    f"transact: swap of {n!r} requires identical ports "
+                    "(use a dynamic dataflow update instead, §II.B)")
+        cores = {n: int(c) for n, c in cores.items()}
+        if graph is not None:
+            graph.validate()
+            if set(graph.vertices) != set(self.flakes):
+                raise ValueError(
+                    "transact: graph must name the same vertex set")
+            for e in graph.edges:
+                if e.split not in SPLITS:
+                    raise ValueError(f"transact: unknown split {e.split!r}")
+        affected = set(swaps) | set(extra_drain)
+        flakes = [self.flakes[n] for n in sorted(affected)]
+        for f in flakes:
+            f._drain_acquire()
+        try:
+            # ONE shared deadline across all flakes, so an abort happens
+            # within quiesce_timeout wall-clock, not N x quiesce_timeout
+            deadline = time.time() + quiesce_timeout
             for f in flakes:
-                f._drain.clear()
-                f._notify()
+                if not f._wait_quiescent(
+                        timeout=max(0.0, deadline - time.time())):
+                    # abort BEFORE any change: atomicity over progress —
+                    # committing with messages still in flight would let
+                    # old outputs route along the new topology
+                    raise TimeoutError(
+                        f"flake {f.name!r} did not quiesce within "
+                        f"{quiesce_timeout}s")
+            for n, factory in swaps.items():
+                self.flakes[n].swap_pellet(factory, mode="async",
+                                           emit_update_landmark=False,
+                                           new_proto=protos[n])
+            if graph is not None:
+                self.apply_wiring(graph)
+            for n, c in cores.items():
+                self.set_cores(n, c)
+            # one coordinated update landmark from each swapped pellet
+            if swaps:
+                from .message import update_landmark
+                for n in swaps:
+                    self.flakes[n]._route(
+                        update_landmark(tag={"subgraph": sorted(swaps),
+                                             "flake": n}),
+                        broadcast=True)
+        finally:
+            for f in flakes:
+                f._drain_release()
 
     def set_cores(self, name: str, cores: int) -> None:
         self.flakes[name].set_cores(cores)
+
+    def apply_wiring(self, graph: FloeGraph) -> None:
+        """Dynamic dataflow update of the edge set (§II.B).
+
+        Re-derives every flake's routes and landmark in-degree from
+        ``graph`` (which must name the same vertices) and adopts it as the
+        coordinator's graph.  Callers are responsible for quiescing the
+        affected flakes first — ``Session.recompose`` drains them, swaps
+        wiring, then resumes, so no in-flight message observes a half
+        rewired graph.
+        """
+        graph.validate()
+        if set(graph.vertices) != set(self.flakes):
+            raise ValueError(
+                "apply_wiring requires the same vertex set; "
+                f"got {sorted(graph.vertices)} vs {sorted(self.flakes)}")
+
+        def in_sig(g: FloeGraph, name: str) -> List[Tuple[str, str, str]]:
+            return sorted((e.src, e.src_port, e.dst_port)
+                          for e in g.in_edges(name))
+
+        def port_sig(g: FloeGraph, name: str, port: str):
+            return sorted((e.dst, e.dst_port, e.split)
+                          for e in g.out_edges(name, port))
+
+        old_in = {n: in_sig(self.graph, n) for n in self.flakes}
+        for name, flake in self.flakes.items():
+            by_port: Dict[str, List] = {}
+            for e in graph.out_edges(name):
+                by_port.setdefault(e.src_port, []).append(e)
+            routes: Dict[str, Tuple[Split, List[Tuple[Flake, str]]]] = {}
+            for port, edges in by_port.items():
+                # reuse the existing route object when this port's edge
+                # group is unchanged, so stateful split policies (round-
+                # robin counters) are not reset by unrelated rewires
+                if port in flake.routes and \
+                        port_sig(graph, name, port) == \
+                        port_sig(self.graph, name, port):
+                    routes[port] = flake.routes[port]
+                    continue
+                split = make_split(edges[0].split)
+                targets = [(self.flakes[e.dst], e.dst_port) for e in edges]
+                routes[port] = (split, targets)
+            flake.routes = routes
+        for name, flake in self.flakes.items():
+            n_in = max(1, len(graph.in_edges(name)))
+            if in_sig(graph, name) == old_in[name]:
+                flake.in_degree = n_in
+                continue
+            # inbound edges changed (even at equal fan-in): complete any
+            # partially-counted landmark round now — already-swallowed
+            # copies belong to the old topology, and copies still to come
+            # may never arrive under the new one.  Flushing early beats
+            # losing the round (a reducer window that never flushes).
+            # Copies of that round still in flight from old edges can cause
+            # at most one extra early flush — best-effort, like all §II.B
+            # changes racing in-flight control messages.
+            with flake._lm_lock:
+                flake.in_degree = n_in
+                pending, flake._lm_pending = flake._lm_pending, None
+                flake._lm_count = 0
+            if pending is not None and flake.inputs:
+                self._inflight_inc()
+                flake.stats.on_arrive()
+                next(iter(flake.inputs.values())).put(pending)
+        self.graph = graph
 
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> Dict[str, Dict[str, Any]]:

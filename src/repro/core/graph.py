@@ -125,13 +125,22 @@ class FloeGraph:
             if e.src not in names or e.dst not in names:
                 raise ValueError(f"dangling edge {e}")
         # port existence is checked lazily at instantiation time because
-        # factories may be swapped dynamically (§II.B); duplicate sync-merge
-        # wiring is checked here:
-        for name in names:
-            ports = {}
-            for e in self.in_edges(name):
-                ports.setdefault(e.dst_port, []).append(e)
-        # multiple edges into the same port = interleaved merge -> legal
+        # factories may be swapped dynamically (§II.B); multiple edges into
+        # the same port form an interleaved merge and are legal.  The Session
+        # API builder (repro.api) validates ports and splits eagerly.
+
+    def copy(self) -> "FloeGraph":
+        """Shallow-copy vertices/edges into a new graph (factories shared).
+
+        Used by transactional recomposition to validate staged changes
+        against a scratch graph before touching the live one.
+        """
+        g = FloeGraph(self.name)
+        for v in self.vertices.values():
+            g.vertices[v.name] = Vertex(v.name, v.factory, v.cores,
+                                        dict(v.annotations))
+        g.edges = [Edge(**vars(e)) for e in self.edges]
+        return g
 
     # -- serialization (paper used XML; dict/JSON carries the same info) ----
     def to_dict(self) -> Dict[str, Any]:

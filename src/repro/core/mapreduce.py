@@ -10,6 +10,11 @@ data, and flush on user-defined **landmark** messages.
 Reducers can feed further reducers (MapReduce+: one Map stage, 1+ Reduce
 stages) and can appear anywhere in a dataflow composition, including in
 cycles (used by the stream-clustering case study, Fig. 3b).
+
+``add_mapreduce`` is the legacy graph-level helper; new code should use the
+Session API combinator ``Flow.mapreduce(...)`` (``repro.api``), which wires
+the same topology with eager port/split validation and returns typed stage
+handles.
 """
 from __future__ import annotations
 

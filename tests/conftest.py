@@ -1,0 +1,87 @@
+"""Shared test configuration: per-test ceilings + JAX compile cache.
+
+* Every test runs under a wall-clock ceiling (default 120 s) enforced with a
+  SIGALRM watchdog, so a hung dataflow fails fast instead of wedging CI.
+  Override per test with ``@pytest.mark.timeout(seconds)`` — the marker is
+  compatible with pytest-timeout, which takes over transparently when
+  installed (we then skip the built-in watchdog).
+* The JAX persistent compilation cache is enabled (repo-local
+  ``.jax_cache/``): the model/kernel smoke tests are dominated by XLA
+  compilation, so warm reruns and cached CI runs cut minutes of wall time.
+"""
+import math
+import os
+import pathlib
+import signal
+import threading
+
+import pytest
+
+# -- JAX persistent compilation cache (must be set before jax imports) -------
+_CACHE = pathlib.Path(__file__).resolve().parent.parent / ".jax_cache"
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", str(_CACHE))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.5")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+
+DEFAULT_TIMEOUT_S = 120.0
+
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test wall-clock ceiling (watchdog)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    """SIGALRM-based per-test ceiling (pytest-timeout fallback).
+
+    Only active on the main thread of a POSIX process; elsewhere (or when
+    the real pytest-timeout plugin is installed) it steps aside.
+    """
+    marker = item.get_closest_marker("timeout")
+    seconds = float(marker.args[0]) if marker and marker.args \
+        else DEFAULT_TIMEOUT_S
+    usable = (not _HAVE_PYTEST_TIMEOUT
+              and hasattr(signal, "SIGALRM")
+              and threading.current_thread() is threading.main_thread()
+              and seconds > 0)
+    if not usable:
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the {seconds:.0f}s per-test ceiling")
+
+    old_handler = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(max(1, math.ceil(seconds)))
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
+
+
+# -- polling helpers (replace sleep-based waits in dataflow tests) ------------
+
+def wait_until(predicate, *, timeout: float = 10.0,
+               interval: float = 0.005) -> bool:
+    """Poll ``predicate`` until truthy or ``timeout``; returns the verdict.
+
+    Use instead of fixed ``time.sleep`` so tests advance the moment the
+    engine reaches the awaited state.
+    """
+    import time
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return bool(predicate())

@@ -211,9 +211,9 @@ def test_live_controller_scales_real_flake():
     coord = Coordinator(g).start()
     ctrl = AdaptationController(
         coord, {"p": DynamicAdaptation(max_cores=8, drain_horizon=1.0)},
-        sample_interval=0.2).start()
+        sample_interval=0.1).start()
     try:
-        t_end = time.time() + 2.0
+        t_end = time.time() + 1.2
         while time.time() < t_end:      # offered load >> 1-core capacity
             coord.inject("p", 1)
             time.sleep(0.002)

@@ -1,0 +1,482 @@
+"""Session API: fluent composition, sessions, transactional recomposition,
+and declarative elasticity (ISSUE 1 tentpole)."""
+import threading
+import time
+
+import pytest
+
+from repro import (CompositionError, Coordinator, Drop, FloeGraph, Flow,
+                   FnPellet, FnMapper, FnReducer, PushPellet,
+                   RecompositionError, SessionStateError, TuplePellet)
+
+
+class Switch(PushPellet):
+    out_ports = ("small", "large")
+
+    def compute(self, x):
+        return {"small": x} if x < 50 else {"large": x}
+
+
+class Tag(PushPellet):
+    def __init__(self, tag="v1"):
+        self.tag = tag
+
+    def compute(self, x):
+        return (self.tag, x)
+
+
+# ---------------------------------------------------------------------------
+# eager composition-time validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_port_rejected_at_subscript():
+    flow = Flow("t")
+    sw = flow.pellet("sw", Switch)
+    with pytest.raises(CompositionError, match="no port 'typo'"):
+        sw["typo"]
+
+
+def test_connect_to_output_port_rejected():
+    """Direction typing: an out-port cannot be used as a sink."""
+    flow = Flow("t")
+    sw = flow.pellet("sw", Switch)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="no INPUT port 'large'"):
+        sink >> sw["large"]
+
+
+def test_connect_from_input_port_rejected():
+    flow = Flow("t")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="no OUTPUT port 'in'"):
+        a["in"] >> b
+
+
+def test_unknown_split_rejected_eagerly():
+    flow = Flow("t")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="unknown split 'sharded'"):
+        a.split("sharded")
+
+
+def test_conflicting_splits_on_one_fanout_group_rejected():
+    flow = Flow("t")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x))
+    c = flow.pellet("c", lambda: FnPellet(lambda x: x))
+    a.split("hash") >> b
+    with pytest.raises(CompositionError, match="conflicting splits"):
+        a.split("duplicate") >> c
+
+
+def test_duplicate_stage_name_rejected():
+    flow = Flow("t")
+    flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="duplicate stage"):
+        flow.pellet("a", lambda: FnPellet(lambda x: x))
+
+
+def test_multi_out_stage_requires_explicit_port():
+    flow = Flow("t")
+    sw = flow.pellet("sw", Switch)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="multiple output ports"):
+        sw >> sink
+
+
+def test_sync_merge_fanin_gap_rejected_at_build():
+    class Join(TuplePellet):
+        in_ports = ("left", "right")
+
+        def compute(self, inputs):
+            return inputs
+
+    flow = Flow("t")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    j = flow.pellet("join", Join)
+    a >> j["left"]                      # "right" never fed
+    with pytest.raises(CompositionError, match="stall alignment"):
+        flow.build()
+
+
+def test_bad_elastic_policy_rejected_eagerly():
+    flow = Flow("t")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with pytest.raises(CompositionError, match="unknown elasticity strategy"):
+        a.elastic(strategy="magic")
+    with pytest.raises(CompositionError, match="static hints"):
+        a.elastic(strategy="static")
+    with pytest.raises(CompositionError, match="window_duration"):
+        a.elastic(strategy="static", latency=1.0,
+                  expected_window_messages=10, window_duration=0.0)
+
+
+def test_static_policy_respects_max_cores():
+    from repro.api.policies import ElasticPolicy
+    strat = ElasticPolicy(strategy="static", max_cores=4, latency=2.0,
+                          expected_window_messages=400,
+                          window_duration=1.0).build_strategy()
+    assert strat.cores == 4          # uncapped formula would demand 200
+
+
+def test_flow_compiles_to_floegraph():
+    flow = Flow("compile")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x), cores=2)
+    sw = flow.pellet("sw", Switch)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    src >> sw
+    sw["small"] >> sink
+    sw["large"].split("hash") >> sink
+    g = flow.build()
+    assert isinstance(g, FloeGraph)
+    assert set(g.vertices) == {"src", "sw", "sink"}
+    assert g.vertices["src"].cores == 2
+    (large_edge,) = g.out_edges("sw", "large")
+    assert large_edge.split == "hash"
+    # the compiled graph still runs on the legacy Coordinator
+    coord = Coordinator(g).start()
+    try:
+        coord.inject("src", 7)
+        assert coord.run_until_quiescent(timeout=30)
+        assert [m.payload for m in coord.drain_outputs()] == [7]
+    finally:
+        coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_session_context_manager_teardown():
+    flow = Flow("t")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    with flow.session() as s:
+        coord = s.coordinator
+        s.inject(src, 1)
+        assert s.results() == [1]
+        threads = [f._thread for f in coord.flakes.values()]
+        assert all(t.is_alive() for t in threads)
+    # guaranteed teardown: dispatcher threads stopped, handle invalidated
+    assert all(not t.is_alive() for t in threads)
+    with pytest.raises(SessionStateError):
+        s.coordinator
+
+
+def test_session_teardown_on_exception():
+    flow = Flow("t")
+    flow.pellet("src", lambda: FnPellet(lambda x: x))
+    with pytest.raises(RuntimeError, match="boom"):
+        with flow.session() as s:
+            coord = s.coordinator
+            raise RuntimeError("boom")
+    assert all(not f._thread.is_alive() for f in coord.flakes.values())
+
+
+def test_session_drain_raises_on_timeout():
+    class Stuck(PushPellet):
+        def compute(self, x):
+            time.sleep(1.0)
+            return x
+
+    flow = Flow("t")
+    src = flow.pellet("src", Stuck)
+    with flow.session(drain_timeout=0.2) as s:
+        s.inject(src, 1)
+        with pytest.raises(TimeoutError, match="did not quiesce"):
+            s.drain()
+
+
+def test_mapreduce_combinator_wordcount():
+    flow = Flow("wc")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x, sequential=True))
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    flow.mapreduce(
+        prefix="wc",
+        mapper=lambda: FnMapper(lambda line: [(w, 1) for w in line.split()]),
+        reducer=lambda: FnReducer(lambda: 0, lambda a, v: a + v),
+        n_mappers=2, n_reducers=3, source=src, sink=sink)
+    with flow.session() as s:
+        for line in ["a b a", "b c", "a c c", "d"]:
+            s.inject(src, line)
+        s.inject_landmark(src)
+        counts = dict(p for p in s.results() if isinstance(p, tuple))
+        assert counts == {"a": 3, "b": 2, "c": 3, "d": 1}
+        assert not s.errors
+
+
+def test_bsp_combinator_supersteps():
+    def logic(wid, step, state, inbox):
+        state = (state or 0) + 1
+        return state, [], state >= 3
+
+    flow = Flow("bsp")
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    workers, _ = flow.bsp(prefix="bsp", n_workers=3, logic=logic, sink=sink)
+    with flow.session() as s:
+        s.start_bsp(workers)
+        results = s.results()
+        assert not s.errors
+        assert results and results[0]["supersteps"] == 3
+
+
+# ---------------------------------------------------------------------------
+# transactional recomposition
+# ---------------------------------------------------------------------------
+
+def _three_stage_flow():
+    flow = Flow("recompose")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x, sequential=True))
+    sw = flow.pellet("sw", Switch)
+    tag = flow.pellet("tag", lambda: Tag("v1"), cores=1)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    src >> sw
+    sw["small"] >> tag
+    tag >> sink
+    return flow, src, sw, tag, sink
+
+
+def test_recompose_swap_rewire_scale_atomically():
+    """One transaction: swap a pellet + add an edge + rescale cores —
+    committed together, messages in flight before/after all delivered."""
+    flow, src, sw, tag, sink = _three_stage_flow()
+    with flow.session() as s:
+        s.inject(src, 3)                      # small -> tag(v1) -> sink
+        s.inject(src, 70)                     # large -> (dropped: no route)
+        out_before = s.results()
+        assert ("v1", 3) in out_before
+        with s.recompose() as tx:
+            tx.swap(tag, lambda: Tag("v2"))
+            tx.rewire(sw, sink, src_port="large", dst_port="in")
+            tx.scale(tag, cores=4)
+        s.inject(src, 5)                      # small -> tag(v2)
+        s.inject(src, 99)                     # large -> now wired to sink
+        out = [p for p in s.results() if isinstance(p, (tuple, int))]
+        assert ("v2", 5) in out
+        assert 99 in out
+        assert s.cores(tag) == 4
+        assert s.coordinator.flakes["tag"].version == 1
+        assert not s.errors
+
+
+def test_recompose_does_not_drop_inflight_messages():
+    """Messages being processed while the transaction commits finish to
+    completion and are delivered — no drops, no duplicates."""
+    gate = threading.Event()
+
+    class SlowTag(PushPellet):
+        def compute(self, x):
+            gate.wait(timeout=10)
+            return ("slow", x)
+
+    flow = Flow("inflight")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x, sequential=True))
+    mid = flow.pellet("mid", SlowTag, cores=2)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    src >> mid
+    mid >> sink
+    with flow.session() as s:
+        for i in range(4):
+            s.inject(src, i)
+        time.sleep(0.2)                      # instances now blocked in-flight
+
+        committed = threading.Event()
+
+        def do_tx():
+            with s.recompose() as tx:
+                tx.swap(mid, lambda: Tag("new"))
+                tx.scale(mid, cores=3)
+            committed.set()
+
+        t = threading.Thread(target=do_tx, daemon=True)
+        t.start()
+        time.sleep(0.2)
+        assert not committed.is_set()        # commit blocked on the drain
+        gate.set()
+        t.join(timeout=20)
+        assert committed.is_set()
+        s.inject(src, 9)
+        out = [p for p in s.results() if isinstance(p, tuple)]
+        # all 4 in-flight messages delivered under the OLD logic, new after
+        assert sorted(p for p in out if p[0] == "slow") == \
+            [("slow", i) for i in range(4)]
+        assert ("new", 9) in out
+        assert not s.errors
+
+
+def test_recompose_validation_failure_rolls_back():
+    flow, src, sw, tag, sink = _three_stage_flow()
+    with flow.session() as s:
+        s.inject(src, 3)
+        assert ("v1", 3) in s.results()
+        with pytest.raises(RecompositionError, match="no OUTPUT port"):
+            with s.recompose() as tx:
+                tx.swap(tag, lambda: Tag("v2"))       # valid...
+                tx.scale(tag, cores=8)                # valid...
+                tx.rewire(sw, sink, src_port="nope")  # ...but this is not
+        # NOTHING was applied: same logic, same cores, same wiring
+        s.inject(src, 4)
+        assert ("v1", 4) in s.results()
+        assert s.cores(tag) == 1
+        assert s.coordinator.flakes["tag"].version == 0
+
+
+def test_recompose_swap_port_mismatch_rolls_back():
+    flow, src, sw, tag, sink = _three_stage_flow()
+    with flow.session() as s:
+        with pytest.raises(RecompositionError, match="port mismatch"):
+            with s.recompose() as tx:
+                tx.swap(tag, Switch)
+        assert s.coordinator.flakes["tag"].version == 0
+
+
+def test_recompose_exception_in_block_discards_staged_ops():
+    flow, src, sw, tag, sink = _three_stage_flow()
+    with flow.session() as s:
+        with pytest.raises(KeyError):
+            with s.recompose() as tx:
+                tx.swap(tag, lambda: Tag("v2"))
+                raise KeyError("user bug")
+        s.inject(src, 3)
+        assert ("v1", 3) in s.results()      # swap never applied
+
+
+def test_recompose_aborts_if_drain_times_out():
+    """A stage that cannot quiesce within drain_timeout aborts the whole
+    transaction before any change is applied (atomicity over progress)."""
+    gate = threading.Event()
+
+    class Blocked(PushPellet):
+        def compute(self, x):
+            gate.wait(timeout=10)
+            return ("old", x)
+
+    flow = Flow("stuck")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x, sequential=True))
+    mid = flow.pellet("mid", Blocked)
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    src >> mid
+    mid >> sink
+    with flow.session(drain_timeout=0.3) as s:
+        s.inject(src, 1)
+        time.sleep(0.15)                     # message now stuck in-flight
+        with pytest.raises(RecompositionError, match="did not quiesce"):
+            with s.recompose() as tx:
+                tx.swap(mid, lambda: Tag("new"))
+                tx.scale(mid, cores=4)
+        gate.set()
+        # nothing was applied; the in-flight message completes as 'old'
+        out = [p for p in s.results(timeout=10) if isinstance(p, tuple)]
+        assert out == [("old", 1)]
+        assert s.cores(mid) == 1
+        assert s.coordinator.flakes["mid"].version == 0
+
+
+def test_recompose_unwire_removes_edge():
+    flow, src, sw, tag, sink = _three_stage_flow()
+    with flow.session() as s:
+        with s.recompose() as tx:
+            tx.unwire(tag, sink)
+        s.inject(src, 3)
+        out = s.results()
+        # tag now has no route: its output is collected as a sink output
+        assert ("v1", 3) in out
+
+
+def test_recompose_abort_sees_inline_sequential_work():
+    """Sequential/pull pellets execute inline in the dispatch thread; a
+    message mid-compute there must still be visible to the commit drain."""
+    gate = threading.Event()
+
+    class SeqSlow(PushPellet):
+        sequential = True
+
+        def compute(self, x):
+            gate.wait(timeout=10)
+            return ("old", x)
+
+    flow = Flow("inline")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    mid = flow.pellet("mid", SeqSlow)
+    src >> mid
+    with flow.session(drain_timeout=0.3) as s:
+        s.inject(src, 1)
+        time.sleep(0.15)                    # mid-compute, inline
+        with pytest.raises(RecompositionError, match="did not quiesce"):
+            with s.recompose() as tx:
+                tx.swap(mid, lambda: Tag("new"))
+        gate.set()
+        assert [p for p in s.results(timeout=10)] == [("old", 1)]
+        assert s.coordinator.flakes["mid"].version == 0
+
+
+def test_recompose_fanin_change_completes_partial_landmark_round():
+    """A landmark round half-counted at a merge stage is flushed (not lost)
+    when a recompose changes that stage's inbound edges."""
+    from repro import WindowPellet
+
+    class SumWin(WindowPellet):
+        window = 100
+
+        def compute(self, payloads):
+            return sum(payloads)
+
+    flow = Flow("lm")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x, sequential=True))
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x, sequential=True))
+    w = flow.pellet("w", SumWin)
+    a >> w
+    b >> w
+    with flow.session() as s:
+        s.inject(a, 1)
+        s.inject(b, 2)
+        time.sleep(0.2)              # both buffered in the partial window
+        s.inject_landmark(a)         # 1 of 2 copies: swallowed mid-round
+        time.sleep(0.2)
+        with s.recompose() as tx:
+            tx.unwire(b, w)          # fan-in 2 -> 1
+        # the pending round was completed by the rewire: window flushed
+        out = [p for p in s.results(timeout=15) if isinstance(p, int)]
+        assert out == [3]
+        # and alignment is clean afterwards: a fresh round flushes alone
+        s.inject(a, 5)
+        s.inject_landmark(a)
+        out2 = [p for p in s.results(timeout=15) if isinstance(p, int)]
+        assert out2 == [5]
+        assert not s.errors
+
+
+# ---------------------------------------------------------------------------
+# declarative elasticity
+# ---------------------------------------------------------------------------
+
+def test_elastic_annotation_produces_live_scaling():
+    """.elastic(...) alone — no manual AdaptationController — scales a
+    loaded stage up and quiesces it back to zero when drained."""
+    def work(x):
+        time.sleep(0.02)
+        return x
+
+    flow = Flow("elastic")
+    p = flow.pellet("p", lambda: FnPellet(work), cores=1).elastic(
+        max_cores=8, strategy="dynamic", drain_horizon=1.0)
+    with flow.session(sample_interval=0.1) as s:
+        assert s.controller is not None      # managed automatically
+        t_end = time.time() + 1.5
+        while time.time() < t_end:           # offered load >> 1-core capacity
+            s.inject(p, 1)
+            time.sleep(0.002)
+        assert s.cores(p) > 1                # scaled up live
+        assert s.quiesce(timeout=60)
+        for _ in range(30):
+            s.controller.step_once()
+        assert s.cores(p) == 0               # quiesced when idle
+        st = s.stats()["p"]
+        assert st["processed"] == st["arrived"]
+
+
+def test_no_elastic_stages_no_controller():
+    flow = Flow("t")
+    flow.pellet("p", lambda: FnPellet(lambda x: x))
+    with flow.session() as s:
+        assert s.controller is None

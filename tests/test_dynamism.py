@@ -4,6 +4,7 @@ import time
 
 import pytest
 
+from conftest import wait_until
 from repro.core import (Coordinator, FloeGraph, FnPellet, Message, PullPellet,
                         PushPellet)
 
@@ -51,7 +52,8 @@ def test_sync_update_drains_inflight_first():
     try:
         for i in range(4):
             coord.inject("p", i)
-        time.sleep(0.2)  # let instances pick up messages and block
+        # let all 4 instances pick up their message and block on the gate
+        assert wait_until(lambda: coord.flakes["p"]._inflight == 4)
 
         done = threading.Event()
 
@@ -61,7 +63,7 @@ def test_sync_update_drains_inflight_first():
 
         t = threading.Thread(target=do_update, daemon=True)
         t.start()
-        time.sleep(0.2)
+        time.sleep(0.1)
         assert not done.is_set()  # update is blocked on the drain
         release.set()
         t.join(timeout=20)
@@ -90,10 +92,13 @@ def test_async_update_zero_downtime_interleaves():
     coord = Coordinator(g).start()
     try:
         coord.inject("p", 0)
-        time.sleep(0.2)  # old instance now in flight, blocked on the gate
+        # old instance now in flight, blocked on the gate
+        assert wait_until(lambda: coord.flakes["p"]._inflight == 1)
         coord.update_pellet("p", V2, mode="async")  # returns immediately
         coord.inject("p", 1)
-        time.sleep(0.3)
+        # new logic processes msg 1 while the old instance is still blocked
+        assert wait_until(lambda: any(m.payload == ("v2", 1)
+                                      for m in coord.outputs))
         gate.set()
         assert coord.run_until_quiescent(timeout=30)
         out = {m.payload for m in coord.drain_outputs() if m.is_data()}
@@ -182,8 +187,8 @@ def test_pending_messages_survive_update():
         coord.flakes["p"].pause()
         coord.inject("gate", 1)
         coord.inject("gate", 2)
-        time.sleep(0.3)  # messages now parked in p's input queue
-        assert coord.flakes["p"].queue_length() == 2
+        # messages flow through the gate and park in p's input queue
+        assert wait_until(lambda: coord.flakes["p"].queue_length() == 2)
         coord.update_pellet("p", V2, mode="async")
         coord.flakes["p"].resume()
         assert coord.run_until_quiescent(timeout=30)
@@ -245,17 +250,18 @@ def test_speculative_execution_dedups():
                 calls.append(x)
                 first = calls.count(x) == 1
             if first and x == 0:
-                time.sleep(0.5)  # straggle on the first attempt only
+                time.sleep(0.25)  # straggle on the first attempt only
             return ("ok", x)
 
     g = FloeGraph("spec")
     g.add("p", Straggler, cores=2)
-    coord = Coordinator(g, speculative_timeout=0.1).start()
+    coord = Coordinator(g, speculative_timeout=0.05).start()
     try:
         coord.inject("p", 0)
         coord.inject("p", 1)
+        # the backup task fires after the speculative timeout
+        assert wait_until(lambda: calls.count(0) >= 2, timeout=10)
         assert coord.run_until_quiescent(timeout=30)
-        time.sleep(0.6)  # let the duplicate finish too
         out = [m.payload for m in coord.drain_outputs() if m.is_data()]
         assert sorted(out) == [("ok", 0), ("ok", 1)]  # exactly once each
         assert calls.count(0) >= 2  # the backup task really ran

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; "
+    "install the [test] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.adaptation.simulator import SimPellet, simulate
 from repro.adaptation.strategies import (DynamicAdaptation, Observation,
