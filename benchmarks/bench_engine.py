@@ -1,15 +1,38 @@
 """Engine micro-benchmarks: message throughput through Floe patterns
-(§IV.A supporting numbers — how fast the runtime moves messages)."""
+(§IV.A supporting numbers — how fast the runtime moves messages).
+
+Measures the adaptive micro-batched data path against a forced
+``batch_max=1`` baseline on the same topologies and records both in
+``BENCH_engine.json`` (append-style, one record per invocation) so later
+PRs have a perf trajectory to compare against.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine [--n 4000] [--repeats 2]
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core import (Coordinator, FloeGraph, FnMapper, FnPellet,
                         FnReducer, add_mapreduce)
 
+_JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_engine.json")
 
-def _run_chain(n_msgs: int, chain_len: int, cores: int = 2) -> float:
+
+def _set_batch(g: FloeGraph, batch_max: Optional[int]) -> None:
+    """Annotate every vertex with a batch cap (None = engine default)."""
+    if batch_max is None:
+        return
+    for v in g.vertices.values():
+        v.annotations["batch_max"] = batch_max
+
+
+def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
+               batch_max: Optional[int] = None) -> float:
     g = FloeGraph("chain")
     prev = None
     for i in range(chain_len):
@@ -17,18 +40,20 @@ def _run_chain(n_msgs: int, chain_len: int, cores: int = 2) -> float:
         if prev is not None:
             g.connect(prev, f"p{i}")
         prev = f"p{i}"
+    _set_batch(g, batch_max)
     coord = Coordinator(g).start()
     try:
         t0 = time.time()
         for i in range(n_msgs):
             coord.inject("p0", i)
-        assert coord.run_until_quiescent(timeout=120)
+        assert coord.run_until_quiescent(timeout=300)
         return time.time() - t0
     finally:
         coord.stop()
 
 
-def _run_shuffle(n_msgs: int, n_map: int = 2, n_red: int = 4) -> float:
+def _run_shuffle(n_msgs: int, n_map: int = 2, n_red: int = 4,
+                 batch_max: Optional[int] = None) -> float:
     g = FloeGraph("shuffle")
     g.add("src", lambda: FnPellet(lambda x: x, sequential=True))
     add_mapreduce(g, prefix="b",
@@ -37,30 +62,80 @@ def _run_shuffle(n_msgs: int, n_map: int = 2, n_red: int = 4) -> float:
                   reducer_factory=lambda: FnReducer(lambda: 0,
                                                     lambda a, v: a + v),
                   n_mappers=n_map, n_reducers=n_red, source="src")
+    _set_batch(g, batch_max)
     coord = Coordinator(g).start()
     try:
         t0 = time.time()
         for i in range(n_msgs):
             coord.inject("src", i)
         coord.inject_landmark("src")
-        assert coord.run_until_quiescent(timeout=120)
+        assert coord.run_until_quiescent(timeout=300)
         return time.time() - t0
     finally:
         coord.stop()
 
 
-def run() -> Tuple[List[Tuple[str, float, str]], dict]:
+def _best(fn, repeats: int) -> float:
+    """Best-of-N wall time (standard micro-bench noise suppression)."""
+    return min(fn() for _ in range(max(1, repeats)))
+
+
+def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], dict]:
     rows = []
-    n = 2000
-    dt = _run_chain(n, chain_len=4)
-    rows.append(("engine_chain4", dt * 1e6 / n,
-                 f"{n/dt:,.0f} msg/s through a 4-pellet chain"))
-    dt = _run_shuffle(n)
-    rows.append(("engine_shuffle_2x4", dt * 1e6 / n,
-                 f"{n/dt:,.0f} msg/s through dynamic port mapping"))
-    return rows, {}
+    results = {"n_msgs": n, "repeats": repeats}
+    for label, fn in (
+            ("chain4", lambda bmax: _run_chain(n, chain_len=4,
+                                               batch_max=bmax)),
+            ("shuffle_2x4", lambda bmax: _run_shuffle(n, batch_max=bmax))):
+        dt_un = _best(lambda: fn(1), repeats)       # forced B=1 baseline
+        dt_b = _best(lambda: fn(None), repeats)     # adaptive micro-batches
+        un_rate, b_rate = n / dt_un, n / dt_b
+        speedup = dt_un / dt_b
+        results[label] = {"unbatched_msgs_per_s": round(un_rate, 1),
+                          "batched_msgs_per_s": round(b_rate, 1),
+                          "speedup": round(speedup, 2)}
+        rows.append((f"engine_{label}_unbatched", dt_un * 1e6 / n,
+                     f"{un_rate:,.0f} msg/s forced batch_max=1"))
+        rows.append((f"engine_{label}_batched", dt_b * 1e6 / n,
+                     f"{b_rate:,.0f} msg/s adaptive micro-batches "
+                     f"({speedup:.1f}x)"))
+    return rows, results
+
+
+def record(results: dict, path: str = _JSON_PATH) -> None:
+    """Append one trajectory record to BENCH_engine.json."""
+    history: List[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = [history]
+        except (OSError, ValueError):
+            history = []
+    history.append({"ts": time.time(),
+                    "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                    "suite": "engine", **results})
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4000,
+                    help="messages per topology run")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="best-of-N repeats per configuration")
+    ap.add_argument("--out", default=_JSON_PATH,
+                    help="trajectory JSON path ('' disables the record)")
+    args = ap.parse_args()
+    rows, results = run(n=args.n, repeats=args.repeats)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        record(results, args.out)
 
 
 if __name__ == "__main__":
-    for name, us, derived in run()[0]:
-        print(f"{name},{us:.1f},{derived}")
+    main()

@@ -47,7 +47,8 @@ def main() -> None:
                 r, _ = m.run()
             elif suite == "engine":
                 from . import bench_engine as m
-                r, _ = m.run()
+                r, extras = m.run()
+                m.record(extras)   # append to the BENCH_engine.json trajectory
             elif suite == "kernels":
                 from . import bench_kernels as m
                 r, _ = m.run()

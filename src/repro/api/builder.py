@@ -28,7 +28,7 @@ from ..core.bsp import BSPManager, BSPWorker, WorkerLogic
 from ..core.graph import FloeGraph
 from ..core.mapreduce import Mapper, Reducer
 from ..core.patterns import SPLITS
-from ..core.pellet import Pellet, TuplePellet
+from ..core.pellet import (Pellet, PullPellet, TuplePellet, WindowPellet)
 from .errors import CompositionError
 from .policies import ElasticPolicy
 
@@ -145,6 +145,34 @@ class StageHandle:
     def split(self, policy: str) -> PortRef:
         """Shorthand for ``stage[default_out].split(policy)``."""
         return PortRef(self, self.default_out()).split(policy)
+
+    # -- performance ----------------------------------------------------------
+    def batch(self, max_size: int, max_wait_ms: float = 0.0) -> "StageHandle":
+        """Tune this stage's adaptive micro-batch (validated now).
+
+        ``max_size`` caps how many queued messages one dispatch drains (the
+        engine still adapts B down to 1 when the queue is near-empty, so
+        the single-message latency path is unaffected).  ``max_wait_ms``
+        lets a latency-insensitive stage linger up to that long for a
+        fuller batch — useful with ``FnPellet(..., vectorized=True)`` where
+        batch shape efficiency dominates.  ``max_size=1`` disables batching
+        for the stage.
+        """
+        if isinstance(self.proto, (TuplePellet, WindowPellet, PullPellet)):
+            raise CompositionError(
+                f"stage {self.name!r}: .batch() applies to push pellets "
+                f"only — {type(self.proto).__name__} stages have their own "
+                "batching (pull pellets drain the whole queue per call; "
+                "window/tuple pellets gather by window/alignment)")
+        if int(max_size) < 1:
+            raise CompositionError(
+                f"stage {self.name!r}: batch max_size must be >= 1")
+        if float(max_wait_ms) < 0:
+            raise CompositionError(
+                f"stage {self.name!r}: batch max_wait_ms must be >= 0")
+        self.annotations["batch_max"] = int(max_size)
+        self.annotations["batch_wait_ms"] = float(max_wait_ms)
+        return self
 
     # -- elasticity -----------------------------------------------------------
     def elastic(self, *, strategy: str = "dynamic", **params) -> "StageHandle":

@@ -176,6 +176,23 @@ class Session:
         """Immediate fine-grained resource change for one stage."""
         self.coordinator.set_cores(_name(target), cores)
 
+    def set_batch(self, target: Target, *, max_size: int,
+                  max_wait_ms: Optional[float] = None) -> None:
+        """Runtime micro-batch tuning for one stage (``max_size=1``
+        disables batching; see ``StageHandle.batch`` for the composition-
+        time annotation)."""
+        from ..core.pellet import PullPellet, TuplePellet, WindowPellet
+        if int(max_size) < 1:
+            raise SessionStateError("batch max_size must be >= 1")
+        if max_wait_ms is not None and float(max_wait_ms) < 0:
+            raise SessionStateError("batch max_wait_ms must be >= 0")
+        flake = self.coordinator.flakes[_name(target)]
+        if isinstance(flake._proto, (TuplePellet, WindowPellet, PullPellet)):
+            raise SessionStateError(
+                f"set_batch({_name(target)!r}): the batch knob applies to "
+                f"push pellets only, not {type(flake._proto).__name__}")
+        flake.set_batch(max_size, max_wait_ms)
+
     def update(self, target: Target, factory: Callable[[], Pellet], *,
                mode: str = "sync") -> None:
         """Single-pellet dynamic task update (thin wrapper; for multi-op

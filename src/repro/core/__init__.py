@@ -1,22 +1,24 @@
 """Floe core: continuous dataflow composition and execution (paper §II–III)."""
 from .message import Message, control, landmark, update_landmark
-from .pellet import (Drop, FnPellet, KeyedEmit, Pellet, PullPellet,
-                     PushPellet, TuplePellet, WindowPellet)
+from .pellet import (BatchItemError, Drop, FnPellet, KeyedEmit, Pellet,
+                     PullPellet, PushPellet, TuplePellet, WindowPellet)
 from .patterns import (BalancedSplit, DirectSplit, DuplicateSplit, HashSplit,
                        RoundRobinSplit, Split, make_split, stable_hash)
 from .graph import Edge, FloeGraph, Vertex
-from .engine import ALPHA, Container, Coordinator, Flake, FlakeStats
+from .engine import (ALPHA, DEFAULT_BATCH_MAX, Channel, Container,
+                     Coordinator, Flake, FlakeStats)
 from .mapreduce import FnMapper, FnReducer, Mapper, Reducer, add_mapreduce
 from .bsp import BSPManager, BSPWorker, add_bsp, start_bsp
 
 __all__ = [
     "Message", "control", "landmark", "update_landmark",
-    "Drop", "FnPellet", "KeyedEmit", "Pellet", "PullPellet", "PushPellet",
-    "TuplePellet", "WindowPellet",
+    "BatchItemError", "Drop", "FnPellet", "KeyedEmit", "Pellet",
+    "PullPellet", "PushPellet", "TuplePellet", "WindowPellet",
     "BalancedSplit", "DirectSplit", "DuplicateSplit", "HashSplit",
     "RoundRobinSplit", "Split", "make_split", "stable_hash",
     "Edge", "FloeGraph", "Vertex",
-    "ALPHA", "Container", "Coordinator", "Flake", "FlakeStats",
+    "ALPHA", "DEFAULT_BATCH_MAX", "Channel", "Container", "Coordinator",
+    "Flake", "FlakeStats",
     "FnMapper", "FnReducer", "Mapper", "Reducer", "add_mapreduce",
     "BSPManager", "BSPWorker", "add_bsp", "start_bsp",
 ]

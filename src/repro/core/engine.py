@@ -20,7 +20,18 @@ restarting threads — the mechanism behind the dynamic adaptation strategy).
 
 Straggler mitigation: optional speculative re-execution of push-pellet tasks
 that exceed a timeout; first completion wins, duplicates are suppressed by
-message seq id (engine-level analogue of backup tasks).
+message seq id (engine-level analogue of backup tasks).  A single shared
+watchdog thread per flake arms the backup tasks.
+
+Data path: adaptively micro-batched.  Each dispatch drains up to
+min(queue_depth, ``batch_max``) messages from one channel in a single lock
+round-trip, runs them through the pellet's ``compute_batch`` (default: loop
+over ``compute``; vectorizable), and routes the emitted outputs grouped by
+destination ``(flake, port)`` so split evaluation, stats, inflight
+accounting, and the downstream channel append are each paid once per batch.
+B self-tunes: near-empty queues dispatch single messages (latency path),
+backlog grows batches up to the cap (throughput path).  Batches never span
+a landmark, so window/flush ordering is exactly the per-message semantics.
 """
 from __future__ import annotations
 
@@ -33,10 +44,29 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from .graph import FloeGraph
 from .message import Message
 from .patterns import SPLITS, Split, make_split
-from .pellet import (Drop, FnPellet, KeyedEmit, Pellet, PullPellet,
-                     PushPellet, TuplePellet, WindowPellet)
+from .pellet import (BatchItemError, Drop, FnPellet, KeyedEmit, Pellet,
+                     PullPellet, PushPellet, TuplePellet, WindowPellet)
 
 ALPHA = 4  # pellet instances per core (§III)
+
+#: default cap for the adaptive micro-batch: a dispatch drains
+#: min(queue_depth, batch_max) messages per wake, so B self-tunes to 1 at
+#: low occupancy (single-message latency path) and grows with backlog.
+DEFAULT_BATCH_MAX = 128
+#: the default policy targets ~this much compute per batch: pellets whose
+#: per-message latency is large keep B small (batching would only hide
+#: backlog from the adaptation strategies without amortizing anything),
+#: pellets with micro-second compute — where dispatch overhead dominates —
+#: batch up to DEFAULT_BATCH_MAX.  Explicit ``.batch(...)`` annotations
+#: bypass this heuristic.
+TARGET_BATCH_SECONDS = 0.005
+#: cap before the first latency measurement lands (cold-start guard)
+BOOTSTRAP_BATCH_MAX = 32
+
+
+def _is_special(msg: Message) -> bool:
+    """Batch boundary predicate: landmarks/control never share a batch."""
+    return not msg.is_data()
 
 
 class AdjustableSemaphore:
@@ -70,9 +100,20 @@ class AdjustableSemaphore:
     def capacity(self) -> int:
         return self._capacity
 
+    @property
+    def free(self) -> int:
+        # unlocked heuristic read (GIL-atomic ints): used only to shape
+        # adaptive batch sizes, never for admission control
+        return self._capacity - self._in_use
+
 
 class Channel:
-    """Bounded FIFO edge buffer with backpressure."""
+    """Bounded FIFO edge buffer with backpressure.
+
+    The batch operations (``put_many`` / ``pop_up_to``) move a whole
+    micro-batch per lock round-trip — the primitive underneath the engine's
+    adaptive micro-batched data path.
+    """
 
     def __init__(self, capacity: int = 100_000,
                  on_put: Optional[Callable[[], None]] = None):
@@ -91,6 +132,33 @@ class Channel:
         if self._on_put:
             self._on_put()
 
+    def put_many(self, msgs: List[Message],
+                 timeout: Optional[float] = 30.0) -> None:
+        """Append a batch under one lock acquisition, backpressure preserved.
+
+        A batch larger than the remaining capacity is admitted in chunks as
+        space frees up (waiting for room for the *whole* batch could
+        deadlock a graph cycle); each chunk still respects the capacity
+        bound, so downstream backpressure semantics are unchanged.
+        """
+        if not msgs:
+            return
+        i, n = 0, len(msgs)
+        while i < n:
+            with self._not_full:
+                if not self._not_full.wait_for(
+                        lambda: len(self._q) < self._capacity,
+                        timeout=timeout):
+                    err = TimeoutError(
+                        "channel full: backpressure timeout")
+                    err.appended = i   # callers roll back the remainder
+                    raise err
+                take = min(self._capacity - len(self._q), n - i)
+                self._q.extend(msgs[i:i + take])
+                i += take
+            if self._on_put:   # per chunk, so the consumer makes progress
+                self._on_put()
+
     def try_pop(self) -> Optional[Message]:
         with self._not_full:
             if self._q:
@@ -98,6 +166,35 @@ class Channel:
                 self._not_full.notify_all()
                 return msg
             return None
+
+    def pop_up_to(self, n: Optional[int] = None,
+                  stop: Optional[Callable[[Message], bool]] = None
+                  ) -> List[Message]:
+        """Pop up to ``n`` messages (all, if None) in one lock round-trip.
+
+        ``stop`` marks batch boundaries (e.g. landmarks): popping halts
+        *before* a message for which ``stop(msg)`` is true, except that a
+        boundary message at the head is popped alone — so a returned batch
+        is either entirely non-boundary messages or a single boundary one,
+        and a batch never spans a landmark.
+        """
+        out: List[Message] = []
+        with self._not_full:
+            q = self._q
+            while q and (n is None or len(out) < n):
+                if stop is not None and stop(q[0]):
+                    if not out:
+                        out.append(q.popleft())
+                    break
+                out.append(q.popleft())
+            if out:
+                self._not_full.notify_all()
+        return out
+
+    def unpop(self, msg: Message) -> None:
+        """Push a popped message back to the head (locked restore path)."""
+        with self._lock:
+            self._q.appendleft(msg)
 
     def peek(self) -> Optional[Message]:
         with self._lock:
@@ -122,6 +219,9 @@ class FlakeStats:
         self.emitted = 0
         self.ewma = ewma
         self.avg_latency = 0.0    # seconds per message, single instance
+        self.batches = 0          # data dispatches on the push path
+        self.last_batch = 0       # size of the most recent dispatch
+        self.max_batch = 0
         self._win_arrived = 0
         self._win_processed = 0
         self._win_start = time.time()
@@ -130,6 +230,14 @@ class FlakeStats:
         with self._lock:
             self.arrived += n
             self._win_arrived += n
+
+    def on_dispatch(self, n: int) -> None:
+        """Record one push-path data dispatch of ``n`` messages (B)."""
+        with self._lock:
+            self.batches += 1
+            self.last_batch = n
+            if n > self.max_batch:
+                self.max_batch = n
 
     def on_process(self, latency: float, n: int = 1) -> None:
         with self._lock:
@@ -167,7 +275,9 @@ class Flake:
     def __init__(self, name: str, factory: Callable[[], Pellet], *,
                  cores: int = 1, engine: "Coordinator" = None,
                  channel_capacity: int = 100_000,
-                 speculative_timeout: Optional[float] = None):
+                 speculative_timeout: Optional[float] = None,
+                 batch_max: Optional[int] = None,
+                 batch_wait_ms: float = 0.0):
         self.name = name
         self.factory = factory
         self.engine = engine
@@ -200,6 +310,24 @@ class Flake:
         self._inflight_cond = threading.Condition()
         self._done_seqs: set = set()           # speculative dedup
         self.speculative_timeout = speculative_timeout
+        #: one shared watchdog thread per flake arms speculative backup
+        #: tasks (a per-message threading.Timer — one OS thread per message
+        #: — was itself a throughput bug at any sustained rate)
+        self._spec_q: deque = deque()
+        self._spec_cond = threading.Condition()
+        self._spec_thread: Optional[threading.Thread] = None
+        #: adaptive micro-batch knobs: a dispatch drains up to
+        #: min(queue_depth, batch_max) messages; batch_wait lets a
+        #: latency-insensitive stage linger up to that long for a fuller
+        #: batch (0 = dispatch whatever is available immediately).
+        #: ``batch_max=None`` selects the default policy (DEFAULT_BATCH_MAX
+        #: further capped by the measured-latency heuristic); an explicit
+        #: value — composition annotation or ``set_batch`` — is authoritative.
+        self._batch_explicit = batch_max is not None
+        self.batch_max = (DEFAULT_BATCH_MAX if batch_max is None
+                          else max(1, int(batch_max)))
+        self.batch_wait = max(0.0, float(batch_wait_ms)) / 1000.0
+        self._batch_deadline: Optional[float] = None
         self.version = 0                       # bumps on dynamic task update
         #: landmark alignment (watermark semantics): a flush landmark is
         #: delivered to the pellet only once a copy has arrived from every
@@ -221,12 +349,20 @@ class Flake:
         self._thread = threading.Thread(
             target=self._dispatch_loop, name=f"dispatch-{self.name}", daemon=True)
         self._thread.start()
+        if self.speculative_timeout is not None:
+            self._spec_thread = threading.Thread(
+                target=self._spec_loop, name=f"spec-{self.name}", daemon=True)
+            self._spec_thread.start()
 
     def deactivate(self) -> None:
         self._stop.set()
         self._notify()
+        with self._spec_cond:
+            self._spec_cond.notify_all()
         if self._thread:
             self._thread.join(timeout=10)
+        if self._spec_thread:
+            self._spec_thread.join(timeout=10)
         if self._pool:
             self._pool.shutdown(wait=True, cancel_futures=True)
 
@@ -241,6 +377,20 @@ class Flake:
         """Fine-grained runtime resource control (§III): resize instance pool."""
         self.cores = max(0, int(cores))
         self._sem.set_capacity(max(1, self.cores * ALPHA) if self.cores else 0)
+
+    def set_batch(self, max_size: int,
+                  max_wait_ms: Optional[float] = None) -> None:
+        """Runtime micro-batch tuning (max_size=1 disables batching).
+
+        An explicit size is authoritative: it replaces the default
+        latency-targeting policy for this flake.
+        """
+        self.batch_max = max(1, int(max_size))
+        self._batch_explicit = True
+        if max_wait_ms is not None:
+            self.batch_wait = max(0.0, float(max_wait_ms)) / 1000.0
+        self._batch_deadline = None   # drop any in-progress linger
+        self._notify()
 
     def _drain_acquire(self) -> None:
         with self._drain_lock:
@@ -293,6 +443,7 @@ class Flake:
             self.factory = factory
             self._proto = new_proto
             self.version += 1
+            self._batch_deadline = None   # new logic: drop any linger
             # internal state survives the update if stateful (§II.B)
             if not new_proto.stateful:
                 self.state = new_proto.initial_state()
@@ -322,7 +473,46 @@ class Flake:
         if self.engine is not None:
             self.engine._inflight_inc()
         self.stats.on_arrive()
-        self.inputs[port].put(msg)
+        try:
+            self.inputs[port].put(msg)
+        except Exception:
+            # never-admitted message: release its credit or engine-wide
+            # quiescence would wedge for the life of the session
+            if self.engine is not None:
+                self.engine._inflight_dec()
+            raise
+
+    def enqueue_many(self, port: str, msgs: List[Message]) -> None:
+        """Batched enqueue: inflight accounting, arrival stats, and the
+        channel append each run once per batch instead of once per message.
+
+        Only data messages take the batched fast path — specials
+        (landmarks/control) fall back to ``enqueue`` so fan-in landmark
+        alignment semantics are byte-for-byte identical.
+        """
+        if not msgs:
+            return
+        if port not in self.inputs:
+            raise KeyError(f"{self.name}: no input port {port!r}")
+        if len(msgs) == 1:
+            self.enqueue(port, msgs[0])
+            return
+        if any(not m.is_data() for m in msgs):
+            for m in msgs:
+                self.enqueue(port, m)
+            return
+        if self.engine is not None:
+            self.engine._inflight_inc(len(msgs))
+        self.stats.on_arrive(len(msgs))
+        try:
+            self.inputs[port].put_many(msgs)
+        except Exception as e:
+            # release credits for the never-admitted remainder (put_many
+            # reports how many it appended before timing out)
+            lost = len(msgs) - getattr(e, "appended", 0)
+            if self.engine is not None and lost > 0:
+                self.engine._inflight_dec(lost)
+            raise
 
     def queue_length(self) -> int:
         return sum(len(c) for c in self.inputs.values())
@@ -342,7 +532,16 @@ class Flake:
             work = self._collect()
             if work is None:
                 with self._wake:
-                    if (self.queue_length() == 0 and not self._stop.is_set()
+                    hold = self._batch_deadline
+                    remaining = (hold - time.time()) if hold is not None \
+                        else 0.0
+                    if remaining > 0.0 and not self._stop.is_set():
+                        # batch_wait hold: messages are queued but below
+                        # batch_max — linger (bounded) for a fuller batch.
+                        # A stale/expired deadline falls through to the
+                        # normal wait (no busy-spin).
+                        self._wake.wait(timeout=min(0.05, remaining))
+                    elif (self.queue_length() == 0 and not self._stop.is_set()
                             and not self._ready()):
                         self._wake.wait(timeout=0.05)
                 continue
@@ -369,8 +568,16 @@ class Flake:
 
     def _collect(self):
         """Pop one unit of work: ('msg', Message, credits) |
-        ('tuple', {port: Message}, credits) | ('window', [Message], credits) |
-        ('pull', [Message], credits) | ('landmark', Message, 1) | None."""
+        ('batch', [Message], credits) | ('tuple', {port: Message}, credits) |
+        ('window', [Message], credits) | ('pull', [Message], credits) |
+        ('landmark', Message, 1) | None.
+
+        The push path drains an adaptive micro-batch per wake: up to
+        min(queue_depth, batch_max) messages in one channel lock round-trip,
+        so B self-tunes to 1 when queues are near-empty (latency path) and
+        grows with backlog (throughput path).  Batches never span a landmark
+        (``pop_up_to`` stops at specials), so flush ordering is preserved.
+        """
         proto = self._proto
         if isinstance(proto, TuplePellet):
             # synchronous merge: align one message per port (Fig. 1, P5);
@@ -384,18 +591,14 @@ class Flake:
                 if any(m is None for m in tup.values()):   # lost a race
                     for p, m in tup.items():
                         if m is not None:
-                            self.inputs[p]._q.appendleft(m)  # restore
+                            self.inputs[p].unpop(m)  # locked restore
                     return None
                 return ("tuple", tup, len(tup))
             return None
         if isinstance(proto, PullPellet):
             msgs: List[Message] = []
             for c in self.inputs.values():
-                while True:
-                    m = c.try_pop()
-                    if m is None:
-                        break
-                    msgs.append(m)
+                msgs.extend(c.pop_up_to())   # drain all, one lock round-trip
             if msgs:
                 return ("pull", msgs, len(msgs))
             return None
@@ -404,13 +607,12 @@ class Flake:
             # a landmark flushes a partial window.
             for c in self.inputs.values():
                 while True:
-                    head = c.peek()
-                    if head is None:
+                    need = proto.window - len(self._window_buf)
+                    got = c.pop_up_to(max(need, 1), stop=_is_special)
+                    if not got:
                         break
-                    m = c.try_pop()
-                    if m is None:
-                        break
-                    if not m.is_data():
+                    if not got[0].is_data():
+                        m = got[0]
                         buf, self._window_buf = self._window_buf, []
                         if buf:
                             # flush partial window, then forward the landmark
@@ -418,19 +620,89 @@ class Flake:
                             self._requeue_landmark_after = m
                             return ("window", buf, len(buf) + 1)
                         return ("landmark", m, 1)
-                    self._window_buf.append(m)
+                    self._window_buf.extend(got)
                     if len(self._window_buf) >= proto.window:
                         buf, self._window_buf = self._window_buf, []
                         return ("window", buf, len(buf))
             return None
-        # plain push pellet (interleaved merge across ports, Fig. 1, P6)
-        for c in self.inputs.values():
-            m = c.try_pop()
-            if m is not None:
-                if not m.is_data():
-                    return ("landmark", m, 1)
-                return ("msg", m, 1)
+        # plain push pellet (interleaved merge across ports, Fig. 1, P6):
+        # adaptive micro-batch
+        linger = (self.batch_wait > 0.0 and self.batch_max > 1
+                  and self.speculative_timeout is None)
+        if linger:
+            # an explicit linger says "prefer fuller batches over per-slot
+            # parallelism": gate on the depth of the channel that will be
+            # drained vs the configured cap and, once elapsed, take the
+            # coalesced batch whole (no free-slot shaping).  Specials at
+            # the head dispatch immediately — a batch can never include
+            # them, so lingering would only delay the flush.  One deadline
+            # per batch bounds the added latency at ``batch_wait`` per
+            # non-empty input port.
+            limit = self.batch_max
+            target = next((c for c in self.inputs.values() if len(c)), None)
+            if target is None:
+                self._batch_deadline = None
+                return None
+            head = target.peek()
+            if head is not None and head.is_data() and len(target) < limit:
+                now = time.time()
+                if self._batch_deadline is None:
+                    self._batch_deadline = now + self.batch_wait
+                    return None
+                if now < self._batch_deadline:
+                    return None
+            self._batch_deadline = None
+            channels = (target,)
+        else:
+            limit = self._batch_limit()
+            channels = self.inputs.values()
+        for c in channels:
+            batch = c.pop_up_to(limit, stop=_is_special)
+            if not batch:
+                continue
+            if not batch[0].is_data():
+                return ("landmark", batch[0], 1)
+            self.stats.on_dispatch(len(batch))
+            if len(batch) == 1:
+                return ("msg", batch[0], 1)
+            return ("batch", batch, len(batch))
         return None
+
+    def _batch_limit(self) -> int:
+        """Adaptive micro-batch cap for the next dispatch.
+
+        Three concerns shape B, all of which decay it to 1 on the
+        latency-sensitive single-message path:
+
+        * latency target (default policy only): B is capped so one batch
+          holds ~TARGET_BATCH_SECONDS of measured compute.  Slow pellets
+          stay per-message — batching them would amortize nothing and hide
+          backlog from queue-length-driven adaptation strategies.
+        * data-parallelism: while instance slots are free, the backlog is
+          split across them (B = ceil(queue/free)) instead of serialized
+          into one batch; only a saturated pool — where dispatch overhead,
+          not compute, is the bottleneck — grows B to the cap.
+        * speculation: strictly per-message (seq-id dedup semantics).
+        """
+        if self.speculative_timeout is not None:
+            return 1
+        bmax = self.batch_max
+        if bmax <= 1:
+            return 1
+        if not self._batch_explicit:
+            avg = self.stats.avg_latency      # unlocked heuristic read
+            if avg <= 0.0:
+                bmax = min(bmax, BOOTSTRAP_BATCH_MAX)
+            else:
+                bmax = min(bmax, max(1, int(TARGET_BATCH_SECONDS / avg)))
+            if bmax <= 1:
+                return 1
+        if self._proto.sequential:
+            return bmax
+        free = self._sem.free
+        if free > 1:
+            return min(bmax, max(1, -(-self.queue_length() // free)))
+        return bmax
 
     # -- execution ---------------------------------------------------------------
     def _run_inline(self, kind: str, item, credits: int) -> None:
@@ -454,21 +726,52 @@ class Flake:
         self._inflight_inc_local()
         fut = self._pool.submit(self._run_pooled, kind, item, credits)
         if self.speculative_timeout is not None and kind == "msg":
-            threading.Timer(self.speculative_timeout,
-                            self._speculate, args=(fut, item, credits)).start()
+            with self._spec_cond:
+                self._spec_q.append(
+                    (time.time() + self.speculative_timeout,
+                     fut, item, credits))
+                self._spec_cond.notify_all()
+
+    def _spec_loop(self) -> None:
+        """Shared straggler watchdog: ONE thread arms every backup task.
+
+        The timeout is constant per flake, so ``_spec_q`` is naturally
+        deadline-ordered and a FIFO scan suffices (no heap needed).
+        """
+        while not self._stop.is_set():
+            with self._spec_cond:
+                while not self._spec_q and not self._stop.is_set():
+                    self._spec_cond.wait(timeout=0.5)
+                if self._stop.is_set():
+                    return
+                deadline, fut, item, credits = self._spec_q[0]
+                wait = deadline - time.time()
+                if wait > 0:
+                    self._spec_cond.wait(timeout=wait)
+                    continue           # re-check head (stop may have been set)
+                self._spec_q.popleft()
+            self._speculate(fut, item, credits)
 
     def _speculate(self, fut, item: Message, credits: int) -> None:
-        """Backup-task execution for stragglers (first-done-wins)."""
+        """Backup-task execution for stragglers (first-done-wins).
+
+        Backups deliberately bypass the instance-pool semaphore (they must
+        run even when stragglers hold every slot), so they must not release
+        a slot they never acquired — that would permanently loosen the
+        cores×ALPHA admission cap by one per backup.
+        """
         if fut.done() or self._stop.is_set():
             return
         self._inflight_inc_local()
-        self._pool.submit(self._run_pooled, "msg", item, credits)
+        self._pool.submit(self._run_pooled, "msg", item, credits, False)
 
-    def _run_pooled(self, kind: str, item, credits: int) -> None:
+    def _run_pooled(self, kind: str, item, credits: int,
+                    release_slot: bool = True) -> None:
         try:
             self._run_task(kind, item, credits)
         finally:
-            self._sem.release()
+            if release_slot:
+                self._sem.release()
             self._inflight_dec_local()
 
     def _run_task(self, kind: str, item, credits: int) -> None:
@@ -486,6 +789,48 @@ class Flake:
                             return  # duplicate speculative task lost the race
                 result = proto.compute(item.payload)
                 outputs = self._wrap(result, item)
+            elif kind == "batch":
+                # micro-batch of data messages from ONE channel: one
+                # compute_batch call, per-message lineage/wrap preserved.
+                # The default compute_batch executes each payload exactly
+                # once and marks failures as BatchItemError entries, so
+                # error semantics stay message-granular with no
+                # double-execution of side effects.
+                payloads = [m.payload for m in item]
+                fn = getattr(proto, "compute_batch", None)
+                try:
+                    if fn is not None:
+                        results = fn(payloads)
+                    else:
+                        results = PushPellet.compute_batch(proto, payloads)
+                    if len(results) != len(item):
+                        raise ValueError(
+                            f"compute_batch returned {len(results)} results "
+                            f"for {len(item)} payloads")
+                except Exception as batch_exc:
+                    # a vectorized override failed as a unit; such overrides
+                    # must be side-effect free (documented, and the same
+                    # statelessness contract speculative re-execution relies
+                    # on), so recover by re-running per message — only
+                    # raising messages are dropped, the rest delivered
+                    results = []
+                    for m in item:
+                        try:
+                            results.append(proto.compute(m.payload))
+                        except Exception as e:
+                            results.append(BatchItemError(e))
+                    if not any(isinstance(r, BatchItemError)
+                               for r in results) and self.engine is not None:
+                        # batch-level bug (e.g. wrong result count) that
+                        # per-message compute recovered from: deliver the
+                        # data, surface the bug
+                        self.engine._record_error(self.name, batch_exc)
+                for m, r in zip(item, results):
+                    if isinstance(r, BatchItemError):
+                        if self.engine is not None:
+                            self.engine._record_error(self.name, r.exc)
+                        continue
+                    outputs.extend(self._wrap(r, m))
             elif kind == "tuple":
                 payloads = {p: m.payload for p, m in item.items()}
                 anchor = next(iter(item.values()))
@@ -516,8 +861,7 @@ class Flake:
             self.stats.on_process(time.time() - t0, n=credits)
             if self.engine is not None:
                 self.engine._record_error(self.name, e)
-                for _ in range(credits):
-                    self.engine._inflight_dec()
+                self.engine._inflight_dec(credits)
             return
         if seq_for_dedup is not None and self.speculative_timeout is not None:
             with self._inflight_cond:
@@ -525,17 +869,24 @@ class Flake:
                     return  # another speculative copy already delivered
                 self._done_seqs.add(seq_for_dedup)
         self.stats.on_process(time.time() - t0, n=credits)
-        for out in outputs:
-            self._route(out)
-        self.stats.on_emit(len(outputs))
-        # forward a landmark that flushed a partial window
-        lm = getattr(self, "_requeue_landmark_after", None)
-        if lm is not None:
-            self._requeue_landmark_after = None
-            self._route(lm)
-        if self.engine is not None:
-            for _ in range(credits):
-                self.engine._inflight_dec()
+        try:
+            self._route_many(outputs)
+            self.stats.on_emit(len(outputs))
+            # forward a landmark that flushed a partial window
+            lm = getattr(self, "_requeue_landmark_after", None)
+            if lm is not None:
+                self._requeue_landmark_after = None
+                self._route(lm)
+        except Exception as e:
+            # routing failure (e.g. sustained-backpressure timeout): the
+            # undelivered outputs are dropped and logged, but the consumed
+            # input credits MUST still be released below — leaking them
+            # would wedge quiescence for the life of the session
+            if self.engine is not None:
+                self.engine._record_error(self.name, e)
+        finally:
+            if self.engine is not None:
+                self.engine._inflight_dec(credits)
 
     def _wrap(self, result: Any, anchor: Message) -> List[Message]:
         """Normalize a compute() return value into output Messages."""
@@ -567,11 +918,15 @@ class Flake:
 
     def _finish(self, msg: Message, credits: int, forward: bool) -> None:
         """Forward landmarks/control messages downstream on all routes."""
-        if forward:
-            self._route(msg, broadcast=True)
-        if self.engine is not None:
-            for _ in range(credits):
-                self.engine._inflight_dec()
+        try:
+            if forward:
+                self._route(msg, broadcast=True)
+        except Exception as e:
+            if self.engine is not None:
+                self.engine._record_error(self.name, e)
+        finally:
+            if self.engine is not None:
+                self.engine._inflight_dec(credits)
 
     # -- output side -----------------------------------------------------------
     def _route(self, msg: Message, broadcast: bool = False) -> None:
@@ -594,6 +949,59 @@ class Flake:
         for i in idxs:
             flake, dst_port = targets[i]
             flake.enqueue(dst_port, msg)
+
+    def _route_many(self, msgs: List[Message]) -> None:
+        """Amortized routing for a batch of emitted messages.
+
+        Split evaluation runs once per (port, batch) via ``choose_many``
+        (queue depths sampled once) and deliveries are grouped by
+        destination ``(flake, dst_port)`` so downstream enqueue accounting
+        is paid per group, not per message.  Per-destination FIFO order is
+        preserved (groups are filled in emit order).  Any special message
+        in the batch falls back to the per-message path, which owns the
+        broadcast/alignment semantics.
+        """
+        if not msgs:
+            return
+        if len(msgs) == 1 or any(not m.is_data() for m in msgs):
+            for m in msgs:
+                self._route(m)
+            return
+        by_port: Dict[str, List[Message]] = {}
+        sink: List[Message] = []
+        for m in msgs:
+            if m.port in self.routes:
+                by_port.setdefault(m.port, []).append(m)
+            else:
+                # unrouted ports all land on the coordinator's shared
+                # output list: collect them in one pass so cross-port emit
+                # order is preserved (grouping by port would reorder it)
+                sink.append(m)
+        if sink and self.engine is not None:
+            self.engine._collect_outputs(self.name, sink)
+        # split evaluation amortized per out-port ...
+        targets_of: Dict[str, List[Tuple["Flake", str]]] = {}
+        choice_of: Dict[int, List[int]] = {}
+        for port, ms in by_port.items():
+            split, targets = self.routes[port]
+            depths = [t[0].queue_length() for t in targets]
+            targets_of[port] = targets
+            for m, idxs in zip(ms, split.choose_many(ms, len(targets),
+                                                     depths)):
+                choice_of[id(m)] = idxs
+        # ... but destination buckets fill in GLOBAL emit order, so a
+        # destination fed from several out-ports sees the exact
+        # per-message interleaving, not port-grouped bursts
+        buckets: Dict[Tuple["Flake", str], List[Message]] = {}
+        for m in msgs:
+            idxs = choice_of.get(id(m))
+            if idxs is None:
+                continue   # sink message, already collected
+            targets = targets_of[m.port]
+            for i in idxs:
+                buckets.setdefault(targets[i], []).append(m)
+        for (flake, dst_port), bucket in buckets.items():
+            flake.enqueue_many(dst_port, bucket)
 
     # -- quiescence bookkeeping --------------------------------------------------
     def _inflight_inc_local(self) -> None:
@@ -671,13 +1079,13 @@ class Coordinator:
         self._speculative_timeout = speculative_timeout
 
     # -- engine-wide quiescence ---------------------------------------------
-    def _inflight_inc(self) -> None:
+    def _inflight_inc(self, n: int = 1) -> None:
         with self._iq:
-            self._inflight += 1
+            self._inflight += n
 
-    def _inflight_dec(self) -> None:
+    def _inflight_dec(self, n: int = 1) -> None:
         with self._iq:
-            self._inflight -= 1
+            self._inflight -= n
             if self._inflight <= 0:
                 self._iq.notify_all()
 
@@ -687,6 +1095,10 @@ class Coordinator:
     def _collect_output(self, flake: str, msg: Message) -> None:
         with self._out_lock:
             self.outputs.append(msg)
+
+    def _collect_outputs(self, flake: str, msgs: List[Message]) -> None:
+        with self._out_lock:
+            self.outputs.extend(msgs)
 
     # -- lifecycle -------------------------------------------------------------
     def start(self) -> "Coordinator":
@@ -708,7 +1120,9 @@ class Coordinator:
             self.flakes[name] = Flake(
                 name, v.factory, cores=v.cores, engine=self,
                 channel_capacity=self._channel_capacity,
-                speculative_timeout=self._speculative_timeout)
+                speculative_timeout=self._speculative_timeout,
+                batch_max=v.annotations.get("batch_max"),
+                batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0))
         # wire routes + landmark in-degrees (same derivation as a dynamic
         # dataflow update, so started and recomposed sessions never drift)
         self.apply_wiring(self.graph)
@@ -933,5 +1347,7 @@ class Coordinator:
                     "emitted": f.stats.emitted,
                     "avg_latency": f.stats.avg_latency,
                     "cores": f.cores,
+                    "batch_max": f.batch_max,
+                    "last_batch": f.stats.last_batch,
                     "version": f.version}
                 for n, f in self.flakes.items()}

@@ -31,8 +31,26 @@ class Mapper(PushPellet):
     def map(self, payload: Any) -> Iterable[Tuple[Any, Any]]:
         raise NotImplementedError
 
+    def map_batch(self, payloads: List[Any]) -> List[Iterable[Tuple[Any, Any]]]:
+        """Batched map hook: one ``(key, value)`` iterable per payload.
+
+        Called once per drained micro-batch on the engine's batched data
+        path; override to vectorize the map (e.g. tokenize a whole batch in
+        one JAX call).  The default preserves exact per-message semantics.
+        """
+        map_ = self.map
+        return [map_(p) for p in payloads]
+
     def compute(self, payload: Any) -> List[KeyedEmit]:
         return [KeyedEmit(value, key=key) for key, value in self.map(payload)]
+
+    def compute_batch(self, payloads: List[Any]) -> List[List[KeyedEmit]]:
+        if type(self).map_batch is Mapper.map_batch:
+            # no vectorized hook: inherit the exactly-once, per-message
+            # error-isolating loop (a raising map drops only its message)
+            return super().compute_batch(payloads)
+        return [[KeyedEmit(value, key=key) for key, value in pairs]
+                for pairs in self.map_batch(payloads)]
 
 
 class FnMapper(Mapper):

@@ -4,7 +4,8 @@ The paper (§II.A) models messages as serialized Java objects or files moving
 between pellet ports.  Here a message carries an arbitrary payload (any Python
 object or JAX pytree), an optional routing ``key`` (used by dynamic port
 mapping, §II.A "Advanced Dataflow Abstractions"), and metadata used by the
-runtime: a monotonically increasing sequence id, the emitting port, creation
+runtime: a unique sequence id (monotonic per emitting thread, NOT globally
+ordered — see the block allocator below), the emitting port, creation
 time, and landmark/control flags.
 
 Landmark messages (paper: "user-defined 'landmark' messages to indicate when a
@@ -20,13 +21,24 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-_seq = itertools.count()
-_seq_lock = threading.Lock()
+#: seq ids are block-allocated per thread: each thread claims a contiguous
+#: block from the global counter (``next(itertools.count())`` is atomic under
+#: the GIL, no lock needed) and hands out ids locally with zero contention.
+#: Ids are unique engine-wide and monotonic per emitting thread — which is
+#: all the runtime relies on (speculative dedup uses set membership, lineage
+#: uses equality); they are NOT globally dense or globally ordered.
+_SEQ_BLOCK = 1024
+_seq_blocks = itertools.count()
+_seq_local = threading.local()
 
 
 def _next_seq() -> int:
-    with _seq_lock:
-        return next(_seq)
+    nxt = getattr(_seq_local, "nxt", 0)
+    if nxt >= getattr(_seq_local, "end", 0):
+        nxt = next(_seq_blocks) * _SEQ_BLOCK
+        _seq_local.end = nxt + _SEQ_BLOCK
+    _seq_local.nxt = nxt + 1
+    return nxt
 
 
 @dataclass

@@ -51,6 +51,18 @@ class Split:
     def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
         raise NotImplementedError
 
+    def choose_many(self, msgs: Sequence[Message], n_edges: int,
+                    queue_depths: Sequence[int]) -> List[List[int]]:
+        """Route a whole micro-batch in one call (amortized routing).
+
+        Returns one index list per message, in order.  ``queue_depths`` is
+        sampled once per batch.  The default delegates to ``choose`` per
+        message, so every policy keeps its exact per-message determinism
+        (hash placement, round-robin counter advancement) under batching.
+        """
+        choose = self.choose
+        return [choose(m, n_edges, queue_depths) for m in msgs]
+
     def broadcast_specials(self) -> bool:
         """Landmarks/control messages go to *all* edges regardless of policy."""
         return True
@@ -101,6 +113,20 @@ class BalancedSplit(Split):
         m = min(queue_depths)
         candidates = [i for i, d in enumerate(queue_depths) if d == m]
         return [candidates[next(self._tie) % len(candidates)]]
+
+    def choose_many(self, msgs: Sequence[Message], n_edges: int,
+                    queue_depths: Sequence[int]) -> List[List[int]]:
+        # account for the batch's own placements so a burst does not pile
+        # onto whichever queue happened to be shortest at batch start
+        depths = (list(queue_depths) if len(queue_depths) == n_edges
+                  else [0] * n_edges)
+        out: List[List[int]] = []
+        for m in msgs:
+            idxs = self.choose(m, n_edges, depths)
+            for i in idxs:
+                depths[i] += 1
+            out.append(idxs)
+        return out
 
 
 SPLITS = {

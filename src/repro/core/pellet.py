@@ -33,6 +33,21 @@ class Drop:
     """Sentinel return value: emit no output for this input."""
 
 
+class BatchItemError:
+    """Per-item failure marker inside a ``compute_batch`` result.
+
+    The default batched loop wraps a raising payload's exception in this
+    instead of failing the whole batch; the engine records the exception
+    against the flake and drops only that message — exactly the unbatched
+    per-message error semantics.
+    """
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: Exception):
+        self.exc = exc
+
+
 class Pellet:
     """Base pellet.  Subclass one of the concrete triggering variants."""
 
@@ -64,6 +79,32 @@ class PushPellet(Pellet):
 
     def compute(self, payload: Any) -> Any:
         raise NotImplementedError
+
+    def compute_batch(self, payloads: List[Any]) -> List[Any]:
+        """Batched compute: one aligned result per payload.
+
+        The engine's micro-batched data path drains up to B queued messages
+        per dispatch and calls this once instead of ``compute`` B times.
+        The default loops over ``compute`` — each payload executes exactly
+        once, and a raising payload yields a ``BatchItemError`` entry (the
+        engine records it and drops only that message), so semantics are
+        identical to unbatched dispatch.  Override it to vectorize — e.g.
+        run the whole batch through one jitted/``vmap``-ed JAX call; keep
+        overrides side-effect free: if an override raises, the engine
+        recovers by re-running the batch per message through ``compute``.
+        Must return exactly ``len(payloads)`` results, in order; each
+        result is interpreted exactly as a ``compute`` return value
+        (``Drop``, ``KeyedEmit``, ``{port: payload}``, list-of-emissions,
+        ...).
+        """
+        compute = self.compute
+        out: List[Any] = []
+        for p in payloads:
+            try:
+                out.append(compute(p))
+            except Exception as e:
+                out.append(BatchItemError(e))
+        return out
 
 
 class TuplePellet(Pellet):
@@ -113,23 +154,39 @@ class PullPellet(Pellet):
 
 
 class FnPellet(PushPellet):
-    """Convenience: wrap a plain callable (possibly a jitted JAX fn)."""
+    """Convenience: wrap a plain callable (possibly a jitted JAX fn).
+
+    With ``vectorized=True`` the callable receives the *list* of payloads of
+    a whole drained micro-batch in one call and must return a sequence of
+    per-payload results of the same length — typically
+    ``lambda xs: list(jax.vmap(f)(jnp.stack(xs)))`` — so pellet compute runs
+    once per batch instead of once per message.
+    """
 
     def __init__(self, fn: Callable[[Any], Any], *, name: str = None,
                  in_ports: tuple = ("in",), out_ports: tuple = ("out",),
-                 sequential: bool = False, latency: float = 0.0,
-                 selectivity: float = 1.0):
+                 sequential: bool = False, vectorized: bool = False,
+                 latency: float = 0.0, selectivity: float = 1.0):
         self.fn = fn
         self.name = name or getattr(fn, "__name__", "fn")
         self.in_ports = in_ports
         self.out_ports = out_ports
         self.sequential = sequential
+        self.vectorized = vectorized
         # declared profile hints used by the static look-ahead strategy (§III)
         self.latency_hint = latency
         self.selectivity_hint = selectivity
 
     def compute(self, payload: Any) -> Any:
+        if self.vectorized:   # keep single-message semantics identical
+            return self.fn([payload])[0]
         return self.fn(payload)
+
+    def compute_batch(self, payloads: List[Any]) -> List[Any]:
+        if self.vectorized:
+            return list(self.fn(payloads))
+        # non-vectorized: inherit the exactly-once, error-isolating loop
+        return super().compute_batch(payloads)
 
 
 class KeyedEmit:
