@@ -2,9 +2,13 @@
 (§IV.A supporting numbers — how fast the runtime moves messages).
 
 Measures the adaptive micro-batched data path against a forced
-``batch_max=1`` baseline on the same topologies and records both in
-``BENCH_engine.json`` (append-style, one record per invocation) so later
-PRs have a perf trajectory to compare against.
+``batch_max=1`` baseline on the same topologies, plus the cluster
+runtime: chain4 spread across 2 loopback-transport hosts vs the
+in-process engine (the proxy/transport overhead budget is 15%), and a
+2-host live-migration smoke (one mid-stream migration, message census
+asserted).  Everything is recorded in ``BENCH_engine.json``
+(append-style, one record per invocation) so later PRs have a perf
+trajectory to compare against.
 
   PYTHONPATH=src python -m benchmarks.bench_engine [--n 4000] [--repeats 2]
 """
@@ -16,6 +20,7 @@ import os
 import time
 from typing import List, Optional, Tuple
 
+from repro.cluster import ClusterManager, ClusterSpec
 from repro.core import (Coordinator, FloeGraph, FnMapper, FnPellet,
                         FnReducer, add_mapreduce)
 
@@ -31,8 +36,7 @@ def _set_batch(g: FloeGraph, batch_max: Optional[int]) -> None:
         v.annotations["batch_max"] = batch_max
 
 
-def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
-               batch_max: Optional[int] = None) -> float:
+def _chain_graph(chain_len: int, cores: int) -> FloeGraph:
     g = FloeGraph("chain")
     prev = None
     for i in range(chain_len):
@@ -40,14 +44,58 @@ def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
         if prev is not None:
             g.connect(prev, f"p{i}")
         prev = f"p{i}"
+    return g
+
+
+def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
+               batch_max: Optional[int] = None,
+               cluster_hosts: int = 0) -> float:
+    """chain_len stages; ``cluster_hosts > 0`` runs the same topology on a
+    loopback-transport cluster with stages spread across the hosts (every
+    edge cross-host), so the delta vs 0 is pure cluster-runtime overhead.
+    """
+    g = _chain_graph(chain_len, cores)
     _set_batch(g, batch_max)
-    coord = Coordinator(g).start()
+    if cluster_hosts:
+        cluster = ClusterManager(ClusterSpec(
+            hosts=cluster_hosts, cores_per_host=max(8, cores * chain_len),
+            placement="spread"))
+        coord = Coordinator(g, cluster=cluster).start()
+    else:
+        coord = Coordinator(g).start()
     try:
         t0 = time.time()
-        for i in range(n_msgs):
-            coord.inject("p0", i)
+        coord.inject_many("p0", list(range(n_msgs)))
         assert coord.run_until_quiescent(timeout=300)
         return time.time() - t0
+    finally:
+        coord.stop()
+
+
+def _run_migration_smoke(n_msgs: int) -> dict:
+    """2 hosts, 1 live migration mid-stream; asserts the message census."""
+    g = _chain_graph(3, cores=2)
+    cluster = ClusterManager(ClusterSpec(hosts=2, cores_per_host=8))
+    coord = Coordinator(g, cluster=cluster).start()
+    try:
+        t0 = time.time()
+        coord.inject_many("p0", list(range(n_msgs)))
+        src = cluster.host_of("p1").name
+        dst = "h1" if src == "h0" else "h0"
+        mt0 = time.time()
+        cluster.migrate("p1", dst)
+        migrate_s = time.time() - mt0
+        assert coord.run_until_quiescent(timeout=300)
+        total_s = time.time() - t0
+        out = [m.payload for m in coord.drain_outputs() if m.is_data()]
+        delivered, unique = len(out), len(set(out))
+        assert delivered == n_msgs and unique == n_msgs, \
+            f"census: {delivered} delivered / {unique} unique of {n_msgs}"
+        return {"n": n_msgs, "delivered": delivered, "unique": unique,
+                "lost": n_msgs - delivered,
+                "duplicated": delivered - unique,
+                "migrate_s": round(migrate_s, 4),
+                "msgs_per_s": round(n_msgs / total_s, 1)}
     finally:
         coord.stop()
 
@@ -66,8 +114,7 @@ def _run_shuffle(n_msgs: int, n_map: int = 2, n_red: int = 4,
     coord = Coordinator(g).start()
     try:
         t0 = time.time()
-        for i in range(n_msgs):
-            coord.inject("src", i)
+        coord.inject_many("src", list(range(n_msgs)))
         coord.inject_landmark("src")
         assert coord.run_until_quiescent(timeout=300)
         return time.time() - t0
@@ -99,6 +146,34 @@ def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], 
         rows.append((f"engine_{label}_batched", dt_b * 1e6 / n,
                      f"{b_rate:,.0f} msg/s adaptive micro-batches "
                      f"({speedup:.1f}x)"))
+    # cluster runtime: chain4 spread over 2 loopback hosts (every edge
+    # cross-host) vs in-process.  Measured as an interleaved best-of-N
+    # pair (N >= 3): single-run wall times on a shared box swing well
+    # past the overhead being measured, and interleaving keeps machine
+    # drift from biasing one side.
+    cr = max(repeats, 3)
+    in_times, cl_times = [], []
+    for _ in range(cr):
+        in_times.append(_run_chain(n, chain_len=4))
+        cl_times.append(_run_chain(n, chain_len=4, cluster_hosts=2))
+    dt_in, dt_cluster = min(in_times), min(cl_times)
+    c_rate = n / dt_cluster
+    inproc = round(n / dt_in, 1)
+    overhead_pct = (dt_cluster - dt_in) / dt_in * 100.0
+    migration = _run_migration_smoke(n)
+    results["cluster"] = {
+        "chain4_cluster_msgs_per_s": round(c_rate, 1),
+        "chain4_inproc_msgs_per_s": inproc,
+        "overhead_pct": round(overhead_pct, 2),
+        "migration": migration,
+    }
+    rows.append(("engine_chain4_cluster2", dt_cluster * 1e6 / n,
+                 f"{c_rate:,.0f} msg/s 2-host loopback cluster "
+                 f"({overhead_pct:+.1f}% vs in-process)"))
+    rows.append(("engine_cluster_migration", migration["migrate_s"] * 1e6,
+                 f"1 live migration mid-stream, {migration['delivered']}"
+                 f"/{migration['n']} delivered, {migration['lost']} lost, "
+                 f"{migration['duplicated']} dup"))
     return rows, results
 
 

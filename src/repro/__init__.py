@@ -25,6 +25,9 @@ __version__ = "1.1.0"
 from .api import (CompositionError, ElasticPolicy, Flow, PortRef,
                   Recomposition, RecompositionError, Session,
                   SessionStateError, StageHandle)
+# Cluster runtime (simulated-VM hosts, placement, migration, transports)
+from .cluster import (ClusterError, ClusterManager, ClusterSpec, Host,
+                      LoopbackTransport, SerializingTransport)
 # Pellet/message vocabulary used by both APIs
 from .core import (Drop, FnMapper, FnPellet, FnReducer, KeyedEmit, Mapper,
                    Message, Pellet, PullPellet, PushPellet, Reducer,
@@ -37,6 +40,9 @@ __all__ = [
     "Flow", "Session", "Recomposition", "StageHandle", "PortRef",
     "ElasticPolicy", "CompositionError", "RecompositionError",
     "SessionStateError",
+    # cluster runtime
+    "ClusterSpec", "ClusterManager", "ClusterError", "Host",
+    "LoopbackTransport", "SerializingTransport",
     # pellets & messages
     "Pellet", "PushPellet", "PullPellet", "WindowPellet", "TuplePellet",
     "FnPellet", "FnMapper", "FnReducer", "Mapper", "Reducer",

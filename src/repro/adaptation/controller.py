@@ -7,6 +7,12 @@ arrival rate and EWMA service latency, asks the pellet's strategy for a core
 allocation, and applies it through ``Coordinator.set_cores`` (which resizes
 the instance pool semaphore — the paper's "fine-grained resource control").
 
+In cluster mode the controller actuates at *two* levels: decisions route
+through ``ClusterManager.actuate``, which grants what the stage's current
+host can (intra-VM scale-up) and otherwise acquires a VM — respecting its
+spin-up latency — and live-migrates the stage once it is ready (inter-VM
+scale-out), consolidating home and releasing idle hosts on scale-down.
+
 Most users never construct this directly: annotate stages with
 ``StageHandle.elastic(...)`` and ``flow.session()`` builds and manages one
 controller per session (see ``repro.api``).
@@ -26,6 +32,8 @@ class AdaptationController:
                  strategies: Dict[str, Strategy], *,
                  sample_interval: float = 0.25):
         self.coordinator = coordinator
+        #: VM-level actuation tier (None = single-process set_cores only)
+        self.cluster = getattr(coordinator, "cluster", None)
         self.strategies = strategies
         self.sample_interval = sample_interval
         self._stop = threading.Event()
@@ -58,9 +66,17 @@ class AdaptationController:
                 queue_length=flake.queue_length(),
                 input_rate=in_rate,
                 service_latency=flake.stats.avg_latency,
-                cores=flake.cores)
+                cores=flake.cores,
+                last_batch=flake.stats.last_batch,
+                avg_batch=flake.stats.avg_batch)
             cores = max(0, strat.decide(obs))
-            if cores != flake.cores:
+            if self.cluster is not None:
+                # two-level actuation: intra-VM resize when the host can
+                # grant it, acquire-and-migrate scale-out when it cannot
+                # (actuate returns what actually landed this tick)
+                if cores != flake.cores:
+                    cores = self.cluster.actuate(name, cores)
+            elif cores != flake.cores:
                 flake.set_cores(cores)
             self.history.append((now, name, obs, cores))
 

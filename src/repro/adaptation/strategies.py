@@ -44,6 +44,13 @@ class Observation:
     input_rate: float         # msgs/s arriving over the sampling window
     service_latency: float    # seconds per message for ONE instance
     cores: int                # current allocation
+    #: batch occupancy of the engine's adaptive micro-batched data path:
+    #: size of the most recent dispatch and its EWMA.  A persistently full
+    #: batch (avg_batch ~ batch_max) is a backlog signal latency alone can
+    #: hide — vectorized pellets amortize so well that service_latency
+    #: stays low while the queue saturates.
+    last_batch: int = 0
+    avg_batch: float = 0.0
 
 
 @dataclass

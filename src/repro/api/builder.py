@@ -174,6 +174,49 @@ class StageHandle:
         self.annotations["batch_wait_ms"] = float(max_wait_ms)
         return self
 
+    # -- placement -------------------------------------------------------------
+    def place(self, *, host: Optional[str] = None,
+              colocate_with: Optional[Union["StageHandle", str]] = None
+              ) -> "StageHandle":
+        """Pin this stage's initial cluster placement (validated now).
+
+        ``host`` names a VM of the session's ``ClusterSpec`` fleet
+        (``"h0"``, ``"h1"``, …); ``colocate_with`` places this stage on
+        whatever host another stage of this flow lands on (chains resolve;
+        the referenced stage must be declared).  Exactly one may be given.
+        The annotation only takes effect in cluster sessions
+        (``flow.session(cluster=...)``); single-process sessions ignore it.
+        """
+        if (host is None) == (colocate_with is None):
+            raise CompositionError(
+                f"stage {self.name!r}: place() needs exactly one of "
+                "host= or colocate_with=")
+        if host is not None:
+            if not isinstance(host, str) or not host:
+                raise CompositionError(
+                    f"stage {self.name!r}: place(host=...) must be a "
+                    "non-empty host name string")
+            self.annotations["place_host"] = host
+            self.annotations.pop("colocate_with", None)
+            return self
+        target = colocate_with.name if isinstance(colocate_with, StageHandle) \
+            else colocate_with
+        if isinstance(colocate_with, StageHandle) and \
+                colocate_with.flow is not self.flow:
+            raise CompositionError(
+                f"stage {self.name!r}: colocate_with stage {target!r} "
+                "belongs to a different Flow")
+        if target not in self.flow.stages:
+            raise CompositionError(
+                f"stage {self.name!r}: colocate_with target {target!r} is "
+                "not a declared stage of this flow")
+        if target == self.name:
+            raise CompositionError(
+                f"stage {self.name!r}: cannot colocate with itself")
+        self.annotations["colocate_with"] = target
+        self.annotations.pop("place_host", None)
+        return self
+
     # -- elasticity -----------------------------------------------------------
     def elastic(self, *, strategy: str = "dynamic", **params) -> "StageHandle":
         """Attach a declarative elasticity policy (validated now).

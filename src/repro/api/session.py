@@ -30,7 +30,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 from ..adaptation.controller import AdaptationController
 from ..core.engine import Container, Coordinator
 from ..core.graph import FloeGraph
-from ..core.message import Message, landmark
+from ..core.message import Message
 from ..core.patterns import SPLITS
 from ..core.pellet import Pellet
 from .builder import Flow, StageHandle
@@ -48,12 +48,22 @@ class Session:
 
     def __init__(self, flow: Flow, *,
                  containers: Optional[List[Container]] = None,
+                 cluster=None,
                  channel_capacity: int = 100_000,
                  speculative_timeout: Optional[float] = None,
                  sample_interval: float = 0.25,
                  drain_timeout: float = 60.0):
         self.flow = flow
         self._containers = containers
+        #: ``ClusterSpec`` (a manager is built per open) or a prebuilt
+        #: ``ClusterManager`` — turns this into a multi-host session:
+        #: placement annotations apply, edges may cross transports, and
+        #: elasticity actuates at both the core and the VM level.
+        self._cluster_opt = cluster
+        if cluster is not None and containers is not None:
+            raise SessionStateError(
+                "pass either containers (single-process) or cluster, "
+                "not both")
         self._channel_capacity = channel_capacity
         self._speculative_timeout = speculative_timeout
         self._sample_interval = sample_interval
@@ -67,7 +77,14 @@ class Session:
         if self._coord is not None:
             raise SessionStateError("session already open")
         graph = self.flow.build()
+        cluster = self._cluster_opt
+        if cluster is not None and not hasattr(cluster, "place_all"):
+            # a ClusterSpec blueprint: build a fresh manager per open, so
+            # the same Flow+spec can be opened repeatedly
+            from ..cluster import ClusterManager
+            cluster = ClusterManager(cluster)
         coord = Coordinator(graph, containers=self._containers,
+                            cluster=cluster,
                             channel_capacity=self._channel_capacity,
                             speculative_timeout=self._speculative_timeout)
         coord.start()
@@ -115,16 +132,26 @@ class Session:
     # -- I/O -----------------------------------------------------------------
     def inject(self, target: Target, payload: Any, *,
                port: Optional[str] = None, key: Any = None) -> None:
+        # routed through the coordinator: injection is atomic against a
+        # concurrent live migration's backlog hand-off
         name = _name(target)
-        flake = self.coordinator.flakes[name]
-        port = port or self._default_in(name)
-        flake.enqueue(port, Message(payload=payload, key=key))
+        self.coordinator.inject(name, payload,
+                                port=port or self._default_in(name), key=key)
+
+    def inject_many(self, target: Target, payloads: Sequence[Any], *,
+                    port: Optional[str] = None,
+                    keys: Optional[Sequence[Any]] = None) -> None:
+        """Batched injection (one enqueue round-trip for the whole list)."""
+        name = _name(target)
+        self.coordinator.inject_many(
+            name, list(payloads), port=port or self._default_in(name),
+            keys=list(keys) if keys is not None else None)
 
     def inject_landmark(self, target: Target, tag: Any = None, *,
                         port: Optional[str] = None) -> None:
         name = _name(target)
-        port = port or self._default_in(name)
-        self.coordinator.flakes[name].enqueue(port, landmark(tag))
+        self.coordinator.inject_landmark(
+            name, tag, port=port or self._default_in(name))
 
     def _default_in(self, name: str) -> str:
         stage = self.flow.stages.get(name)
@@ -165,6 +192,41 @@ class Session:
         return self.coordinator.stats()
 
     @property
+    def cluster(self):
+        """The session's ``ClusterManager`` (None in single-process mode)."""
+        return self.coordinator.cluster
+
+    def hosts(self) -> Dict[str, Dict[str, Any]]:
+        """Live host fleet state (cluster sessions only)."""
+        if self.cluster is None:
+            raise SessionStateError("not a cluster session; open with "
+                                    "flow.session(cluster=ClusterSpec(...))")
+        return {n: h.describe() for n, h in self.cluster.hosts.items()}
+
+    def describe(self) -> Dict[str, Any]:
+        """One structured snapshot of the whole session: stages (with
+        placement), edges, per-flake stats, and — in cluster mode — the
+        full cluster state (hosts, placement, transport ledger, events)."""
+        coord = self.coordinator
+        stats = coord.stats()
+        return {
+            "flow": self.flow.name,
+            "stages": {
+                name: {**stats.get(name, {}),
+                       "elastic": (self.flow.stages[name].policy.strategy
+                                   if name in self.flow.stages and
+                                   self.flow.stages[name].policy is not None
+                                   else None)}
+                for name in coord.flakes},
+            "edges": [{"src": e.src, "src_port": e.src_port,
+                       "dst": e.dst, "dst_port": e.dst_port,
+                       "split": e.split}
+                      for e in coord.graph.edges],
+            "cluster": (self.cluster.describe()
+                        if self.cluster is not None else None),
+        }
+
+    @property
     def errors(self) -> List:
         return self.coordinator.errors
 
@@ -192,6 +254,25 @@ class Session:
                 f"set_batch({_name(target)!r}): the batch knob applies to "
                 f"push pellets only, not {type(flake._proto).__name__}")
         flake.set_batch(max_size, max_wait_ms)
+
+    def migrate(self, target: Target, host: str, *,
+                cores: Optional[int] = None,
+                quiesce_timeout: Optional[float] = None) -> None:
+        """Live-migrate one stage to another host (cluster sessions only).
+
+        Pauses the stage, drains in-flight work via the engine's
+        quiescence machinery, hands off channel backlog and pellet state,
+        and respawns it on ``host`` — no message lost or duplicated, and
+        landmark/window alignment survives.  Blocks while the target VM
+        finishes spinning up (acquisition latency is real here).
+        """
+        if self.cluster is None:
+            raise SessionStateError("migrate() needs a cluster session; "
+                                    "open with flow.session(cluster=...)")
+        self.cluster.migrate(
+            _name(target), host, cores=cores,
+            quiesce_timeout=(self.drain_timeout if quiesce_timeout is None
+                             else quiesce_timeout))
 
     def update(self, target: Target, factory: Callable[[], Pellet], *,
                mode: str = "sync") -> None:

@@ -1,0 +1,18 @@
+"""Cluster runtime: simulated-VM hosts, placement, transports, migration.
+
+Turns the single-process engine into a multi-host deployment target (paper
+§III container model + §V adaptation): ``ClusterSpec`` describes the VM
+fleet, ``ClusterManager`` owns acquisition/release/placement and the
+two-level elasticity actuation, ``Host`` is one provisioned VM, and the
+transports give cross-host edges realistic (and enforced-serializable)
+cost.  Entry point: ``flow.session(cluster=ClusterSpec(...))``.
+"""
+from .host import ClusterError, ClusterSpec, Host
+from .manager import ClusterManager
+from .transport import (LoopbackTransport, RemoteFlake, SerializingTransport,
+                        Transport)
+
+__all__ = [
+    "ClusterError", "ClusterSpec", "Host", "ClusterManager",
+    "Transport", "LoopbackTransport", "SerializingTransport", "RemoteFlake",
+]

@@ -1,0 +1,142 @@
+"""Simulated-VM hosts and the cluster blueprint (paper §III, §V).
+
+A :class:`Host` is one provisioned VM: a core budget (backed by the
+engine's per-host :class:`~repro.core.engine.Container` accounting), a
+configurable spin-up latency before it can run flakes, and a modeled
+teardown cost.  The initial fleet described by :class:`ClusterSpec` is
+ready immediately (you start with it); hosts acquired *elastically* at
+runtime pay ``spinup_s`` before they become usable — the acquisition
+latency that, per Shukla & Simmhan, dominates elasticity quality and that
+the VM-level adaptation tier must respect.
+
+Simulated wall-clock: readiness is a timestamp (``ready_at``), not a
+sleep, so callers choose between polling (``is_ready`` — what the
+adaptation controller does each tick) and blocking (``wait_ready`` — what
+an explicit ``migrate`` does).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from ..core.engine import Container
+
+PLACEMENTS = ("bin_pack", "spread")
+TRANSPORTS = ("loopback", "serializing")
+
+
+class ClusterError(RuntimeError):
+    """Cluster runtime violation: quota exhausted, bad host, unplaceable."""
+
+
+@dataclass
+class ClusterSpec:
+    """Declarative cluster blueprint consumed by ``flow.session(cluster=)``.
+
+    ``hosts`` VMs of ``cores_per_host`` cores are pre-provisioned; the
+    elasticity tier may acquire up to ``max_hosts`` total (``None`` =
+    unbounded), each paying ``spinup_s`` of acquisition latency.
+    ``placement`` picks the initial policy — ``bin_pack`` (best-fit by the
+    stages' core hints, fewest VMs) or ``spread`` (load-aware: most free
+    cores first, maximum headroom per stage).  ``transport`` selects the
+    cross-host edge cost model (see ``cluster.transport``).
+    """
+
+    hosts: int = 1
+    cores_per_host: int = 8
+    max_hosts: Optional[int] = None
+    spinup_s: float = 0.0
+    teardown_s: float = 0.0
+    placement: str = "bin_pack"
+    transport: str = "loopback"
+    per_msg_delay_s: float = 0.0
+    per_byte_delay_s: float = 0.0
+    #: the idle reaper leaves an empty elastic host alone until it has
+    #: been ready this long — a VM you just paid spin-up for (explicit
+    #: acquire, or a scale-out whose burst subsided) gets a chance to be
+    #: used before it is torn down
+    idle_grace_s: float = 1.0
+
+    def __post_init__(self) -> None:
+        if int(self.hosts) < 1:
+            raise ClusterError("cluster needs hosts >= 1")
+        if int(self.cores_per_host) < 1:
+            raise ClusterError("cluster needs cores_per_host >= 1")
+        if self.max_hosts is not None and int(self.max_hosts) < self.hosts:
+            raise ClusterError("max_hosts must be >= hosts (initial fleet)")
+        if self.placement not in PLACEMENTS:
+            raise ClusterError(
+                f"unknown placement {self.placement!r}; one of {PLACEMENTS}")
+        if self.transport not in TRANSPORTS:
+            raise ClusterError(
+                f"unknown transport {self.transport!r}; one of {TRANSPORTS}")
+        if self.spinup_s < 0 or self.teardown_s < 0 or self.idle_grace_s < 0:
+            raise ClusterError(
+                "spinup_s/teardown_s/idle_grace_s must be >= 0")
+
+
+class Host:
+    """One provisioned (simulated) VM: core budget + lifecycle timestamps."""
+
+    def __init__(self, name: str, cores: int, *, spinup_s: float = 0.0,
+                 teardown_s: float = 0.0, elastic: bool = False):
+        self.name = name
+        self.cores = int(cores)
+        self.container = Container(name, self.cores)
+        self.spinup_s = float(spinup_s)
+        self.teardown_s = float(teardown_s)
+        #: elastically acquired (vs part of the initial fleet): pays spin-up
+        #: latency and is eligible for idle release
+        self.elastic = elastic
+        self.acquired_at = time.time()
+        self.ready_at = self.acquired_at + (self.spinup_s if elastic else 0.0)
+        self.released_at: Optional[float] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def is_ready(self) -> bool:
+        return self.released_at is None and time.time() >= self.ready_at
+
+    @property
+    def state(self) -> str:
+        if self.released_at is not None:
+            return "released"
+        return "ready" if self.is_ready else "provisioning"
+
+    def wait_ready(self, timeout: Optional[float] = None) -> None:
+        """Block until the VM finishes spinning up (acquisition latency)."""
+        if self.released_at is not None:
+            raise ClusterError(f"host {self.name!r} was released")
+        remaining = self.ready_at - time.time()
+        if remaining <= 0:
+            return
+        if timeout is not None and remaining > timeout:
+            raise TimeoutError(
+                f"host {self.name!r} not ready within {timeout}s "
+                f"({remaining:.2f}s of spin-up remaining)")
+        time.sleep(remaining)
+
+    def uptime(self, now: Optional[float] = None) -> float:
+        """Billable seconds: acquisition to release (plus teardown if done)."""
+        end = self.released_at if self.released_at is not None \
+            else (now if now is not None else time.time())
+        return max(0.0, end - self.acquired_at) + \
+            (self.teardown_s if self.released_at is not None else 0.0)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def free_cores(self) -> int:
+        return self.container.free_cores
+
+    def describe(self) -> Dict[str, Any]:
+        return {"cores": self.cores,
+                "free_cores": self.free_cores,
+                "state": self.state,
+                "elastic": self.elastic,
+                "allocated": dict(self.container.allocated),
+                "uptime_s": round(self.uptime(), 6)}
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"<Host {self.name} {self.state} "
+                f"{self.free_cores}/{self.cores} free>")

@@ -1,0 +1,410 @@
+"""ClusterManager — acquire/release hosts, place flakes, actuate elasticity.
+
+This is the tier between the adaptation strategies and the engine that the
+de Assunção et al. survey frames as the missing layer: it owns the
+(simulated) VM fleet, decides *where* each flake runs (bin-pack vs
+load-aware spread, plus explicit ``place(host=…)`` / ``colocate_with=…``
+annotations), keeps a cost/utilization ledger, and gives strategies a
+two-level actuation surface:
+
+* ``resize(flake, cores)`` — intra-VM scale-up/-down, container-accounted
+  and bounded by the flake's current host;
+* ``actuate(flake, cores)`` — ``resize`` plus the inter-VM tier: when a
+  host cannot grant the requested cores it acquires a new VM (respecting
+  the quota and spin-up latency) and live-migrates the flake once the VM
+  is ready; on scale-down it consolidates the flake back to its home host
+  and releases idle elastic hosts.
+
+Live migration mechanics live in ``Coordinator.migrate_flake`` (the engine
+owns flakes and wiring); the manager drives it and does the accounting.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Union
+
+from .host import ClusterError, ClusterSpec, Host
+from .transport import LoopbackTransport, RemoteFlake, SerializingTransport, \
+    Transport
+
+HostRef = Union[str, Host]
+
+
+class ClusterManager:
+    """Owns the host fleet of one cluster-mode Coordinator."""
+
+    def __init__(self, spec: Optional[ClusterSpec] = None, **spec_kwargs):
+        self.spec = spec if spec is not None else ClusterSpec(**spec_kwargs)
+        self.hosts: Dict[str, Host] = {}
+        self._lock = threading.RLock()
+        self._coord = None
+        #: flake -> host name (live) and flake -> host name (initial home,
+        #: the consolidation target when load subsides)
+        self._placement: Dict[str, str] = {}
+        self._home: Dict[str, str] = {}
+        #: flake -> host name of a VM acquired for it that is still
+        #: spinning up (so the controller doesn't acquire one per tick)
+        self._pending: Dict[str, str] = {}
+        self.events: List[Dict[str, Any]] = []
+        self._t0 = time.time()
+        if self.spec.transport == "serializing":
+            self.transport: Transport = SerializingTransport(
+                self.spec.per_msg_delay_s, self.spec.per_byte_delay_s)
+        else:
+            self.transport = LoopbackTransport()
+        for _ in range(self.spec.hosts):
+            self._new_host(elastic=False)
+
+    # -- fleet -------------------------------------------------------------
+    def _new_host(self, *, elastic: bool) -> Host:
+        with self._lock:
+            name = f"h{len(self.hosts)}"
+            host = Host(name, self.spec.cores_per_host,
+                        spinup_s=self.spec.spinup_s,
+                        teardown_s=self.spec.teardown_s, elastic=elastic)
+            self.hosts[name] = host
+            self._event("acquire", host=name, elastic=elastic,
+                        spinup_s=host.ready_at - host.acquired_at)
+            return host
+
+    def host(self, ref: HostRef) -> Host:
+        if isinstance(ref, Host):
+            return ref
+        try:
+            return self.hosts[ref]
+        except KeyError:
+            raise ClusterError(
+                f"unknown host {ref!r}; have {sorted(self.hosts)}") from None
+
+    def active_hosts(self) -> List[Host]:
+        return [h for h in self.hosts.values() if h.released_at is None]
+
+    def acquire_host(self) -> Host:
+        """Elastically provision one VM (spin-up latency applies).
+
+        Raises :class:`ClusterError` when the quota (``max_hosts``) is
+        exhausted — the caller falls back to bounded intra-VM scale-up.
+        """
+        with self._lock:
+            if self.spec.max_hosts is not None and \
+                    len(self.active_hosts()) >= int(self.spec.max_hosts):
+                raise ClusterError(
+                    f"host quota exhausted ({self.spec.max_hosts})")
+            return self._new_host(elastic=True)
+
+    def release_host(self, ref: HostRef) -> None:
+        """Tear a VM down.  It must be empty (no flakes placed on it)."""
+        with self._lock:
+            host = self.host(ref)
+            if host.released_at is not None:
+                return
+            placed = [f for f, h in self._placement.items() if h == host.name]
+            if placed:
+                raise ClusterError(
+                    f"cannot release host {host.name!r}: still hosts "
+                    f"{sorted(placed)} (migrate them away first)")
+            waiting = [f for f, h in self._pending.items() if h == host.name]
+            if waiting:
+                raise ClusterError(
+                    f"cannot release host {host.name!r}: scale-out of "
+                    f"{sorted(waiting)} is pending on it")
+            host.released_at = time.time()
+            self._event("release", host=host.name,
+                        uptime_s=round(host.uptime(), 6))
+
+    # -- placement ---------------------------------------------------------
+    def bind(self, coordinator) -> "ClusterManager":
+        with self._lock:
+            if self._coord is not None and self._coord is not coordinator:
+                raise ClusterError(
+                    "cluster is already bound to a running coordinator; "
+                    "one manager hosts one session at a time")
+            self._coord = coordinator
+        return self
+
+    def unbind(self, coordinator=None) -> None:
+        """Forget the bound coordinator and all its placements (session
+        teardown).  The host fleet and its ledger survive, so a prebuilt
+        manager can be handed to the next session."""
+        with self._lock:
+            if coordinator is not None and self._coord is not coordinator:
+                return
+            self._coord = None
+            self._placement.clear()
+            self._home.clear()
+            self._pending.clear()
+            self._event("unbind")
+
+    def host_of(self, flake_name: str) -> Host:
+        try:
+            return self.hosts[self._placement[flake_name]]
+        except KeyError:
+            raise ClusterError(
+                f"flake {flake_name!r} is not placed on this cluster") \
+                from None
+
+    def place_all(self, graph, order: List[str]) -> Dict[str, Host]:
+        """Initial placement for a whole graph (start-time).
+
+        Two passes: policy/explicit-host placements first, then
+        ``colocate_with`` stages (which may reference a stage placed in
+        either pass; chains resolve, cycles are an error).
+        """
+        placed: Dict[str, Host] = {}
+        colocated: List[str] = []
+        for name in order:
+            ann = graph.vertices[name].annotations
+            if ann.get("colocate_with"):
+                colocated.append(name)
+                continue
+            placed[name] = self.place(name, graph.vertices[name].cores,
+                                      host=ann.get("place_host"))
+        for name in colocated:
+            target = graph.vertices[name].annotations["colocate_with"]
+            seen = {name}
+            while target in graph.vertices and \
+                    graph.vertices[target].annotations.get("colocate_with"):
+                if target in seen:
+                    raise ClusterError(
+                        f"colocate_with cycle through {sorted(seen)}")
+                seen.add(target)
+                target = graph.vertices[target].annotations["colocate_with"]
+            if target not in placed and target not in self._placement:
+                raise ClusterError(
+                    f"stage {name!r}: colocate_with target {target!r} is "
+                    "not a placed stage of this flow")
+            placed[name] = self.place(name, graph.vertices[name].cores,
+                                      host=self._placement[target])
+        return placed
+
+    def place(self, flake_name: str, cores: int,
+              host: Optional[HostRef] = None) -> Host:
+        """Pick (or honor) a host for one flake and allocate its cores.
+
+        Policy placement considers ready hosts only.  When nothing fits
+        the core hint, the least-loaded host is oversubscribed (recorded
+        in the ledger) — mirroring the legacy engine, which auto-grew a
+        container, but without silently inflating the fleet.
+        """
+        with self._lock:
+            if flake_name in self._placement:
+                raise ClusterError(f"flake {flake_name!r} is already placed")
+            cores = max(0, int(cores))
+            if host is not None:
+                chosen = self.host(host)
+                if chosen.released_at is not None:
+                    raise ClusterError(
+                        f"cannot place on released host {chosen.name!r}")
+            else:
+                ready = [h for h in self.active_hosts() if h.is_ready]
+                if not ready:
+                    raise ClusterError("no ready hosts to place on")
+                fitting = [h for h in ready if h.free_cores >= cores]
+                if self.spec.placement == "spread":
+                    # load-aware: maximum headroom (ties: fleet order)
+                    chosen = max(ready, key=lambda h: h.free_cores)
+                elif fitting:
+                    # bin-pack: best fit — smallest sufficient headroom
+                    chosen = min(fitting, key=lambda h: h.free_cores)
+                else:
+                    chosen = max(ready, key=lambda h: h.free_cores)
+            if not chosen.container.allocate(flake_name, cores):
+                chosen.container.allocate(flake_name, cores, force=True)
+                self._event("oversubscribe", host=chosen.name,
+                            flake=flake_name, cores=cores)
+            self._placement[flake_name] = chosen.name
+            self._home.setdefault(flake_name, chosen.name)
+            self._event("place", host=chosen.name, flake=flake_name,
+                        cores=cores)
+            return chosen
+
+    def _record_migration(self, flake_name: str, host: Host) -> None:
+        """Placement bookkeeping callback from ``Coordinator.migrate_flake``."""
+        with self._lock:
+            src = self._placement.get(flake_name)
+            self._placement[flake_name] = host.name
+            self._pending.pop(flake_name, None)
+            self._event("migrate", flake=flake_name, src=src, dst=host.name)
+
+    def route_target(self, src: str, dst: str, flake):
+        """Resolve the routing target for edge src->dst: direct reference
+        on the same host, transport proxy across hosts."""
+        if self._placement.get(src) == self._placement.get(dst):
+            return flake
+        return RemoteFlake(flake, self.transport)
+
+    # -- migration ---------------------------------------------------------
+    def migrate(self, flake_name: str, host: HostRef, *,
+                cores: Optional[int] = None,
+                quiesce_timeout: float = 30.0) -> Host:
+        """Live-migrate one flake (engine mechanics, manager accounting)."""
+        if self._coord is None:
+            raise ClusterError("cluster is not bound to a coordinator")
+        target = self.host(host)
+        self._coord.migrate_flake(flake_name, target, cores=cores,
+                                  quiesce_timeout=quiesce_timeout)
+        return target
+
+    # -- two-level elasticity actuation -------------------------------------
+    def resize(self, flake_name: str, want: int) -> int:
+        """Intra-VM scale: adjust cores within the flake's current host.
+
+        Container-accounted; the grant is bounded by the host's free
+        budget.  Returns the cores actually granted.
+        """
+        flake = self._coord.flakes[flake_name]
+        with self._lock:
+            host = self.host_of(flake_name)
+            cur = flake.cores
+            want = max(0, int(want))
+            if want < cur:
+                released = host.container.release(flake_name, cur - want)
+                assert released == cur - want, \
+                    f"{flake_name}: container held {released}, freed " \
+                    f"{cur - want} expected"
+                grant = want
+            elif want > cur:
+                grant = min(want, cur + host.container.free_cores)
+                if grant > cur:
+                    host.container.allocate(flake_name, grant - cur)
+            else:
+                return cur
+        flake.set_cores(grant)
+        return grant
+
+    def actuate(self, flake_name: str, want: int) -> int:
+        """Two-level actuation for the adaptation tier.
+
+        Scale-up: grant what the current host can (``resize``); if short,
+        acquire a VM (quota permitting) and migrate once it is ready —
+        ticks that land during spin-up keep the bounded intra-VM grant, so
+        acquisition latency is respected rather than wished away.
+        Scale-down: resize, then consolidate home and release idle
+        elastic hosts.
+        """
+        want = max(0, int(want))
+        cur = self._coord.flakes[flake_name].cores
+        grant = self.resize(flake_name, want)
+        if want > grant:
+            return self._scale_out(flake_name, want, grant)
+        # demand is satisfiable on the current host: cancel any in-flight
+        # scale-out (a VM acquired for a burst that subsided would
+        # otherwise sit provisioned-but-unused forever)
+        if self._pending.pop(flake_name, None) is not None:
+            self.release_idle_hosts()
+        if want < cur:
+            self._consolidate(flake_name, want)
+        return grant
+
+    def _scale_out(self, flake_name: str, want: int, granted: int) -> int:
+        host = self.host_of(flake_name)
+        with self._lock:
+            pending = self._pending.get(flake_name)
+            if pending is None:
+                # a migration is only worth its drain if the target can
+                # grant strictly more than the flake holds now — prefer an
+                # existing ready host, else provision a VM (but never for
+                # a move that a fresh cores_per_host VM couldn't improve:
+                # that would just hop between same-sized hosts forever)
+                target = next(
+                    (h for h in self.active_hosts()
+                     if h is not host and h.is_ready
+                     and min(want, h.free_cores) > granted), None)
+                if target is None:
+                    if min(want, self.spec.cores_per_host) <= granted:
+                        return granted
+                    try:
+                        target = self.acquire_host()
+                    except ClusterError:
+                        return granted   # quota: bounded scale-up only
+                self._pending[flake_name] = target.name
+            target = self.hosts[self._pending[flake_name]]
+            if target.released_at is not None:
+                # the pending VM is gone (released out from under us):
+                # restart the scale-out decision on a later tick
+                self._pending.pop(flake_name, None)
+                return granted
+            if not target.is_ready:
+                return granted           # VM still spinning up: wait
+            grant = min(want, target.free_cores)
+            if grant <= granted:
+                # demand shifted (or the target filled up) while the VM
+                # spun up: abandon the move, release it if now idle
+                self._pending.pop(flake_name, None)
+        if grant <= granted:
+            self.release_idle_hosts()
+            return granted
+        self.migrate(flake_name, target, cores=grant)
+        self.release_idle_hosts()
+        return grant
+
+    def _consolidate(self, flake_name: str, want: int) -> None:
+        """Return a scaled-down flake to its home host when it fits again,
+        then release any elastic host left idle.
+
+        Only fires once the flake's queue is empty: a want that merely
+        dips mid-drain must not trigger a migrate-home that the still-
+        draining backlog immediately reverses (thrash: home, re-scale-out,
+        acquire another VM).
+        """
+        with self._lock:
+            host = self.host_of(flake_name)
+            home = self.hosts.get(self._home.get(flake_name, ""))
+            movable = (home is not None and home is not host
+                       and home.released_at is None and home.is_ready
+                       and home.container.free_cores >= want
+                       and self._coord.flakes[flake_name].queue_length() == 0)
+        if movable:
+            self.migrate(flake_name, home, cores=want)
+        self.release_idle_hosts()
+
+    def release_idle_hosts(self) -> List[str]:
+        """Release every elastic host that has sat empty past the grace.
+
+        Skips hosts still provisioning, hosts ready for less than
+        ``idle_grace_s`` (just-acquired VMs get a chance to be used), and
+        hosts a scale-out is pending on.
+        """
+        released = []
+        now = time.time()
+        with self._lock:
+            occupied = set(self._placement.values())
+            for host in self.active_hosts():
+                if host.elastic and host.is_ready and \
+                        host.name not in occupied and \
+                        host.name not in self._pending.values() and \
+                        now - host.ready_at >= self.spec.idle_grace_s:
+                    self.release_host(host)
+                    released.append(host.name)
+        return released
+
+    # -- ledger / introspection ---------------------------------------------
+    def _event(self, kind: str, **detail) -> None:
+        self.events.append(
+            {"t": round(time.time() - self._t0, 6), "event": kind, **detail})
+
+    def host_seconds(self) -> float:
+        """Total billable VM time (the cost side of the elasticity ledger)."""
+        now = time.time()
+        return sum(h.uptime(now) for h in self.hosts.values())
+
+    def utilization(self) -> float:
+        """Allocated-core fraction across ready hosts, right now."""
+        ready = [h for h in self.active_hosts() if h.is_ready]
+        total = sum(h.cores for h in ready)
+        if total == 0:
+            return 0.0
+        return sum(h.cores - h.free_cores for h in ready) / total
+
+    def describe(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "hosts": {n: h.describe() for n, h in self.hosts.items()},
+                "placement": dict(self._placement),
+                "pending_scaleout": dict(self._pending),
+                "transport": self.transport.describe(),
+                "host_seconds": round(self.host_seconds(), 6),
+                "utilization": round(self.utilization(), 4),
+                "events": list(self.events),
+            }

@@ -1,0 +1,150 @@
+"""Inter-host message transport (cluster runtime).
+
+Within a host, flakes exchange ``Message`` objects by direct reference —
+the single-process engine's data path, unchanged.  Across (simulated)
+hosts every edge goes through a :class:`Transport`:
+
+* :class:`LoopbackTransport` — the same direct hand-off.  It exists so a
+  cluster topology is *mechanically* identical to a distributed one (every
+  cross-host edge routes through a :class:`RemoteFlake` proxy) while
+  costing nothing, which is what lets tier-1 cluster tests stay
+  deterministic and the benchmark compare cluster mode against the
+  in-process engine apples-to-apples.
+* :class:`SerializingTransport` — round-trips every payload through
+  ``pickle`` and models a per-message + per-byte delay.  Cross-host edges
+  get realistic cost, and serializability is *enforced*, not assumed: a
+  non-picklable payload fails at the sending flake (recorded as a routing
+  error, input credits released), and mutable payloads can never be shared
+  by reference across a host boundary.
+
+Both keep a byte/message/delay ledger that ``ClusterManager.describe()``
+surfaces, so benchmarks can report measured cross-host overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+from typing import Any, Dict, List
+
+from ..core.message import Message
+
+
+class TransportStats:
+    """Cumulative ledger for one transport (messages, batches, bytes, delay).
+
+    Counters are plain int/float adds (GIL-atomic enough for monitoring);
+    they shape reports, never control flow.
+    """
+
+    def __init__(self) -> None:
+        self.messages = 0
+        self.batches = 0
+        self.bytes = 0
+        self.modeled_delay_s = 0.0
+
+    def record(self, n_msgs: int, n_bytes: int, delay_s: float) -> None:
+        self.messages += n_msgs
+        self.batches += 1
+        self.bytes += n_bytes
+        self.modeled_delay_s += delay_s
+
+    def describe(self) -> Dict[str, Any]:
+        return {"messages": self.messages, "batches": self.batches,
+                "bytes": self.bytes,
+                "modeled_delay_s": round(self.modeled_delay_s, 6)}
+
+
+class Transport:
+    """Moves message batches onto a flake that lives on another host."""
+
+    kind = "base"
+
+    def __init__(self) -> None:
+        self.stats = TransportStats()
+
+    def deliver(self, flake, port: str, msgs: List[Message]) -> None:
+        raise NotImplementedError
+
+    def describe(self) -> Dict[str, Any]:
+        return {"kind": self.kind, **self.stats.describe()}
+
+
+class LoopbackTransport(Transport):
+    """In-process hand-off with cross-host bookkeeping (zero modeled cost)."""
+
+    kind = "loopback"
+
+    def deliver(self, flake, port: str, msgs: List[Message]) -> None:
+        self.stats.record(len(msgs), 0, 0.0)
+        flake.enqueue_many(port, msgs)
+
+
+class SerializingTransport(Transport):
+    """Pickle round-trip + modeled wire delay for every cross-host batch.
+
+    ``per_msg_delay_s`` and ``per_byte_delay_s`` model the fixed and
+    size-proportional cost of a network hop; the delay is paid by the
+    *sending* flake's worker (a blocking send), which is what creates
+    genuine backpressure on cross-host edges.  Payloads are serialized
+    *before* any message is enqueued downstream, so a pickling failure
+    delivers nothing (no partial batch) and surfaces at the sender.
+    """
+
+    kind = "serializing"
+
+    def __init__(self, per_msg_delay_s: float = 0.0,
+                 per_byte_delay_s: float = 0.0):
+        super().__init__()
+        self.per_msg_delay_s = max(0.0, float(per_msg_delay_s))
+        self.per_byte_delay_s = max(0.0, float(per_byte_delay_s))
+
+    def deliver(self, flake, port: str, msgs: List[Message]) -> None:
+        total = 0
+        out: List[Message] = []
+        for m in msgs:
+            blob = pickle.dumps(m.payload, protocol=pickle.HIGHEST_PROTOCOL)
+            total += len(blob)
+            # same logical message (seq/lineage/flags preserved), payload
+            # round-tripped so no object is shared across the host boundary
+            out.append(dataclasses.replace(m, payload=pickle.loads(blob)))
+        delay = self.per_msg_delay_s * len(msgs) + \
+            self.per_byte_delay_s * total
+        if delay > 0.0:
+            time.sleep(delay)
+        self.stats.record(len(msgs), total, delay)
+        flake.enqueue_many(port, out)
+
+
+class RemoteFlake:
+    """Routing proxy standing in for a flake on a different host.
+
+    Implements exactly the surface the engine's routing layer touches on a
+    destination — ``enqueue`` / ``enqueue_many`` / ``queue_length`` — and
+    funnels deliveries through the cluster transport.  Landmark fan-in
+    alignment, arrival stats and inflight credits all still happen inside
+    the real flake's ``enqueue`` path, so cross-host semantics are
+    byte-for-byte the in-process ones plus transport cost.
+    """
+
+    __slots__ = ("flake", "transport")
+
+    def __init__(self, flake, transport: Transport):
+        self.flake = flake
+        self.transport = transport
+
+    @property
+    def name(self) -> str:
+        return self.flake.name
+
+    def enqueue(self, port: str, msg: Message) -> None:
+        self.transport.deliver(self.flake, port, [msg])
+
+    def enqueue_many(self, port: str, msgs: List[Message]) -> None:
+        self.transport.deliver(self.flake, port, msgs)
+
+    def queue_length(self) -> int:
+        return self.flake.queue_length()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<remote {self.flake.name!r} via {self.transport.kind}>"

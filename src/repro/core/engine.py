@@ -221,6 +221,7 @@ class FlakeStats:
         self.avg_latency = 0.0    # seconds per message, single instance
         self.batches = 0          # data dispatches on the push path
         self.last_batch = 0       # size of the most recent dispatch
+        self.avg_batch = 0.0      # EWMA dispatch size (batch occupancy)
         self.max_batch = 0
         self._win_arrived = 0
         self._win_processed = 0
@@ -236,6 +237,10 @@ class FlakeStats:
         with self._lock:
             self.batches += 1
             self.last_batch = n
+            if self.avg_batch == 0.0:
+                self.avg_batch = float(n)
+            else:
+                self.avg_batch += self.ewma * (n - self.avg_batch)
             if n > self.max_batch:
                 self.max_batch = n
 
@@ -1034,21 +1039,33 @@ class Container:
     def free_cores(self) -> int:
         return self.total_cores - sum(self.allocated.values())
 
-    def allocate(self, flake_name: str, cores: int) -> bool:
+    def allocate(self, flake_name: str, cores: int,
+                 force: bool = False) -> bool:
+        """Reserve cores.  ``force`` oversubscribes past the budget — used
+        only by cluster placement fallback, and always ledger-recorded."""
         with self._lock:
-            if cores > self.free_cores:
+            if cores > self.free_cores and not force:
                 return False
             self.allocated[flake_name] = self.allocated.get(flake_name, 0) + cores
             return True
 
-    def release(self, flake_name: str, cores: Optional[int] = None) -> None:
+    def release(self, flake_name: str, cores: Optional[int] = None) -> int:
+        """Return cores to the budget; reports how many were actually freed.
+
+        The return value is the release-on-deactivate audit: callers that
+        tear down or migrate a flake away compare it against the cores the
+        flake was believed to hold, so a long-running session cannot leak
+        capacity silently.
+        """
         with self._lock:
-            if flake_name not in self.allocated:
-                return
-            if cores is None or cores >= self.allocated[flake_name]:
+            held = self.allocated.get(flake_name, 0)
+            if held == 0:
+                return 0
+            if cores is None or cores >= held:
                 self.allocated.pop(flake_name)
-            else:
-                self.allocated[flake_name] -= cores
+                return held
+            self.allocated[flake_name] = held - cores
+            return cores
 
 
 class Coordinator:
@@ -1063,17 +1080,42 @@ class Coordinator:
 
     def __init__(self, graph: FloeGraph, *,
                  containers: Optional[List[Container]] = None,
+                 cluster=None,
                  channel_capacity: int = 100_000,
                  speculative_timeout: Optional[float] = None):
         graph.validate()
         self.graph = graph
-        self.containers = containers or [Container("c0", cores=64)]
+        #: cluster mode (``repro.cluster.ClusterManager``): hosts own the
+        #: containers, placement/migration/transports are cluster-managed
+        self.cluster = cluster
+        if cluster is not None:
+            if containers is not None:
+                raise ValueError(
+                    "pass either containers (single-process mode) or "
+                    "cluster, not both")
+            cluster.bind(self)
+            self.containers = [h.container for h in cluster.hosts.values()]
+        else:
+            self.containers = containers or [Container("c0", cores=64)]
+        #: which container each flake's cores are accounted to (release-on-
+        #: deactivate audit; in cluster mode kept in step by migration)
+        self._container_of: Dict[str, Container] = {}
         self.flakes: Dict[str, Flake] = {}
         self.outputs: List[Message] = []
         self._out_lock = threading.Lock()
         self.errors: List[Tuple[str, Exception]] = []
         self._inflight = 0
         self._iq = threading.Condition()
+        #: injection vs migration handoff: resolving a flake name and
+        #: enqueuing into it must be atomic against the backlog transfer,
+        #: or a message injected mid-migration strands in the retired
+        #: flake (lost payload + a leaked inflight credit that wedges
+        #: quiescence for the life of the session)
+        self._inject_lock = threading.Lock()
+        #: serializes structural mutations (transact / task updates /
+        #: migrations) — e.g. a controller-driven scale-out migrating the
+        #: same flake a user migrate is moving would split the backlog
+        self._wiring_lock = threading.RLock()
         self._active = False
         self._channel_capacity = channel_capacity
         self._speculative_timeout = speculative_timeout
@@ -1103,20 +1145,29 @@ class Coordinator:
     # -- lifecycle -------------------------------------------------------------
     def start(self) -> "Coordinator":
         order = self.graph.wiring_order()  # bottom-up BFS, loops ignored (§III)
+        if self.cluster is not None:
+            # host-aware placement: policy + place/colocate annotations
+            placement = self.cluster.place_all(self.graph, order)
         for name in order:
             v = self.graph.vertices[name]
-            placed = False
-            # best-fit container selection (§III)
-            for c in sorted(self.containers, key=lambda c: c.free_cores):
-                if c.allocate(name, v.cores):
-                    placed = True
-                    break
-            if not placed:
-                # elastic acquisition: the resource manager would request a
-                # new VM from the Cloud fabric; locally we add a container.
-                c = Container(f"c{len(self.containers)}", cores=max(8, v.cores))
-                c.allocate(name, v.cores)
-                self.containers.append(c)
+            if self.cluster is not None:
+                self._container_of[name] = placement[name].container
+            else:
+                placed = False
+                # best-fit container selection (§III)
+                for c in sorted(self.containers, key=lambda c: c.free_cores):
+                    if c.allocate(name, v.cores):
+                        placed = True
+                        break
+                if not placed:
+                    # elastic acquisition: the resource manager would request
+                    # a new VM from the Cloud fabric; locally we add a
+                    # container.
+                    c = Container(f"c{len(self.containers)}",
+                                  cores=max(8, v.cores))
+                    c.allocate(name, v.cores)
+                    self.containers.append(c)
+                self._container_of[name] = c
             self.flakes[name] = Flake(
                 name, v.factory, cores=v.cores, engine=self,
                 channel_capacity=self._channel_capacity,
@@ -1133,20 +1184,55 @@ class Coordinator:
         return self
 
     def stop(self) -> None:
-        for f in self.flakes.values():
+        for name, f in self.flakes.items():
             f.deactivate()
+            # release-on-deactivate: return the flake's cores to its
+            # container so capacity cannot leak across session lifetimes
+            c = self._container_of.pop(name, None)
+            if c is not None:
+                c.release(name)
+        if self.cluster is not None:
+            # forget this graph's placements (the fleet survives, so a
+            # prebuilt ClusterManager can host the next session)
+            self.cluster.unbind(self)
         self._active = False
+
+    def core_audit(self) -> Dict[str, Dict[str, int]]:
+        """Outstanding per-container allocations (empty after ``stop``)."""
+        containers = ([h.container for h in self.cluster.hosts.values()]
+                      if self.cluster is not None else self.containers)
+        return {c.name: dict(c.allocated) for c in containers if c.allocated}
 
     # -- I/O ---------------------------------------------------------------------
     def inject(self, flake_name: str, payload: Any, *, port: str = "in",
                key: Any = None) -> None:
         """Pass inputs to the dataflow via the input port endpoint (§III)."""
-        self.flakes[flake_name].enqueue(port, Message(payload=payload, key=key))
+        with self._inject_lock:
+            self.flakes[flake_name].enqueue(
+                port, Message(payload=payload, key=key))
+
+    def inject_many(self, flake_name: str, payloads: List[Any], *,
+                    port: str = "in",
+                    keys: Optional[List[Any]] = None) -> None:
+        """Source-side amortized injection: one batched enqueue for a whole
+        payload list (inflight accounting, arrival stats and the channel
+        append via ``Channel.put_many`` are each paid once per batch, not
+        once per message).  ``keys`` optionally aligns a routing key per
+        payload (for hash splits / dynamic port mapping).
+        """
+        if keys is not None and len(keys) != len(payloads):
+            raise ValueError(
+                f"inject_many: {len(keys)} keys for {len(payloads)} payloads")
+        msgs = [Message(payload=p, key=keys[i] if keys is not None else None)
+                for i, p in enumerate(payloads)]
+        with self._inject_lock:
+            self.flakes[flake_name].enqueue_many(port, msgs)
 
     def inject_landmark(self, flake_name: str, tag: Any = None,
                         port: str = "in") -> None:
         from .message import landmark
-        self.flakes[flake_name].enqueue(port, landmark(tag))
+        with self._inject_lock:
+            self.flakes[flake_name].enqueue(port, landmark(tag))
 
     def run_until_quiescent(self, timeout: float = 60.0) -> bool:
         """Block until no message is in flight anywhere in the graph."""
@@ -1165,8 +1251,9 @@ class Coordinator:
     def update_pellet(self, name: str, factory: Callable[[], Pellet], *,
                       mode: str = "sync", emit_update_landmark: bool = True) -> None:
         """Dynamic task update: in-place swap of one pellet's logic."""
-        self.flakes[name].swap_pellet(factory, mode=mode,
-                                      emit_update_landmark=emit_update_landmark)
+        with self._wiring_lock:   # vs a concurrent migration of the flake
+            self.flakes[name].swap_pellet(
+                factory, mode=mode, emit_update_landmark=emit_update_landmark)
 
     def update_subgraph(self, factories: Dict[str, Callable[[], Pellet]], *,
                         mode: str = "sync") -> None:
@@ -1182,14 +1269,15 @@ class Coordinator:
         if mode == "sync":
             self.transact(swaps=factories)
             return
-        for n, factory in factories.items():
-            self.flakes[n].swap_pellet(factory, mode="async",
-                                       emit_update_landmark=False)
-        from .message import update_landmark
-        for n in factories:
-            self.flakes[n]._route(
-                update_landmark(tag={"subgraph": list(factories)}),
-                broadcast=True)
+        with self._wiring_lock:
+            for n, factory in factories.items():
+                self.flakes[n].swap_pellet(factory, mode="async",
+                                           emit_update_landmark=False)
+            from .message import update_landmark
+            for n in factories:
+                self.flakes[n]._route(
+                    update_landmark(tag={"subgraph": list(factories)}),
+                    broadcast=True)
 
     def transact(self, *, swaps: Optional[Dict[str, Callable[[], Pellet]]] = None,
                  graph: Optional[FloeGraph] = None,
@@ -1207,6 +1295,12 @@ class Coordinator:
         is the engine primitive behind ``update_subgraph`` (sync mode) and
         the Session API's transactional ``recompose``.
         """
+        with self._wiring_lock:   # vs concurrent migrations / task updates
+            self._transact_locked(swaps, graph, cores, extra_drain,
+                                  quiesce_timeout, swap_protos)
+
+    def _transact_locked(self, swaps, graph, cores, extra_drain,
+                         quiesce_timeout, swap_protos) -> None:
         swaps = dict(swaps or {})
         cores = dict(cores or {})
         # validate EVERYTHING up front so a bad input aborts before any
@@ -1271,7 +1365,14 @@ class Coordinator:
                 f._drain_release()
 
     def set_cores(self, name: str, cores: int) -> None:
-        self.flakes[name].set_cores(cores)
+        if self.cluster is not None:
+            # container-accounted intra-VM resize (grant bounded by the
+            # flake's host); VM-level scale-out is the adaptation tier's
+            # call (``ClusterManager.actuate``), never an implicit side
+            # effect of a plain set_cores
+            self.cluster.resize(name, cores)
+        else:
+            self.flakes[name].set_cores(cores)
 
     def apply_wiring(self, graph: FloeGraph) -> None:
         """Dynamic dataflow update of the edge set (§II.B).
@@ -1304,16 +1405,20 @@ class Coordinator:
                 by_port.setdefault(e.src_port, []).append(e)
             routes: Dict[str, Tuple[Split, List[Tuple[Flake, str]]]] = {}
             for port, edges in by_port.items():
-                # reuse the existing route object when this port's edge
+                # reuse the existing split object when this port's edge
                 # group is unchanged, so stateful split policies (round-
-                # robin counters) are not reset by unrelated rewires
+                # robin counters) are not reset by unrelated rewires —
+                # but always rebuild the target list: a migration replaces
+                # flake objects and moves them across hosts, so cached
+                # references (and their transport proxies) go stale
                 if port in flake.routes and \
                         port_sig(graph, name, port) == \
                         port_sig(self.graph, name, port):
-                    routes[port] = flake.routes[port]
-                    continue
-                split = make_split(edges[0].split)
-                targets = [(self.flakes[e.dst], e.dst_port) for e in edges]
+                    split = flake.routes[port][0]
+                else:
+                    split = make_split(edges[0].split)
+                targets = [(self._route_target(name, e.dst), e.dst_port)
+                           for e in edges]
                 routes[port] = (split, targets)
             flake.routes = routes
         for name, flake in self.flakes.items():
@@ -1339,8 +1444,136 @@ class Coordinator:
                 next(iter(flake.inputs.values())).put(pending)
         self.graph = graph
 
+    def _route_target(self, src: str, dst: str):
+        """Destination for edge src->dst: the flake itself within one host,
+        a transport proxy (``RemoteFlake``) across hosts."""
+        flake = self.flakes[dst]
+        if self.cluster is not None:
+            return self.cluster.route_target(src, dst, flake)
+        return flake
+
+    # -- live flake migration (cluster mode) -----------------------------------
+    def migrate_flake(self, name: str, host, *, cores: Optional[int] = None,
+                      quiesce_timeout: float = 30.0) -> None:
+        """Move one flake to another host without losing a message.
+
+        Mechanics (the §II.B quiescence machinery, reused):
+
+        1. drain the flake *and every upstream neighbour* together (shared
+           deadline; abort-before-change on timeout, like ``transact``);
+        2. once quiescent, hand off identity and state to a fresh flake on
+           the target host — the live pellet prototype (the swap_pellet
+           state-transfer path), pull-pellet state, a half-gathered window
+           buffer, landmark-alignment progress, batch knobs, stats and the
+           speculative dedup set all move;
+        3. transfer the channel backlog port-by-port in FIFO order (raw
+           channel hand-off: inflight credits and arrival stats moved with
+           the messages, not recounted);
+        4. re-derive every route from the graph (upstream edges now point
+           at the new flake, through a transport if the edge went
+           cross-host), activate the replacement, resume the upstreams,
+           and retire the old flake — its cores audited back to the source
+           host's container.
+
+        Per-key FIFO order survives because upstreams are quiescent while
+        the backlog moves: everything already sent sits in the transferred
+        channels, ahead of anything sent after resume.
+        """
+        if self.cluster is None:
+            raise RuntimeError("migrate_flake requires cluster mode "
+                               "(Coordinator(..., cluster=ClusterManager))")
+        if name not in self.flakes:
+            raise ValueError(f"migrate_flake: unknown flake {name!r}")
+        with self._wiring_lock:
+            self._migrate_locked(name, host, cores, quiesce_timeout)
+
+    def _migrate_locked(self, name: str, host, cores: Optional[int],
+                        quiesce_timeout: float) -> None:
+        src_host = self.cluster.host_of(name)
+        if host is src_host:
+            return
+        old = self.flakes[name]
+        cores = old.cores if cores is None else max(0, int(cores))
+        # acquisition latency respected: a still-provisioning VM blocks here
+        host.wait_ready()
+        upstream = {e.src for e in self.graph.in_edges(name)}
+        drained = [self.flakes[n] for n in sorted({name} | upstream)]
+        for f in drained:
+            f._drain_acquire()
+        try:
+            deadline = time.time() + quiesce_timeout
+            for f in drained:
+                if not f._wait_quiescent(
+                        timeout=max(0.0, deadline - time.time())):
+                    raise TimeoutError(
+                        f"flake {f.name!r} did not quiesce within "
+                        f"{quiesce_timeout}s; migration aborted, "
+                        "nothing moved")
+            if not host.container.allocate(name, cores):
+                raise RuntimeError(
+                    f"host {host.name!r} cannot grant {cores} cores for "
+                    f"{name!r} (free={host.container.free_cores})")
+            # release-on-migrate audit: the source container must hold
+            # exactly the cores the flake believes it has
+            released = src_host.container.release(name)
+            if released != old.cores:
+                self._record_error(name, RuntimeError(
+                    f"core-accounting drift on migration: container "
+                    f"{src_host.name!r} held {released}, flake had "
+                    f"{old.cores}"))
+            new = Flake(name, old.factory, cores=cores, engine=self,
+                        channel_capacity=self._channel_capacity,
+                        speculative_timeout=self._speculative_timeout)
+            # -- identity & state hand-off ---------------------------------
+            with old._pellet_lock:
+                new._proto = old._proto        # live pellet state moves
+                new.version = old.version
+            new.state = old.state              # pull-pellet explicit state
+            new._window_buf = old._window_buf  # half-gathered count window
+            new.stats = old.stats              # monitoring continuity
+            new._done_seqs = old._done_seqs    # speculative dedup history
+            new.batch_max = old.batch_max
+            new._batch_explicit = old._batch_explicit
+            new.batch_wait = old.batch_wait
+            with old._lm_lock:                 # landmark-alignment progress
+                new.in_degree = old.in_degree
+                new._lm_count = old._lm_count
+                new._lm_pending = old._lm_pending
+            new.routes = old.routes            # split counters survive;
+            new.set_cores(cores)               # targets rebuilt below
+            # -- channel backlog hand-off (FIFO, credits move untouched).
+            # Atomic against injection: a concurrent inject must either
+            # land before this pop (and be transferred) or resolve the
+            # replacement flake after the dict swap — never strand in the
+            # retired flake's channels.
+            with self._inject_lock:
+                for port, ch in old.inputs.items():
+                    backlog = ch.pop_up_to(None)
+                    if backlog:
+                        new.inputs[port].put_many(backlog, timeout=None)
+                self.flakes[name] = new
+                self._container_of[name] = host.container
+                self.cluster._record_migration(name, host)
+            # upstream routes re-point at the replacement (through the
+            # transport where the edge is now cross-host)
+            self.apply_wiring(self.graph)
+            new.activate()
+        finally:
+            for f in drained:
+                f._drain_release()
+        old.deactivate()
+        # belt-and-braces for callers that held a direct reference to the
+        # retired flake across the swap: sweep anything they enqueued into
+        # its (now dead) channels over to the replacement
+        for port, ch in old.inputs.items():
+            leftovers = ch.pop_up_to(None)
+            if leftovers:
+                new.inputs[port].put_many(leftovers, timeout=None)
+
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> Dict[str, Dict[str, Any]]:
+        placement = (self.cluster._placement if self.cluster is not None
+                     else {})
         return {n: {"queue": f.queue_length(),
                     "arrived": f.stats.arrived,
                     "processed": f.stats.processed,
@@ -1349,5 +1582,7 @@ class Coordinator:
                     "cores": f.cores,
                     "batch_max": f.batch_max,
                     "last_batch": f.stats.last_batch,
+                    "avg_batch": f.stats.avg_batch,
+                    "host": placement.get(n),
                     "version": f.version}
                 for n, f in self.flakes.items()}
