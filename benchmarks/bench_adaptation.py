@@ -1,20 +1,46 @@
-"""Paper Fig. 4 reproduction: 3 load profiles × 3 adaptation strategies.
+"""Adaptation benchmarks: paper Fig. 4 reproduction + VM-allocation runs.
 
-This is the paper's headline evaluation (§IV.C).  Reports, per profile and
-strategy: core-seconds (area under the allocation curve), peak cores, max
-queue, drain times vs the 80 s threshold, and latency violations; plus the
-cumulative-resource ratio for the random profile (paper: 0.87:1.00:0.98).
+Two suites in one module:
+
+* **fig4** — the paper's headline evaluation (§IV.C): 3 load profiles ×
+  3 adaptation strategies on the deterministic fluid simulator.  Reports,
+  per profile and strategy: core-seconds (area under the allocation
+  curve), peak cores, max queue, drain times vs the 80 s threshold, and
+  latency violations; plus the cumulative-resource ratio for the random
+  profile (paper: 0.87:1.00:0.98).
+* **vm** — periodic / bursty / random workload scenarios driven through
+  the REAL cluster runtime (ROADMAP cluster follow-up): an elastic stage
+  on a quota'd simulated-VM fleet with spin-up latency; the two-level
+  controller acquires hosts, migrates, consolidates and releases while
+  the census is asserted.  Acquisitions, migrations, host-seconds and
+  drain wall-time are the recorded signals.
+
+Both record into ``BENCH_adaptation.json`` (append-style trajectory, one
+record per invocation) via ``record`` — wired into ``benchmarks/run.py``.
+
+  PYTHONPATH=src python -m benchmarks.bench_adaptation \
+      [--vm-n 800] [--periods 3] [--skip-fig4] [--out PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 from repro.adaptation.simulator import (DURATION, EPSILON, PERIOD,
                                         run_i1_experiment)
 
+_JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_adaptation.json")
 
-def run() -> Tuple[List[Tuple[str, float, str]], dict]:
+
+# ---------------------------------------------------------------------------
+# fig4: fluid-simulator strategy comparison (§IV.C)
+# ---------------------------------------------------------------------------
+
+def run_fig4() -> Tuple[List[Tuple[str, float, str]], dict]:
     rows = []
     summary = {}
     for kind in ("periodic", "spiky", "random"):
@@ -41,6 +67,166 @@ def run() -> Tuple[List[Tuple[str, float, str]], dict]:
     return rows, summary
 
 
-if __name__ == "__main__":
-    for name, us, derived in run()[0]:
+def _fig4_extras(summary: dict) -> Dict[str, dict]:
+    """JSON-able trajectory record of the fluid results."""
+    out: Dict[str, dict] = {}
+    for (kind, name), r in summary.items():
+        out[f"{kind}_{name}"] = {
+            "core_seconds": round(r.core_seconds("I1"), 1),
+            "peak_cores": int(max(r.cores["I1"])),
+            "max_queue": round(r.max_queue("I1"), 1),
+            "violations": r.violations("I1", PERIOD, DURATION, EPSILON),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vm: real-engine VM-allocation scenarios on the cluster runtime
+# ---------------------------------------------------------------------------
+
+def _burst_sizes(kind: str, n: int, periods: int, seed: int = 7
+                 ) -> List[int]:
+    if kind == "periodic":
+        return [n] * periods
+    if kind == "bursty":
+        return [n * 3 if p == periods // 2 else n for p in range(periods)]
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    return [int(rng.integers(max(n // 2, 1), n * 2)) for _ in range(periods)]
+
+
+def run_vm_scenario(kind: str, *, n_per_burst: int = 800,
+                    periods: int = 3, work_ms: float = 2.0,
+                    gap_s: float = 0.4) -> dict:
+    """One load profile against the live two-level elasticity stack.
+
+    One initial 2-core host, quota of 3 VMs, real spin-up latency: the
+    controller must scale intra-VM first, then acquire + migrate, then
+    consolidate home and release — exactly the arc `ClusterManager.actuate`
+    implements.  The message census (processed == injected, quiescent
+    drain) is asserted; the resource ledger is the measurement.
+    """
+    from repro import ClusterSpec, Flow, FnPellet
+
+    flow = Flow(f"vm_{kind}")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    work = flow.pellet("work", lambda: FnPellet(
+        lambda x: (time.sleep(work_ms / 1000.0), x)[1]))
+    work.elastic(max_cores=8, strategy="dynamic", drain_horizon=0.3)
+    src >> work
+    spec = ClusterSpec(hosts=1, cores_per_host=2, max_hosts=3,
+                       spinup_s=0.15, idle_grace_s=0.25)
+    sizes = _burst_sizes(kind, n_per_burst, periods)
+    t0 = time.time()
+    injected = 0
+    with flow.session(cluster=spec, sample_interval=0.1) as s:
+        for n in sizes:
+            s.inject_many("src", list(range(injected, injected + n)))
+            injected += n
+            time.sleep(gap_s)
+        ok = s.quiesce(300)
+        wall = time.time() - t0
+        stats = s.stats()
+        cl = s.cluster.describe()
+        processed = stats["work"]["processed"]
+        events = [e["event"] for e in cl["events"]]
+        elastic_acquires = sum(1 for e in cl["events"]
+                               if e["event"] == "acquire"
+                               and e.get("elastic"))
+        cores_hist = [c for (_, name, _, c) in s.controller.history
+                      if name == "work"]
+        result = {
+            "profile": kind,
+            "bursts": sizes,
+            "injected": injected,
+            "processed": int(processed),
+            "quiesced": bool(ok),
+            "wall_s": round(wall, 3),
+            "msgs_per_s": round(injected / wall, 1),
+            "peak_cores": max(cores_hist, default=None),
+            "hosts_acquired": elastic_acquires,
+            "hosts_released": events.count("release"),
+            "migrations": events.count("migrate"),
+            "host_seconds": cl["host_seconds"],
+            "final_utilization": cl["utilization"],
+        }
+    assert ok, f"vm_{kind}: dataflow did not drain"
+    assert processed == injected, \
+        f"vm_{kind} census: processed {processed}/{injected}"
+    return result
+
+
+def run_vm(n_per_burst: int = 800, periods: int = 3
+           ) -> Tuple[List[Tuple[str, float, str]], dict]:
+    rows, results = [], {}
+    for kind in ("periodic", "bursty", "random"):
+        r = run_vm_scenario(kind, n_per_burst=n_per_burst, periods=periods)
+        us = r["wall_s"] * 1e6 / max(r["injected"], 1)
+        rows.append((f"vm_{kind}", us,
+                     f"{r['injected']} msgs in {r['wall_s']}s "
+                     f"peak_cores={r['peak_cores']} "
+                     f"acquired={r['hosts_acquired']} "
+                     f"migrations={r['migrations']} "
+                     f"host_s={r['host_seconds']:.1f}"))
+        results[kind] = r
+    return rows, results
+
+
+# ---------------------------------------------------------------------------
+# combined entry point + trajectory recording
+# ---------------------------------------------------------------------------
+
+def run(*, vm_n: int = 800, periods: int = 3, fig4: bool = True
+        ) -> Tuple[List[Tuple[str, float, str]], dict]:
+    rows: List[Tuple[str, float, str]] = []
+    extras: dict = {}
+    if fig4:
+        frows, fsummary = run_fig4()
+        rows += frows
+        extras["fig4"] = _fig4_extras(fsummary)
+    vrows, vresults = run_vm(n_per_burst=vm_n, periods=periods)
+    rows += vrows
+    extras["vm"] = vresults
+    return rows, extras
+
+
+def record(results: dict, path: str = _JSON_PATH) -> None:
+    """Append one trajectory record to BENCH_adaptation.json."""
+    history: List[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = [history]
+        except (OSError, ValueError):
+            history = []
+    history.append({"ts": time.time(),
+                    "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                    "suite": "adaptation", **results})
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vm-n", type=int, default=800,
+                    help="messages per burst in the VM scenarios")
+    ap.add_argument("--periods", type=int, default=3,
+                    help="bursts per VM scenario")
+    ap.add_argument("--skip-fig4", action="store_true",
+                    help="run only the VM-allocation scenarios")
+    ap.add_argument("--out", default=_JSON_PATH,
+                    help="trajectory JSON path ('' disables the record)")
+    args = ap.parse_args()
+    rows, extras = run(vm_n=args.vm_n, periods=args.periods,
+                       fig4=not args.skip_fig4)
+    for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
+    if args.out:
+        record(extras, args.out)
+
+
+if __name__ == "__main__":
+    main()

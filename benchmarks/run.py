@@ -38,7 +38,8 @@ def main() -> None:
         try:
             if suite == "adaptation":
                 from . import bench_adaptation as m
-                r, _ = m.run()
+                r, extras = m.run()
+                m.record(extras)   # append to BENCH_adaptation.json
             elif suite == "pipeline":
                 from . import bench_pipeline as m
                 r, _ = m.run()

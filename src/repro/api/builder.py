@@ -146,6 +146,33 @@ class StageHandle:
         """Shorthand for ``stage[default_out].split(policy)``."""
         return PortRef(self, self.default_out()).split(policy)
 
+    # -- blueprint mutation ----------------------------------------------------
+    def replace(self, factory: Callable[[], Pellet]) -> "StageHandle":
+        """Swap this stage's pellet logic in the blueprint (validated now).
+
+        On a ``flow.derive()`` copy this is the declarative counterpart of
+        a dynamic task update: ``session.apply`` sees the changed factory
+        and stages a swap.  Ports may differ from the previous logic here
+        (the blueprint is just a description) — but applying a changed
+        port signature onto a *running* stage is rejected at ``apply``.
+        """
+        if not callable(factory):
+            raise CompositionError(
+                f"stage {self.name!r}: replacement factory must be callable")
+        try:
+            proto = factory()
+        except TypeError as e:
+            raise CompositionError(
+                f"stage {self.name!r}: replacement factory() failed ({e}); "
+                "wrap constructor arguments in a lambda") from e
+        if not isinstance(proto, Pellet):
+            raise CompositionError(
+                f"stage {self.name!r}: replacement factory produced "
+                f"{type(proto).__name__}, expected a Pellet")
+        self.factory = factory
+        self.proto = proto
+        return self
+
     # -- performance ----------------------------------------------------------
     def batch(self, max_size: int, max_wait_ms: float = 0.0) -> "StageHandle":
         """Tune this stage's adaptive micro-batch (validated now).
@@ -306,6 +333,52 @@ class Flow:
                                    split, src._transport))
         return dst.stage
 
+    def disconnect(self, src: Union["StageHandle", str],
+                   dst: Union["StageHandle", str], *,
+                   src_port: Optional[str] = None,
+                   dst_port: Optional[str] = None) -> "Flow":
+        """Remove matching edge(s); ``None`` ports match any port.
+
+        The inverse of ``>>`` — mainly useful on a :meth:`derive` copy when
+        preparing a new topology for ``session.apply``.
+        """
+        s = src.name if isinstance(src, StageHandle) else src
+        d = dst.name if isinstance(dst, StageHandle) else dst
+        before = len(self.edges)
+        self.edges = [e for e in self.edges
+                      if not (e.src == s and e.dst == d
+                              and (src_port is None or e.src_port == src_port)
+                              and (dst_port is None or e.dst_port == dst_port))]
+        if len(self.edges) == before:
+            raise CompositionError(
+                f"no edge {s!r} -> {d!r} to disconnect "
+                f"(src_port={src_port}, dst_port={dst_port})")
+        self._prune_group_splits()
+        return self
+
+    def remove(self, stage: Union["StageHandle", str]) -> "Flow":
+        """Remove a stage and every edge incident to it (retire support).
+
+        On a live topology the same operation is ``Recomposition.remove``
+        / ``session.apply`` with a flow that no longer declares the stage.
+        """
+        name = stage.name if isinstance(stage, StageHandle) else stage
+        if name not in self.stages:
+            raise CompositionError(f"no stage {name!r} to remove; "
+                                   f"have {sorted(self.stages)}")
+        del self.stages[name]
+        self.edges = [e for e in self.edges
+                      if e.src != name and e.dst != name]
+        self._prune_group_splits()
+        return self
+
+    def _prune_group_splits(self) -> None:
+        """Drop split claims for fan-out groups with no remaining edges, so
+        a later reconnect is free to choose a different policy."""
+        live = {(e.src, e.src_port) for e in self.edges}
+        self._group_split = {g: s for g, s in self._group_split.items()
+                             if g in live}
+
     def _resolve_split(self, src: PortRef) -> Optional[str]:
         """Enforce one split policy per fan-out group, eagerly.
 
@@ -415,6 +488,28 @@ class Flow:
                         f"synchronous merge {s.name!r}: input ports "
                         f"{sorted(missing)} receive no edges and would "
                         "stall alignment")
+
+    # -- cloning -----------------------------------------------------------------
+    def derive(self, name: Optional[str] = None) -> "Flow":
+        """Editable copy of this flow (the clone/extend half of
+        ``session.apply``).
+
+        Stage handles are re-bound to the copy (annotations copied, factory
+        and validated prototype shared — so unchanged stages keep factory
+        identity, which is how ``session.apply`` tells a swapped pellet
+        from an untouched one); edges and fan-out split claims are copied.
+        Mutating the copy — ``pellet`` / ``>>`` / ``remove`` /
+        ``disconnect`` — never touches the original flow.
+        """
+        new = Flow(name or self.name)
+        for s in self.stages.values():
+            h = StageHandle(new, s.name, s.factory, s.proto, s.cores,
+                            dict(s.annotations))
+            h.policy = s.policy
+            new.stages[s.name] = h
+        new.edges = [EdgeSpec(**vars(e)) for e in self.edges]
+        new._group_split = dict(self._group_split)
+        return new
 
     # -- session ---------------------------------------------------------------
     def session(self, **options) -> "Session":

@@ -6,21 +6,30 @@ annotation into a managed :class:`AdaptationController`, and guarantees
 teardown of both on exit — replacing the legacy three-object dance
 (``FloeGraph`` + ``Coordinator`` + ``AdaptationController``).
 
-Runtime mutation is transactional (§II.B made first-class)::
+Runtime mutation is transactional (§II.B made first-class), over the full
+structural graph diff — vertex set included::
 
     with s.recompose() as tx:
         tx.swap("parse", NewParse)         # dynamic task update
-        tx.rewire("annotate", "audit", src_port="meter")
-        tx.unwire("annotate", "insert", src_port="meter")
+        tx.add("audit", AuditPellet)       # graft a new stage...
+        tx.connect("annotate", "audit", src_port="meter")
+        tx.remove("legacy", backlog="collect")   # ...retire another
         tx.scale("insert", cores=4)        # fine-grained resource control
 
 Staged operations are validated against a scratch copy of the graph at
 commit; on any validation failure *nothing* is applied
 (:class:`RecompositionError`, automatic rollback).  On success the affected
 flakes are drained together, all changes land atomically through the
-engine's existing primitives (``swap_pellet`` / ``apply_wiring`` /
+engine's existing primitives (``transact`` / ``apply_wiring`` /
 ``set_cores``), and the flakes resume — in-flight messages finish to
 completion and queued messages are preserved.
+
+The declarative counterpart is :meth:`Session.apply`: build the topology
+you *want* (usually from ``flow.derive()``), and the session diffs it
+against what is running and commits the delta as one transaction.
+Sessions are also checkpointable (:meth:`Session.checkpoint` /
+:meth:`Session.restore`), so a recomposition gone wrong — or a planned
+migration — can roll back to saved pellet state and resume.
 """
 from __future__ import annotations
 
@@ -110,7 +119,9 @@ class Session:
                 coord.stop()
 
     def __enter__(self) -> "Session":
-        return self.open()
+        # tolerate an already-open session so ``with Session.restore(...)``
+        # and ``with flow.session().open()`` both work
+        return self if self._coord is not None else self.open()
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
@@ -205,12 +216,20 @@ class Session:
 
     def describe(self) -> Dict[str, Any]:
         """One structured snapshot of the whole session: stages (with
-        placement), edges, per-flake stats, and — in cluster mode — the
-        full cluster state (hosts, placement, transport ledger, events)."""
+        placement), edges, per-flake stats, the monotonically increasing
+        ``topology_version`` (bumped once per committed recomposition
+        transaction) with the structural diff of the last one, and — in
+        cluster mode — the full cluster state (hosts, placement, transport
+        ledger, events)."""
         coord = self.coordinator
         stats = coord.stats()
         return {
             "flow": self.flow.name,
+            "topology_version": coord.topology_version,
+            "last_recomposition": (
+                {k: v for k, v in coord.last_transaction.items()
+                 if k != "backlog"}     # raw Messages stay with the caller
+                if coord.last_transaction is not None else None),
             "stages": {
                 name: {**stats.get(name, {}),
                        "elastic": (self.flow.stages[name].policy.strategy
@@ -285,18 +304,251 @@ class Session:
 
         Changes apply to this running session only; the :class:`Flow`
         blueprint is unchanged (a later session starts from the original
-        composition).
+        composition).  For whole-topology declarative changes prefer
+        :meth:`apply`.
         """
         return Recomposition(self)
+
+    def _sync_controller(self, added_policies: Dict[str, Any],
+                         removed: set) -> None:
+        """Keep the managed elasticity controller in step with a topology
+        change: retired stages leave the strategy map, stages with an
+        ``.elastic`` policy join (or replace) it — the controller is
+        created on first need and keeps running otherwise."""
+        ctrl = self._controller
+        if ctrl is not None:
+            for n in removed:
+                ctrl.strategies.pop(n, None)
+        if added_policies:
+            strategies = {n: p.build_strategy()
+                          for n, p in added_policies.items()}
+            if ctrl is None:
+                self._controller = AdaptationController(
+                    self.coordinator, strategies,
+                    sample_interval=self._sample_interval).start()
+            else:
+                ctrl.strategies.update(strategies)
+
+    def apply(self, new_flow: Flow, *, backlog: Any = "collect",
+              quiesce_timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Declaratively recompose the running session to match ``new_flow``.
+
+        Diffs the live topology against a freshly built :class:`Flow`
+        (stages matched **by name** — start from ``self.flow.derive()`` to
+        keep unchanged stages identical) and commits the whole delta as
+        ONE atomic transaction through the engine's §II.B machinery:
+
+        * stages only in ``new_flow``            → grafted (spawned, placed,
+          wired, activated; ``.elastic`` policies join the controller);
+        * stages missing from ``new_flow``       → retired (drained with
+          their upstreams, cores released; channel backlog disposed per
+          ``backlog`` — ``"collect"`` (default, surfaced in the returned
+          summary), ``"drop"``, or a ``(stage, port)`` reroute);
+        * same name, different factory           → dynamic task update
+          (ports must match — a port-signature change is an invalid diff
+          and aborts before any change);
+        * edge set differences                   → rewires/unwires;
+        * declared ``cores`` changes             → rescales (live elastic
+          allocations are not fought: the comparison is blueprint vs
+          blueprint);
+        * ``.batch(...)`` annotation changes     → runtime re-tune;
+        * ``.elastic(...)`` policy changes       → controller re-sync.
+
+        A no-op diff commits nothing (``topology_version`` unchanged).  On
+        success the session adopts ``new_flow`` as its blueprint and the
+        structural summary is returned.  On any validation failure
+        :class:`RecompositionError` is raised with the running dataflow
+        untouched.
+        """
+        coord = self.coordinator
+        with self._tx_lock:
+            new_graph = new_flow.build()     # eager whole-flow validation
+            old_graph = coord.graph
+            added = [n for n in new_graph.vertices if n not in coord.flakes]
+            removed = [n for n in coord.flakes if n not in new_graph.vertices]
+            swaps: Dict[str, Callable[[], Pellet]] = {}
+            swap_protos: Dict[str, Pellet] = {}
+            scales: Dict[str, int] = {}
+            batch_updates: Dict[str, Dict[str, Any]] = {}
+            for n, stage in new_flow.stages.items():
+                if n in added:
+                    continue
+                old_v = old_graph.vertices[n]
+                if stage.factory is not old_v.factory:
+                    old_proto = coord.flakes[n]._proto
+                    # build the proto from the factory rather than trusting
+                    # the handle's cached one (a caller may have assigned
+                    # .factory directly instead of using .replace())
+                    try:
+                        new_proto = stage.factory()
+                    except TypeError as e:
+                        raise RecompositionError(
+                            f"apply: stage {n!r} factory() failed ({e}); "
+                            "wrap constructor arguments in a lambda") from e
+                    if not isinstance(new_proto, Pellet):
+                        raise RecompositionError(
+                            f"apply: stage {n!r} factory produced "
+                            f"{type(new_proto).__name__}, expected a Pellet")
+                    if (tuple(new_proto.in_ports)
+                            != tuple(old_proto.in_ports)
+                            or tuple(new_proto.out_ports)
+                            != tuple(old_proto.out_ports)):
+                        raise RecompositionError(
+                            f"apply: stage {n!r} changed its port "
+                            f"signature (old in={list(old_proto.in_ports)} "
+                            f"out={list(old_proto.out_ports)}, new "
+                            f"in={list(new_proto.in_ports)} "
+                            f"out={list(new_proto.out_ports)}); retire "
+                            "it and graft the replacement under a new name")
+                    swaps[n] = stage.factory
+                    swap_protos[n] = new_proto
+                if int(stage.cores) != int(old_v.cores):
+                    scales[n] = int(stage.cores)
+                old_b = (old_v.annotations.get("batch_max"),
+                         old_v.annotations.get("batch_wait_ms"))
+                new_b = (stage.annotations.get("batch_max"),
+                         stage.annotations.get("batch_wait_ms"))
+                if new_b != old_b:
+                    # None = the annotation was removed: revert the flake
+                    # to the default adaptive policy at commit
+                    batch_updates[n] = (
+                        None if new_b[0] is None
+                        else {"max_size": new_b[0], "max_wait_ms": new_b[1]})
+            from collections import Counter
+
+            from ..core.engine import _edge_key
+            oc = Counter(_edge_key(e) for e in old_graph.edges)
+            nc = Counter(_edge_key(e) for e in new_graph.edges)
+            changed_edges = list((nc - oc).elements()) \
+                + list((oc - nc).elements())
+            structural = bool(added or removed or changed_edges)
+            # elasticity policy delta vs the current blueprint
+            old_pol = {n: s.policy for n, s in self.flow.stages.items()
+                       if s.policy is not None}
+            new_pol = {n: s.policy for n, s in new_flow.stages.items()
+                       if s.policy is not None}
+            pol_added = {n: p for n, p in new_pol.items()
+                         if old_pol.get(n) != p}
+            pol_removed = {n for n in old_pol
+                           if n not in new_pol and n not in removed}
+            if not (structural or swaps or scales or batch_updates
+                    or pol_added or pol_removed):
+                return {"changed": False, "noop": True,
+                        "version": coord.topology_version}
+            # every endpoint of a changed edge that is live must drain with
+            # the transaction (its routes / landmark in-degree change)
+            affected = set(swaps) | set(removed)
+            for k in changed_edges:          # _edge_key: (src, .., dst, ..)
+                affected.update((k[0], k[2]))
+            affected = {n for n in affected if n in coord.flakes}
+            summary: Dict[str, Any]
+            if structural or swaps or scales:
+                try:
+                    summary = coord.transact(
+                        swaps=swaps,
+                        graph=new_graph if structural else None,
+                        cores=scales,
+                        extra_drain=tuple(affected),
+                        quiesce_timeout=(self.drain_timeout
+                                         if quiesce_timeout is None
+                                         else quiesce_timeout),
+                        swap_protos=swap_protos,
+                        remove_backlog={n: self._norm_apply_backlog(backlog)
+                                        for n in removed} or None)
+                except TimeoutError as e:
+                    raise RecompositionError(
+                        f"{e}; apply aborted, nothing applied") from e
+            else:
+                summary = {"changed": True,
+                           "version": coord.topology_version,
+                           "swapped": [], "scaled": {}, "added": [],
+                           "removed": [], "edges_added": [],
+                           "edges_removed": [], "removed_backlog": {}}
+            if not structural:
+                # adopt the new blueprint graph (factories/cores/
+                # annotations) even when the edge/vertex sets are unchanged
+                coord.graph = new_graph
+            for n, kw in batch_updates.items():
+                if kw is None:
+                    coord.flakes[n].clear_batch()
+                else:
+                    self.set_batch(n, **kw)
+            self._sync_controller(pol_added, set(pol_removed) | set(removed))
+            self.flow = new_flow
+            summary["batch_updated"] = sorted(batch_updates)
+            summary["elastic_updated"] = sorted(
+                set(pol_added) | set(pol_removed))
+            return summary
+
+    @staticmethod
+    def _norm_apply_backlog(backlog: Any):
+        if isinstance(backlog, str) and backlog in ("drop", "collect"):
+            return backlog
+        if isinstance(backlog, StageHandle):
+            return (backlog.name, backlog.default_in())
+        if isinstance(backlog, (tuple, list)) and len(backlog) == 2:
+            return (_name(backlog[0]), str(backlog[1]))
+        raise RecompositionError(
+            f"apply: backlog must be 'drop', 'collect', a stage, or a "
+            f"(stage, port) tuple; got {backlog!r}")
+
+    # -- checkpointing ---------------------------------------------------------
+    def checkpoint(self, path: str, *,
+                   timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Persist a consistent snapshot of the running session.
+
+        The dataflow is frozen (in-flight work finishes and delivers its
+        outputs, dispatch and injection pause — queued backlog is NOT
+        required to drain: parked messages are exactly what a checkpoint
+        wants), then every flake's explicit state object, half-gathered
+        window buffer, and channel backlog are written via
+        ``checkpoint_floe_graph``, plus session metadata (flow name,
+        topology version).  Returns the metadata.  Use
+        :meth:`Session.restore` to resume — after a crash, or to roll a
+        recomposition gone wrong back to the pre-change state.
+        """
+        import time as _time
+        from ..checkpoint import checkpoint_floe_graph
+        coord = self.coordinator
+        meta = {"flow": self.flow.name,
+                "topology_version": coord.topology_version,
+                "time": _time.time()}
+        with coord.frozen(timeout=(self.drain_timeout if timeout is None
+                                   else timeout)):
+            checkpoint_floe_graph(coord, path, extra=meta)
+        return meta
+
+    @classmethod
+    def restore(cls, path: str, flow: Flow, **options) -> "Session":
+        """Open a fresh session over ``flow`` and resume from a checkpoint.
+
+        Pellet state objects are restored and the checkpointed backlog
+        (pending channel messages + half-gathered windows) is replayed
+        at-least-once.  ``flow`` should compose the topology that was
+        running at checkpoint time (stages matched by name; missing
+        stages' snapshots are skipped).  Returns an OPEN session — use it
+        as a context manager or ``close()`` it explicitly.
+        """
+        from ..checkpoint import restore_floe_graph
+        session = cls(flow, **options).open()
+        try:
+            restore_floe_graph(session.coordinator, path)
+        except BaseException:
+            session.close()
+            raise
+        return session
 
 
 class Recomposition:
     """Staged, validated, atomically-committed dataflow mutation.
 
-    Stage any number of ``swap`` / ``rewire`` / ``unwire`` / ``scale``
-    operations; nothing touches the running graph until the ``with`` block
-    exits cleanly.  Validation failures raise :class:`RecompositionError`
-    with the live graph untouched.
+    Stage any number of ``swap`` / ``rewire`` / ``unwire`` / ``scale`` /
+    ``add`` / ``remove`` / ``connect`` / ``disconnect`` operations;
+    nothing touches the running graph until the ``with`` block exits
+    cleanly.  Validation failures raise :class:`RecompositionError` with
+    the live graph untouched.  After a successful commit ``self.result``
+    holds the structural diff summary (including any collected backlog of
+    removed stages).
     """
 
     def __init__(self, session: Session):
@@ -305,8 +557,16 @@ class Recomposition:
         self._rewires: List[Dict[str, Any]] = []
         self._unwires: List[Dict[str, Any]] = []
         self._scales: Dict[str, int] = {}
+        #: staged vertex additions: name -> {factory, cores, annotations,
+        #: policy} and removals: name -> backlog policy
+        self._adds: Dict[str, Dict[str, Any]] = {}
+        self._removes: Dict[str, Any] = {}
         self._validated_protos: Dict[str, Pellet] = {}
+        self._added_protos: Dict[str, Pellet] = {}
         self._committed = False
+        #: structural diff summary of the committed transaction (set by a
+        #: successful ``commit``; see ``Coordinator.transact``)
+        self.result: Optional[Dict[str, Any]] = None
 
     # -- staging ----------------------------------------------------------------
     def swap(self, target: Target, factory: Callable[[], Pellet]
@@ -358,6 +618,93 @@ class Recomposition:
         self._scales[_name(target)] = int(cores)
         return self
 
+    # -- structural graph diff (vertex set) -----------------------------------
+    def add(self, stage: Union[str, StageHandle],
+            factory: Optional[Callable[[], Pellet]] = None, *,
+            cores: int = 1, **annotations) -> "Recomposition":
+        """Stage grafting a brand-new stage onto the running dataflow.
+
+        Accepts a :class:`StageHandle` — declared on any Flow, typically a
+        ``flow.derive()`` copy; its factory, cores, annotations
+        (batch/placement) and ``.elastic`` policy all carry over — or a
+        ``(name, factory)`` pair with explicit ``cores``/annotations.
+        Wire the new stage with :meth:`connect` in the same transaction
+        (an unwired stage is legal: it becomes a source/sink).
+        """
+        if isinstance(stage, StageHandle):
+            if factory is not None:
+                raise RecompositionError(
+                    "add(stage_handle) takes no separate factory")
+            name, spec = stage.name, dict(
+                factory=stage.factory, cores=int(stage.cores),
+                annotations=dict(stage.annotations), policy=stage.policy)
+        else:
+            name = stage
+            if not callable(factory):
+                raise RecompositionError(
+                    f"add({name!r}): factory must be callable "
+                    "(Pellet class or zero-arg lambda)")
+            if int(cores) < 0:
+                raise RecompositionError(
+                    f"add({name!r}): cores must be >= 0")
+            spec = dict(factory=factory, cores=int(cores),
+                        annotations=dict(annotations), policy=None)
+        if name in self._adds:
+            raise RecompositionError(
+                f"stage {name!r} already added in this transaction")
+        self._adds[name] = spec
+        return self
+
+    def remove(self, target: Target, *,
+               backlog: Any = "drop") -> "Recomposition":
+        """Stage retiring a stage (and every edge incident to it).
+
+        At commit the stage drains together with its upstream neighbours
+        (abort-before-change on timeout), then retires; its cores return
+        to the container/host.  ``backlog`` disposes whatever is still
+        queued in its channels (plus a half-gathered window buffer):
+
+        * ``"drop"``    — discard (count surfaced in the diff summary);
+        * ``"collect"`` — surface the messages to the caller via
+          ``tx.result["backlog"][name]``;
+        * a stage (handle/name) or ``(stage, port)`` tuple — reroute the
+          backlog there in FIFO order, migration-style.
+        """
+        name = _name(target)
+        if name in self._removes:
+            raise RecompositionError(
+                f"stage {name!r} already removed in this transaction")
+        self._removes[name] = self._norm_backlog(name, backlog)
+        return self
+
+    def _norm_backlog(self, name: str, backlog: Any):
+        if isinstance(backlog, str) and backlog in ("drop", "collect"):
+            return backlog
+        if isinstance(backlog, StageHandle):
+            return (backlog.name, backlog.default_in())
+        if isinstance(backlog, (tuple, list)) and len(backlog) == 2:
+            return (_name(backlog[0]), str(backlog[1]))
+        raise RecompositionError(
+            f"remove({name!r}): backlog must be 'drop', 'collect', a "
+            f"stage, or a (stage, port) tuple; got {backlog!r}")
+
+    # graph-diff vocabulary: connect/disconnect are the edge-level partners
+    # of add/remove (rewire/unwire remain as the original names)
+    def connect(self, src: Target, dst: Target, *,
+                src_port: str = "out", dst_port: str = "in",
+                split: str = "round_robin",
+                transport: str = "push") -> "Recomposition":
+        """Stage adding an edge; endpoints may be stages staged with
+        :meth:`add` in this same transaction.  Alias of :meth:`rewire`."""
+        return self.rewire(src, dst, src_port=src_port, dst_port=dst_port,
+                           split=split, transport=transport)
+
+    def disconnect(self, src: Target, dst: Target, *,
+                   src_port: Optional[str] = None,
+                   dst_port: Optional[str] = None) -> "Recomposition":
+        """Stage removing edge(s).  Alias of :meth:`unwire`."""
+        return self.unwire(src, dst, src_port=src_port, dst_port=dst_port)
+
     # -- context manager ---------------------------------------------------------
     def __enter__(self) -> "Recomposition":
         return self
@@ -380,6 +727,53 @@ class Recomposition:
                 protos[name] = (self._swaps[name]() if name in self._swaps
                                 else coord.flakes[name]._proto)
             return protos[name]
+
+        for name, spec in self._adds.items():
+            if name in graph.vertices:
+                raise RecompositionError(
+                    f"add: stage {name!r} already exists in the running "
+                    "dataflow (remove it in a separate transaction first, "
+                    "or pick a new name)")
+            if name in self._removes:
+                raise RecompositionError(
+                    f"stage {name!r} both added and removed in one "
+                    "transaction")
+            try:
+                proto = spec["factory"]()
+            except TypeError as e:
+                raise RecompositionError(
+                    f"add({name!r}): factory() failed ({e}); wrap "
+                    "constructor arguments in a lambda") from e
+            if not isinstance(proto, Pellet):
+                raise RecompositionError(
+                    f"add({name!r}): factory produced "
+                    f"{type(proto).__name__}, expected a Pellet")
+            protos[name] = proto
+            graph.add(name, spec["factory"], cores=spec["cores"],
+                      **spec["annotations"])
+
+        for name, backlog in self._removes.items():
+            if name not in coord.flakes:
+                raise RecompositionError(f"remove: unknown stage {name!r}")
+            if name in self._swaps or name in self._scales:
+                raise RecompositionError(
+                    f"stage {name!r} is being removed; it cannot also be "
+                    "swapped or scaled in this transaction")
+            del graph.vertices[name]
+            graph.edges = [e for e in graph.edges
+                           if e.src != name and e.dst != name]
+        for name, backlog in self._removes.items():
+            if isinstance(backlog, tuple):
+                dst, dport = backlog
+                if dst not in graph.vertices:
+                    raise RecompositionError(
+                        f"remove({name!r}): backlog reroute target {dst!r} "
+                        "is not part of the post-change dataflow")
+                if dport not in proto_of(dst).in_ports:
+                    raise RecompositionError(
+                        f"remove({name!r}): reroute target {dst!r} has no "
+                        f"INPUT port {dport!r}; "
+                        f"in={list(proto_of(dst).in_ports)}")
 
         for name, factory in self._swaps.items():
             if name not in coord.flakes:
@@ -457,42 +851,66 @@ class Recomposition:
             graph.validate()
         except ValueError as e:
             raise RecompositionError(f"post-change graph invalid: {e}") from e
-        # hand the already-built swap prototypes to the engine so each
-        # factory runs exactly once per commit
+        # hand the already-built swap/add prototypes to the engine so each
+        # factory runs exactly once per commit (these protos are fresh per
+        # _validate call, so they are safe to become the live pellets)
         self._validated_protos = {n: protos[n] for n in self._swaps}
+        self._added_protos = {n: protos[n] for n in self._adds}
         return graph
 
     # -- commit ---------------------------------------------------------------------
-    def commit(self) -> None:
-        """Validate, then apply all staged changes atomically."""
+    def commit(self) -> Optional[Dict[str, Any]]:
+        """Validate, then apply all staged changes atomically.
+
+        Returns the engine's structural diff summary (also kept as
+        ``self.result``); an empty transaction commits nothing and
+        returns ``None``.
+        """
         if self._committed:
             raise RecompositionError("transaction already committed")
         self._committed = True
         if not (self._swaps or self._rewires or self._unwires
-                or self._scales):
-            return
+                or self._scales or self._adds or self._removes):
+            return None
         session = self.session
         coord = session.coordinator
         with session._tx_lock:
             graph = self._validate(coord)     # raises -> nothing applied
-            rewired = bool(self._rewires or self._unwires)
+            structural = bool(self._rewires or self._unwires
+                              or self._adds or self._removes)
             affected = set(self._swaps)
             for op in self._rewires + self._unwires:
                 affected.update((op["src"], op["dst"]))
+            # only running stages can be drained (an endpoint staged with
+            # add() is not live yet; removed stages and their upstreams are
+            # added to the drain set by the engine itself)
+            affected = {n for n in affected if n in coord.flakes}
             try:
                 # the engine's §II.B primitive: drain the affected set
-                # together, abort-before-change on quiesce timeout, swap +
-                # rewire + rescale, landmark, resume
-                coord.transact(swaps=self._swaps,
-                               graph=graph if rewired else None,
-                               cores=self._scales,
-                               extra_drain=tuple(affected),
-                               quiesce_timeout=session.drain_timeout,
-                               swap_protos=self._validated_protos)
+                # together, abort-before-change on quiesce timeout, spawn
+                # added vertices + swap + rewire + rescale + retire removed
+                # vertices, landmark, resume
+                summary = coord.transact(
+                    swaps=self._swaps,
+                    graph=graph if structural else None,
+                    cores=self._scales,
+                    extra_drain=tuple(affected),
+                    quiesce_timeout=session.drain_timeout,
+                    swap_protos=self._validated_protos,
+                    remove_backlog=self._removes or None,
+                    add_protos=self._added_protos or None)
             except TimeoutError as e:
                 raise RecompositionError(
                     f"{e}; transaction aborted, nothing applied") from e
-            if not rewired:
+            if not structural:
                 # wiring unchanged: still adopt the validated graph so the
                 # coordinator reflects swapped factories / new core counts
                 coord.graph = graph
+            # grafted stages with an .elastic policy join the managed
+            # controller; retired stages leave it
+            session._sync_controller(
+                {n: spec["policy"] for n, spec in self._adds.items()
+                 if spec["policy"] is not None},
+                set(self._removes))
+            self.result = summary
+            return summary

@@ -1,5 +1,6 @@
 from .checkpointer import (AsyncCheckpointer, checkpoint_floe_graph,
-                           latest_step, restore, restore_floe_graph, save)
+                           latest_step, read_floe_meta, restore,
+                           restore_floe_graph, save)
 
 __all__ = ["AsyncCheckpointer", "checkpoint_floe_graph", "latest_step",
-           "restore", "restore_floe_graph", "save"]
+           "read_floe_meta", "restore", "restore_floe_graph", "save"]

@@ -166,31 +166,79 @@ class AsyncCheckpointer:
 # Floe-engine checkpointing (pellet state objects + pending messages)
 # ---------------------------------------------------------------------------
 
-def checkpoint_floe_graph(coordinator, path: str) -> None:
-    """Persist every flake's state object and pending input messages."""
+def checkpoint_floe_graph(coordinator, path: str, *,
+                          extra: Optional[Dict[str, Any]] = None) -> None:
+    """Persist every flake's state object and pending input messages.
+
+    Also captures each flake's half-gathered count-window buffer (those
+    messages were already popped from the channel, so pending alone would
+    silently lose them) and, under the reserved ``"__meta__"`` key,
+    arbitrary session metadata — ``restore_floe_graph`` skips keys that
+    name no flake, so old checkpoints and old readers stay compatible.
+    For a consistent cut of a live graph take the snapshot inside
+    ``Coordinator.frozen()`` (what ``Session.checkpoint`` does).
+    """
+    def snap_msg(m):
+        # the 4th field keeps landmark/control/update flags across the
+        # round-trip (a checkpointed flush marker must not replay as data);
+        # restore accepts the historical 3-tuples too
+        return (m.payload, m.key, m.seq,
+                (m.landmark, m.update_landmark, m.control))
+
     state: Dict[str, Any] = {}
     for name, flake in coordinator.flakes.items():
-        pending = {port: [(m.payload, m.key, m.seq)
-                          for m in list(ch._q)]
+        pending = {port: [snap_msg(m) for m in list(ch._q)]
                    for port, ch in flake.inputs.items()}
+        window = [snap_msg(m) for m in flake._window_buf]
         state[name] = {"state": flake.state, "pending": pending,
+                       "window": window,
                        "version": flake.version, "cores": flake.cores}
+    if extra:
+        state["__meta__"] = dict(extra)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "wb") as f:
         pickle.dump(state, f)
 
 
+def read_floe_meta(path: str) -> Dict[str, Any]:
+    """Session metadata embedded in a checkpoint ({} for old files)."""
+    with open(path, "rb") as f:
+        state = pickle.load(f)
+    meta = state.get("__meta__", {})
+    return meta if isinstance(meta, dict) else {}
+
+
 def restore_floe_graph(coordinator, path: str) -> None:
-    """Restore state objects and replay pending messages (at-least-once)."""
+    """Restore state objects and replay pending messages (at-least-once).
+
+    Snapshot keys that name no flake of ``coordinator`` are skipped (the
+    ``"__meta__"`` sidecar, or stages retired since the checkpoint).  A
+    checkpointed half-gathered window buffer replays *before* the channel
+    backlog — those messages were older — so window contents regather in
+    the original order.
+    """
     from ..core.message import Message
+
+    def revive(rec) -> Message:
+        payload, key = rec[0], rec[1]
+        m = Message(payload=payload, key=key)
+        if len(rec) > 3:
+            m.landmark, m.update_landmark, m.control = rec[3]
+        return m
+
     with open(path, "rb") as f:
         state = pickle.load(f)
     for name, snap in state.items():
         flake = coordinator.flakes.get(name)
-        if flake is None:
+        if flake is None or not isinstance(snap, dict) \
+                or "pending" not in snap:
             continue
         flake.state = snap["state"]
         flake.set_cores(snap["cores"])
+        if snap.get("window") and flake.inputs:
+            port0 = next(iter(flake.inputs))
+            for rec in snap["window"]:
+                flake.enqueue(port0, revive(rec))
         for port, msgs in snap["pending"].items():
-            for payload, key, _ in msgs:
-                flake.enqueue(port, Message(payload=payload, key=key))
+            for rec in msgs:
+                flake.enqueue(port, revive(rec))

@@ -219,6 +219,27 @@ class ClusterManager:
                         cores=cores)
             return chosen
 
+    def unplace(self, flake_name: str, *, release_cores: bool = True) -> None:
+        """Forget one flake's placement (vertex removal / rollback).
+
+        ``release_cores`` returns the flake's cores to its host container
+        too — the placement-rollback path wants that in one step; the
+        engine's removal path has already audited the release itself and
+        passes ``False``.  Unknown flakes are a no-op (a rollback may run
+        before the flake was ever placed).
+        """
+        with self._lock:
+            hostname = self._placement.pop(flake_name, None)
+            self._home.pop(flake_name, None)
+            self._pending.pop(flake_name, None)
+            if hostname is None:
+                return
+            host = self.hosts.get(hostname)
+            if host is not None and release_cores:
+                host.container.release(flake_name)
+            self._event("unplace", host=hostname, flake=flake_name)
+        self.release_idle_hosts()
+
     def _record_migration(self, flake_name: str, host: Host) -> None:
         """Placement bookkeeping callback from ``Coordinator.migrate_flake``."""
         with self._lock:

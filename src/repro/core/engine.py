@@ -37,9 +37,10 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import deque
+from collections import Counter, deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from .graph import FloeGraph
 from .message import Message
@@ -67,6 +68,22 @@ BOOTSTRAP_BATCH_MAX = 32
 def _is_special(msg: Message) -> bool:
     """Batch boundary predicate: landmarks/control never share a batch."""
     return not msg.is_data()
+
+
+def _edge_key(e) -> Tuple[str, str, str, str, str, str]:
+    """Edge identity for structural diffs (every routed-on field)."""
+    return (e.src, e.src_port, e.dst, e.dst_port, e.split, e.transport)
+
+
+def _edge_delta(old: FloeGraph, new: FloeGraph
+                ) -> Tuple[List[Dict[str, str]], List[Dict[str, str]]]:
+    """Multiset edge diff old -> new as (added, removed) summary dicts."""
+    fields = ("src", "src_port", "dst", "dst_port", "split", "transport")
+    oc = Counter(_edge_key(e) for e in old.edges)
+    nc = Counter(_edge_key(e) for e in new.edges)
+    added = [dict(zip(fields, k)) for k in sorted((nc - oc).elements())]
+    removed = [dict(zip(fields, k)) for k in sorted((oc - nc).elements())]
+    return added, removed
 
 
 class AdjustableSemaphore:
@@ -282,12 +299,16 @@ class Flake:
                  channel_capacity: int = 100_000,
                  speculative_timeout: Optional[float] = None,
                  batch_max: Optional[int] = None,
-                 batch_wait_ms: float = 0.0):
+                 batch_wait_ms: float = 0.0,
+                 proto: Optional[Pellet] = None):
         self.name = name
         self.factory = factory
         self.engine = engine
         self.cores = cores
-        self._proto = factory()            # prototype for port/semantic info
+        #: prototype for port/semantic info; callers that already built and
+        #: validated one (transactional vertex addition) pass it in so the
+        #: factory runs once per spawn
+        self._proto = proto if proto is not None else factory()
         self.stats = FlakeStats()
         self._channel_capacity = channel_capacity
         self._wake = threading.Condition()
@@ -296,6 +317,14 @@ class Flake:
             for p in self._proto.in_ports}
         #: routing: src_port -> (split, [(flake, dst_port)])
         self.routes: Dict[str, Tuple[Split, List[Tuple["Flake", str]]]] = {}
+        #: ordered edge-group signature per out-port as last installed by
+        #: ``apply_wiring`` — the ground truth for split-object reuse.  A
+        #: split (and its counters) survives a rewire only when the group it
+        #: was built for is byte-identical, membership AND order; anything
+        #: else rebuilds it, so a rewire that alters fan-out can never
+        #: consult a split whose state was accumulated against the old
+        #: destination set.
+        self._route_sigs: Dict[str, List[Tuple[str, str, str]]] = {}
         self.state: Any = self._proto.initial_state()
         self._state_lock = threading.Lock()
         self._pellet_lock = threading.RLock()  # guards factory swap
@@ -395,6 +424,15 @@ class Flake:
         if max_wait_ms is not None:
             self.batch_wait = max(0.0, float(max_wait_ms)) / 1000.0
         self._batch_deadline = None   # drop any in-progress linger
+        self._notify()
+
+    def clear_batch(self) -> None:
+        """Revert to the default adaptive batching policy (the state of a
+        flake whose stage never carried a ``.batch(...)`` annotation)."""
+        self.batch_max = DEFAULT_BATCH_MAX
+        self.batch_wait = 0.0
+        self._batch_explicit = False
+        self._batch_deadline = None
         self._notify()
 
     def _drain_acquire(self) -> None:
@@ -1119,6 +1157,12 @@ class Coordinator:
         self._active = False
         self._channel_capacity = channel_capacity
         self._speculative_timeout = speculative_timeout
+        #: monotonically increasing structural version: bumped once per
+        #: committed ``transact`` that changed anything (swap / rewire /
+        #: scale / vertex add / vertex remove), never on aborts
+        self.topology_version = 0
+        #: structural diff summary of the last committed transaction
+        self.last_transaction: Optional[Dict[str, Any]] = None
 
     # -- engine-wide quiescence ---------------------------------------------
     def _inflight_inc(self, n: int = 1) -> None:
@@ -1247,6 +1291,37 @@ class Coordinator:
             out, self.outputs = self.outputs, []
             return out
 
+    @contextmanager
+    def frozen(self, timeout: float = 30.0):
+        """Freeze the dataflow for a consistent cut (checkpointing).
+
+        Every flake stops dispatching, in-flight tasks run to completion
+        and deliver their outputs, structural mutations and injection are
+        blocked — so pellet state, half-gathered windows, and channel
+        backlogs are a single consistent snapshot.  Unlike
+        ``run_until_quiescent`` this does NOT require empty queues: parked
+        backlog is exactly what a checkpoint wants to capture.  Raises
+        ``TimeoutError`` (and unfreezes) if in-flight work cannot finish
+        within ``timeout``.
+        """
+        with self._wiring_lock:
+            flakes = list(self.flakes.values())
+            for f in flakes:
+                f._drain_acquire()
+            try:
+                deadline = time.time() + timeout
+                for f in flakes:
+                    if not f._wait_quiescent(
+                            timeout=max(0.0, deadline - time.time())):
+                        raise TimeoutError(
+                            f"flake {f.name!r} did not quiesce within "
+                            f"{timeout}s; snapshot aborted")
+                with self._inject_lock:
+                    yield self
+            finally:
+                for f in flakes:
+                    f._drain_release()
+
     # -- dynamism (§II.B) ----------------------------------------------------------
     def update_pellet(self, name: str, factory: Callable[[], Pellet], *,
                       mode: str = "sync", emit_update_landmark: bool = True) -> None:
@@ -1284,7 +1359,10 @@ class Coordinator:
                  cores: Optional[Dict[str, int]] = None,
                  extra_drain: Tuple[str, ...] = (),
                  quiesce_timeout: float = 30.0,
-                 swap_protos: Optional[Dict[str, Pellet]] = None) -> None:
+                 swap_protos: Optional[Dict[str, Pellet]] = None,
+                 remove_backlog: Optional[Dict[str, Any]] = None,
+                 add_protos: Optional[Dict[str, Pellet]] = None
+                 ) -> Dict[str, Any]:
         """Coordinated §II.B change set applied as one atomic step.
 
         Drains the union of swapped pellets and ``extra_drain`` together,
@@ -1293,22 +1371,67 @@ class Coordinator:
         ``graph``'s wiring (if given), applies core changes, emits one
         coordinated update landmark per swapped pellet, and resumes.  This
         is the engine primitive behind ``update_subgraph`` (sync mode) and
-        the Session API's transactional ``recompose``.
+        the Session API's transactional ``recompose`` / ``apply``.
+
+        ``graph`` may name a *different vertex set* than the running one —
+        the structural diff is committed in the same atomic step:
+
+        * vertices present only in ``graph`` are **added**: fresh flakes
+          are spawned (cluster placement annotations honored when a
+          ``ClusterManager`` is bound, best-fit containers otherwise),
+          wired, and activated downstream-first.  A placement failure
+          rolls back every allocation made so far and aborts the whole
+          transaction.
+        * vertices absent from ``graph`` are **removed**: the flake and
+          every upstream neighbour drain together with the rest of the
+          affected set, then the flake retires — its cores audited back
+          to its container.  Whatever is still queued in its channels
+          (plus a half-gathered window buffer) is disposed per
+          ``remove_backlog[name]``: ``"drop"`` (default — discarded,
+          credits released, count surfaced in the summary),
+          ``"collect"`` (surfaced to the caller in the summary's
+          ``backlog`` map), or ``(stage, port)`` (rerouted: raw FIFO
+          hand-off into another stage's input, migration-style, credits
+          moving with the messages).
+
+        Returns the structural diff summary of the commit (also stored as
+        ``self.last_transaction``); ``topology_version`` bumps once per
+        committed transaction that changed anything.
         """
         with self._wiring_lock:   # vs concurrent migrations / task updates
-            self._transact_locked(swaps, graph, cores, extra_drain,
-                                  quiesce_timeout, swap_protos)
+            return self._transact_locked(swaps, graph, cores, extra_drain,
+                                         quiesce_timeout, swap_protos,
+                                         remove_backlog, add_protos)
 
     def _transact_locked(self, swaps, graph, cores, extra_drain,
-                         quiesce_timeout, swap_protos) -> None:
+                         quiesce_timeout, swap_protos,
+                         remove_backlog=None, add_protos=None
+                         ) -> Dict[str, Any]:
         swaps = dict(swaps or {})
         cores = dict(cores or {})
+        remove_backlog = dict(remove_backlog or {})
         # validate EVERYTHING up front so a bad input aborts before any
         # change is applied (the atomicity contract above)
         protos = dict(swap_protos or {})
+        added: List[str] = []
+        removed: List[str] = []
+        if graph is not None:
+            graph.validate()
+            added = [n for n in graph.vertices if n not in self.flakes]
+            removed = [n for n in self.flakes if n not in graph.vertices]
+            for e in graph.edges:
+                if e.split not in SPLITS:
+                    raise ValueError(f"transact: unknown split {e.split!r}")
+        elif remove_backlog:
+            raise ValueError("transact: remove_backlog requires a graph "
+                             "naming the post-removal vertex set")
         for n in {*swaps, *cores, *extra_drain}:
             if n not in self.flakes:
                 raise ValueError(f"transact: unknown flake {n!r}")
+            if n in removed and n in set(swaps) | set(cores):
+                raise ValueError(
+                    f"transact: {n!r} is being removed; it cannot also be "
+                    "swapped or scaled in the same transaction")
         for n, factory in swaps.items():
             new_proto = protos.get(n) or factory()
             protos[n] = new_proto
@@ -1319,18 +1442,47 @@ class Coordinator:
                     f"transact: swap of {n!r} requires identical ports "
                     "(use a dynamic dataflow update instead, §II.B)")
         cores = {n: int(c) for n, c in cores.items()}
-        if graph is not None:
-            graph.validate()
-            if set(graph.vertices) != set(self.flakes):
+        # prebuilt/validated protos (the API layer's, so each added
+        # factory runs once per commit); missing entries are built here
+        added_protos: Dict[str, Pellet] = {}
+        for n in added:
+            p = (add_protos or {}).get(n) or graph.vertices[n].factory()
+            if not isinstance(p, Pellet):
                 raise ValueError(
-                    "transact: graph must name the same vertex set")
-            for e in graph.edges:
-                if e.split not in SPLITS:
-                    raise ValueError(f"transact: unknown split {e.split!r}")
-        affected = set(swaps) | set(extra_drain)
+                    f"transact: added stage {n!r} factory produced "
+                    f"{type(p).__name__}, expected a Pellet")
+            added_protos[n] = p
+        for n, policy in remove_backlog.items():
+            if n not in removed:
+                raise ValueError(
+                    f"transact: remove_backlog names {n!r}, which is not "
+                    "being removed")
+            if isinstance(policy, tuple):
+                dst, dport = policy
+                if dst not in graph.vertices:
+                    raise ValueError(
+                        f"transact: backlog of {n!r} rerouted to {dst!r}, "
+                        "which is not in the post-change graph")
+                dproto = added_protos.get(dst) or self.flakes[dst]._proto
+                if dport not in dproto.in_ports:
+                    raise ValueError(
+                        f"transact: backlog reroute target {dst!r} has no "
+                        f"input port {dport!r}; in={list(dproto.in_ports)}")
+            elif policy not in ("drop", "collect"):
+                raise ValueError(
+                    f"transact: remove_backlog[{n!r}] must be 'drop', "
+                    f"'collect' or (stage, port); got {policy!r}")
+        # the removed flakes' upstreams must be part of the drain set, or a
+        # neighbour could be mid-send while the backlog is popped
+        upstream_removed = {e.src for n in removed
+                            for e in self.graph.in_edges(n)} - set(removed)
+        affected = set(swaps) | set(extra_drain) | set(removed) \
+            | upstream_removed
         flakes = [self.flakes[n] for n in sorted(affected)]
         for f in flakes:
             f._drain_acquire()
+        retired: Dict[str, Flake] = {}
+        summary: Dict[str, Any] = {}
         try:
             # ONE shared deadline across all flakes, so an abort happens
             # within quiesce_timeout wall-clock, not N x quiesce_timeout
@@ -1344,12 +1496,35 @@ class Coordinator:
                     raise TimeoutError(
                         f"flake {f.name!r} did not quiesce within "
                         f"{quiesce_timeout}s")
+            # spawn the added flakes first (they are invisible until wired,
+            # so a placement failure can still roll back to a zero-change
+            # state: release the cores, abort, nothing else moved)
+            add_order = [n for n in graph.wiring_order() if n in added] \
+                if added else []
+            spawned = self._spawn_added(graph, add_order, added_protos)
             for n, factory in swaps.items():
                 self.flakes[n].swap_pellet(factory, mode="async",
                                            emit_update_landmark=False,
                                            new_proto=protos[n])
+            old_graph = self.graph
             if graph is not None:
+                # retire/adopt the vertex-set delta atomically vs injection:
+                # a racing inject must either land before the pop (and be
+                # disposed with the backlog) or fail to resolve the removed
+                # stage — never strand in a dead flake's channels
+                backlogs: Dict[str, List[Message]] = {}
+                with self._inject_lock:
+                    for n in removed:
+                        retired[n] = self.flakes.pop(n)
+                        backlogs[n] = self._pop_backlog(retired[n])
+                    self.flakes.update(spawned)
                 self.apply_wiring(graph)
+                for n, msgs in backlogs.items():
+                    self._dispose_backlog(
+                        n, msgs, remove_backlog.get(n, "drop"), summary)
+                # activate downstream-first, same discipline as start()
+                for n in add_order:
+                    spawned[n].activate()
             for n, c in cores.items():
                 self.set_cores(n, c)
             # one coordinated update landmark from each swapped pellet
@@ -1360,9 +1535,159 @@ class Coordinator:
                         update_landmark(tag={"subgraph": sorted(swaps),
                                              "flake": n}),
                         broadcast=True)
+            e_added, e_removed = _edge_delta(old_graph, self.graph) \
+                if graph is not None else ([], [])
+            changed = bool(swaps or cores or added or removed
+                           or e_added or e_removed)
+            if changed:
+                self.topology_version += 1
+            summary.update({
+                "version": self.topology_version,
+                "changed": changed,
+                "swapped": sorted(swaps),
+                "scaled": dict(cores),
+                "added": sorted(added),
+                "removed": sorted(removed),
+                "edges_added": e_added,
+                "edges_removed": e_removed,
+                "removed_backlog": {n: len(b) for n, b in
+                                    (backlogs.items() if removed else ())},
+            })
         finally:
             for f in flakes:
                 f._drain_release()
+        # retire outside the drain window (deactivate joins the dispatch
+        # thread, which needs the drain released to observe _stop quickly)
+        for n, f in retired.items():
+            f.deactivate()
+            c = self._container_of.pop(n, None)
+            if c is not None:
+                freed = c.release(n)
+                if freed != f.cores:
+                    self._record_error(n, RuntimeError(
+                        f"core-accounting drift on removal: container held "
+                        f"{freed}, flake had {f.cores}"))
+            if self.cluster is not None:
+                self.cluster.unplace(n, release_cores=False)
+            # belt-and-braces for callers that held a direct reference to
+            # the retired flake across the swap: dispose anything they
+            # enqueued into its (now dead) channels under the same policy
+            leftovers = self._pop_backlog(f)
+            if leftovers:
+                self._dispose_backlog(n, leftovers,
+                                      remove_backlog.get(n, "drop"), summary)
+                summary["removed_backlog"][n] = \
+                    summary["removed_backlog"].get(n, 0) + len(leftovers)
+        if summary.get("changed"):
+            # the stored copy drops the raw collected Messages: they belong
+            # to the caller of THIS commit, and pinning a whole backlog on
+            # the coordinator until the next transaction would be an
+            # unbounded retention
+            self.last_transaction = {k: v for k, v in summary.items()
+                                     if k != "backlog"}
+        return summary
+
+    def _spawn_added(self, graph: Optional[FloeGraph], add_order: List[str],
+                     added_protos: Dict[str, Pellet]) -> Dict[str, "Flake"]:
+        """Allocate cores and build (but not wire/activate) added flakes.
+
+        All-or-nothing: any placement/allocation failure releases every
+        core and placement taken so far and re-raises, leaving the running
+        graph untouched.
+        """
+        spawned: Dict[str, Flake] = {}
+        try:
+            placement = (self.cluster.place_all(graph, add_order)
+                         if self.cluster is not None and add_order else {})
+            for n in add_order:
+                v = graph.vertices[n]
+                if self.cluster is not None:
+                    self._container_of[n] = placement[n].container
+                else:
+                    placed = None
+                    for c in sorted(self.containers,
+                                    key=lambda c: c.free_cores):
+                        if c.allocate(n, v.cores):
+                            placed = c
+                            break
+                    if placed is None:
+                        placed = Container(f"c{len(self.containers)}",
+                                           cores=max(8, v.cores))
+                        placed.allocate(n, v.cores)
+                        self.containers.append(placed)
+                    self._container_of[n] = placed
+                spawned[n] = Flake(
+                    n, v.factory, cores=v.cores, engine=self,
+                    channel_capacity=self._channel_capacity,
+                    speculative_timeout=self._speculative_timeout,
+                    batch_max=v.annotations.get("batch_max"),
+                    batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0),
+                    proto=added_protos[n])
+        except Exception:
+            for n in add_order:
+                c = self._container_of.pop(n, None)
+                if c is not None and self.cluster is None:
+                    c.release(n)
+                if self.cluster is not None:
+                    # releases the host container's cores and forgets the
+                    # placement/home bookkeeping in one step
+                    self.cluster.unplace(n)
+            raise
+        return spawned
+
+    def _pop_backlog(self, flake: "Flake") -> List[Message]:
+        """Drain a retiring flake's undelivered input: the half-gathered
+        window buffer first (those messages are older — they were popped
+        from the channel before the window filled), then each channel in
+        FIFO order.  Every returned message still holds one engine
+        inflight credit."""
+        msgs: List[Message] = list(flake._window_buf)
+        flake._window_buf = []
+        for ch in flake.inputs.values():
+            msgs.extend(ch.pop_up_to(None))
+        return msgs
+
+    def _dispose_backlog(self, name: str, msgs: List[Message],
+                         policy: Union[str, Tuple[str, str]],
+                         summary: Dict[str, Any]) -> None:
+        """Apply one removed flake's backlog policy (see ``transact``)."""
+        if not msgs:
+            return
+        if isinstance(policy, tuple):
+            dst, dport = policy
+            target = self.flakes[dst]
+            # raw migration-style FIFO hand-off: inflight credits and
+            # arrival stats move with the messages, not recounted.  Specials
+            # bypass the target's landmark alignment, exactly like a
+            # migrated backlog — best-effort, like all §II.B changes racing
+            # in-flight control messages.  The target may itself be
+            # drain-paused for this transaction (it cannot consume), so the
+            # put must NOT wait forever on a full channel — that would
+            # wedge the engine under the wiring lock.  On timeout the
+            # unadmitted remainder degrades to 'collect' (surfaced, not
+            # lost) and the condition is recorded as an engine error.
+            try:
+                target.inputs[dport].put_many(msgs, timeout=30.0)
+                target.stats.on_arrive(len(msgs))
+                target._notify()
+                return
+            except TimeoutError as e:
+                admitted = getattr(e, "appended", 0)
+                if admitted:
+                    target.stats.on_arrive(admitted)
+                    target._notify()
+                msgs = msgs[admitted:]
+                self._record_error(name, RuntimeError(
+                    f"backlog reroute to {dst!r} timed out with "
+                    f"{len(msgs)} messages unadmitted (target channel "
+                    "full); they were collected into the transaction "
+                    "summary instead"))
+                policy = "collect"
+        # drop/collect: the messages leave the dataflow — release their
+        # credits or engine-wide quiescence would wedge forever
+        self._inflight_dec(len(msgs))
+        if policy == "collect":
+            summary.setdefault("backlog", {}).setdefault(name, []).extend(msgs)
 
     def set_cores(self, name: str, cores: int) -> None:
         if self.cluster is not None:
@@ -1394,33 +1719,37 @@ class Coordinator:
             return sorted((e.src, e.src_port, e.dst_port)
                           for e in g.in_edges(name))
 
-        def port_sig(g: FloeGraph, name: str, port: str):
-            return sorted((e.dst, e.dst_port, e.split)
-                          for e in g.out_edges(name, port))
-
         old_in = {n: in_sig(self.graph, n) for n in self.flakes}
         for name, flake in self.flakes.items():
             by_port: Dict[str, List] = {}
             for e in graph.out_edges(name):
                 by_port.setdefault(e.src_port, []).append(e)
             routes: Dict[str, Tuple[Split, List[Tuple[Flake, str]]]] = {}
+            sigs: Dict[str, List[Tuple[str, str, str]]] = {}
             for port, edges in by_port.items():
-                # reuse the existing split object when this port's edge
-                # group is unchanged, so stateful split policies (round-
-                # robin counters) are not reset by unrelated rewires —
-                # but always rebuild the target list: a migration replaces
-                # flake objects and moves them across hosts, so cached
-                # references (and their transport proxies) go stale
+                # reuse the existing split object ONLY when this port's
+                # edge group is identical — membership and order — to the
+                # group the split was installed against (the signature the
+                # flake itself recorded, not a graph-derived guess), so
+                # stateful split policies (round-robin counters) survive
+                # unrelated rewires but a rewire that alters the fan-out
+                # group in any way gets a fresh split: a stale one could
+                # consult counters accumulated against the old destination
+                # set.  The target list is always rebuilt: a migration
+                # replaces flake objects and moves them across hosts, so
+                # cached references (and their transport proxies) go stale
+                sig = [(e.dst, e.dst_port, e.split) for e in edges]
                 if port in flake.routes and \
-                        port_sig(graph, name, port) == \
-                        port_sig(self.graph, name, port):
+                        flake._route_sigs.get(port) == sig:
                     split = flake.routes[port][0]
                 else:
                     split = make_split(edges[0].split)
                 targets = [(self._route_target(name, e.dst), e.dst_port)
                            for e in edges]
                 routes[port] = (split, targets)
+                sigs[port] = sig
             flake.routes = routes
+            flake._route_sigs = sigs
         for name, flake in self.flakes.items():
             n_in = max(1, len(graph.in_edges(name)))
             if in_sig(graph, name) == old_in[name]:
@@ -1539,7 +1868,8 @@ class Coordinator:
                 new.in_degree = old.in_degree
                 new._lm_count = old._lm_count
                 new._lm_pending = old._lm_pending
-            new.routes = old.routes            # split counters survive;
+            new.routes = old.routes            # split counters survive
+            new._route_sigs = dict(old._route_sigs)  # (group unchanged)
             new.set_cores(cores)               # targets rebuilt below
             # -- channel backlog hand-off (FIFO, credits move untouched).
             # Atomic against injection: a concurrent inject must either
