@@ -20,6 +20,8 @@ import os
 import time
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.cluster import ClusterManager, ClusterSpec
 from repro.core import (Coordinator, FloeGraph, FnMapper, FnPellet,
                         FnReducer, add_mapreduce)
@@ -68,6 +70,46 @@ def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
         coord.inject_many("p0", list(range(n_msgs)))
         assert coord.run_until_quiescent(timeout=300)
         return time.time() - t0
+    finally:
+        coord.stop()
+
+
+def _run_chain_vec(n_msgs: int, chain_len: int = 4, cores: int = 2,
+                   array: bool = False, batch_max: int = 256,
+                   dim: int = 16) -> float:
+    """Vectorized chain: every stage is a whole-batch JAX-style callable.
+
+    ``array=False`` measures the PR 2 path — the batch is computed in one
+    call but unstacked into per-message payloads between stages.
+    ``array=True`` opts every stage into the ArrayBatch fast path: the
+    batch travels the chain as ONE stacked (B, dim) array, one call per
+    hop.  Asserts the full delivery census either way.
+    """
+    import jax.numpy as jnp
+
+    def vec_stage(X):
+        return jnp.asarray(X) * 1.0001 + 0.1
+
+    g = FloeGraph("vchain")
+    prev = None
+    for i in range(chain_len):
+        g.add(f"p{i}", lambda: FnPellet(vec_stage, vectorized=True),
+              cores=cores, batch_max=batch_max, batch_array=array)
+        if prev is not None:
+            g.connect(prev, f"p{i}")
+        prev = f"p{i}"
+    coord = Coordinator(g).start()
+    try:
+        payloads = list(np.ones((n_msgs, dim), np.float32))
+        t0 = time.time()
+        coord.inject_many("p0", payloads)
+        assert coord.run_until_quiescent(timeout=300)
+        dt = time.time() - t0
+        out = [m for m in coord.drain_outputs() if m.is_data()]
+        assert len(out) == n_msgs, \
+            f"census: {len(out)} delivered of {n_msgs}"
+        assert not coord.errors, coord.errors[:3]
+        return dt
     finally:
         coord.stop()
 
@@ -127,6 +169,28 @@ def _best(fn, repeats: int) -> float:
     return min(fn() for _ in range(max(1, repeats)))
 
 
+def run_array(n: int = 4000, repeats: int = 2
+              ) -> Tuple[List[Tuple[str, float, str]], dict]:
+    """Array fast-path suite: vectorized chain4, per-message-unstack
+    batched path (PR 2) vs ArrayBatch end-to-end (this PR)."""
+    rows: List[Tuple[str, float, str]] = []
+    dt_un = _best(lambda: _run_chain_vec(n, array=False), repeats)
+    dt_ar = _best(lambda: _run_chain_vec(n, array=True), repeats)
+    un_rate, ar_rate = n / dt_un, n / dt_ar
+    speedup = dt_un / dt_ar
+    results = {"chain4_vec": {
+        "unstacked_msgs_per_s": round(un_rate, 1),
+        "array_msgs_per_s": round(ar_rate, 1),
+        "speedup": round(speedup, 2)}}
+    rows.append(("engine_chain4_vec_unstacked", dt_un * 1e6 / n,
+                 f"{un_rate:,.0f} msg/s vectorized stages, per-message "
+                 "unstack between hops"))
+    rows.append(("engine_chain4_vec_array", dt_ar * 1e6 / n,
+                 f"{ar_rate:,.0f} msg/s ArrayBatch fast path "
+                 f"({speedup:.1f}x)"))
+    return rows, results
+
+
 def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], dict]:
     rows = []
     results = {"n_msgs": n, "repeats": repeats}
@@ -151,6 +215,10 @@ def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], 
     # pair (N >= 3): single-run wall times on a shared box swing well
     # past the overhead being measured, and interleaving keeps machine
     # drift from biasing one side.
+    # array fast path: vectorized chain, columnar vs per-message unstack
+    a_rows, a_results = run_array(n, repeats)
+    rows.extend(a_rows)
+    results.update(a_results)
     cr = max(repeats, 3)
     in_times, cl_times = [], []
     for _ in range(cr):
@@ -204,8 +272,15 @@ def main() -> None:
                     help="best-of-N repeats per configuration")
     ap.add_argument("--out", default=_JSON_PATH,
                     help="trajectory JSON path ('' disables the record)")
+    ap.add_argument("--array-only", action="store_true",
+                    help="run only the array fast-path suite (CI smoke)")
     args = ap.parse_args()
-    rows, results = run(n=args.n, repeats=args.repeats)
+    if args.array_only:
+        rows, results = run_array(n=args.n, repeats=args.repeats)
+        results = {"n_msgs": args.n, "repeats": args.repeats,
+                   "suite_subset": "array", **results}
+    else:
+        rows, results = run(n=args.n, repeats=args.repeats)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.out:

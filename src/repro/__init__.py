@@ -29,9 +29,9 @@ from .api import (CompositionError, ElasticPolicy, Flow, PortRef,
 from .cluster import (ClusterError, ClusterManager, ClusterSpec, Host,
                       LoopbackTransport, SerializingTransport)
 # Pellet/message vocabulary used by both APIs
-from .core import (Drop, FnMapper, FnPellet, FnReducer, KeyedEmit, Mapper,
-                   Message, Pellet, PullPellet, PushPellet, Reducer,
-                   TuplePellet, WindowPellet)
+from .core import (ArrayBatch, Drop, FnMapper, FnPellet, FnReducer,
+                   KeyedEmit, Mapper, Message, Pellet, PullPellet,
+                   PushPellet, Reducer, TuplePellet, WindowPellet)
 # Legacy engine surface (supported; the builder compiles to it)
 from .core import Coordinator, FloeGraph
 
@@ -46,7 +46,7 @@ __all__ = [
     # pellets & messages
     "Pellet", "PushPellet", "PullPellet", "WindowPellet", "TuplePellet",
     "FnPellet", "FnMapper", "FnReducer", "Mapper", "Reducer",
-    "KeyedEmit", "Drop", "Message",
+    "KeyedEmit", "Drop", "Message", "ArrayBatch",
     # legacy engine surface
     "FloeGraph", "Coordinator",
 ]

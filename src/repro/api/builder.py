@@ -174,7 +174,8 @@ class StageHandle:
         return self
 
     # -- performance ----------------------------------------------------------
-    def batch(self, max_size: int, max_wait_ms: float = 0.0) -> "StageHandle":
+    def batch(self, max_size: int, max_wait_ms: float = 0.0, *,
+              array: bool = False) -> "StageHandle":
         """Tune this stage's adaptive micro-batch (validated now).
 
         ``max_size`` caps how many queued messages one dispatch drains (the
@@ -184,6 +185,14 @@ class StageHandle:
         fuller batch — useful with ``FnPellet(..., vectorized=True)`` where
         batch shape efficiency dominates.  ``max_size=1`` disables batching
         for the stage.
+
+        ``array=True`` opts the stage into the **array fast path**: a
+        drained batch of stackable payloads is kept as ONE stacked array
+        (an ``ArrayBatch`` carrier) — the pellet's ``compute_array`` runs
+        once per batch over the stacked array, and the result travels to
+        the next array-enabled vectorized stage without unstacking (one
+        device call per hop).  Ragged/non-array payloads and non-array
+        consumers fall back to the row-wise batched path automatically.
         """
         if isinstance(self.proto, (TuplePellet, WindowPellet, PullPellet)):
             raise CompositionError(
@@ -199,6 +208,7 @@ class StageHandle:
                 f"stage {self.name!r}: batch max_wait_ms must be >= 0")
         self.annotations["batch_max"] = int(max_size)
         self.annotations["batch_wait_ms"] = float(max_wait_ms)
+        self.annotations["batch_array"] = bool(array)
         return self
 
     # -- placement -------------------------------------------------------------

@@ -258,10 +258,13 @@ class Session:
         self.coordinator.set_cores(_name(target), cores)
 
     def set_batch(self, target: Target, *, max_size: int,
-                  max_wait_ms: Optional[float] = None) -> None:
+                  max_wait_ms: Optional[float] = None,
+                  array: Optional[bool] = None) -> None:
         """Runtime micro-batch tuning for one stage (``max_size=1``
         disables batching; see ``StageHandle.batch`` for the composition-
-        time annotation)."""
+        time annotation).  ``array=True`` opts the stage into the
+        ArrayBatch fast path (drained batches stay one stacked array
+        end-to-end between vectorized stages); ``None`` leaves it as is."""
         from ..core.pellet import PullPellet, TuplePellet, WindowPellet
         if int(max_size) < 1:
             raise SessionStateError("batch max_size must be >= 1")
@@ -272,7 +275,7 @@ class Session:
             raise SessionStateError(
                 f"set_batch({_name(target)!r}): the batch knob applies to "
                 f"push pellets only, not {type(flake._proto).__name__}")
-        flake.set_batch(max_size, max_wait_ms)
+        flake.set_batch(max_size, max_wait_ms, array=array)
 
     def migrate(self, target: Target, host: str, *,
                 cores: Optional[int] = None,
@@ -345,8 +348,11 @@ class Session:
           ``backlog`` — ``"collect"`` (default, surfaced in the returned
           summary), ``"drop"``, or a ``(stage, port)`` reroute);
         * same name, different factory           → dynamic task update
-          (ports must match — a port-signature change is an invalid diff
-          and aborts before any change);
+          (identical ports), or — when the port signature CHANGED — a
+          same-name **replacement**: the stage retires and a fresh one
+          spawns under the same name in the same transaction, the new
+          wiring validated against the fresh proto's ports; backlog on
+          surviving input ports carries over FIFO, pellet state does not;
         * edge set differences                   → rewires/unwires;
         * declared ``cores`` changes             → rescales (live elastic
           allocations are not fought: the comparison is blueprint vs
@@ -368,6 +374,8 @@ class Session:
             removed = [n for n in coord.flakes if n not in new_graph.vertices]
             swaps: Dict[str, Callable[[], Pellet]] = {}
             swap_protos: Dict[str, Pellet] = {}
+            replacements: Dict[str, Callable[[], Pellet]] = {}
+            replace_protos: Dict[str, Pellet] = {}
             scales: Dict[str, int] = {}
             batch_updates: Dict[str, Dict[str, Any]] = {}
             for n, stage in new_flow.stages.items():
@@ -393,27 +401,34 @@ class Session:
                             != tuple(old_proto.in_ports)
                             or tuple(new_proto.out_ports)
                             != tuple(old_proto.out_ports)):
-                        raise RecompositionError(
-                            f"apply: stage {n!r} changed its port "
-                            f"signature (old in={list(old_proto.in_ports)} "
-                            f"out={list(old_proto.out_ports)}, new "
-                            f"in={list(new_proto.in_ports)} "
-                            f"out={list(new_proto.out_ports)}); retire "
-                            "it and graft the replacement under a new name")
-                    swaps[n] = stage.factory
-                    swap_protos[n] = new_proto
-                if int(stage.cores) != int(old_v.cores):
+                        # port signature changed: not an in-place task
+                        # update but a same-name replacement — the engine
+                        # retires the old flake and spawns the new logic
+                        # under the same name in the one transaction,
+                        # validating the new wiring against the fresh
+                        # proto's ports
+                        replacements[n] = stage.factory
+                        replace_protos[n] = new_proto
+                    else:
+                        swaps[n] = stage.factory
+                        swap_protos[n] = new_proto
+                if int(stage.cores) != int(old_v.cores) \
+                        and n not in replacements:
                     scales[n] = int(stage.cores)
                 old_b = (old_v.annotations.get("batch_max"),
-                         old_v.annotations.get("batch_wait_ms"))
+                         old_v.annotations.get("batch_wait_ms"),
+                         old_v.annotations.get("batch_array", False))
                 new_b = (stage.annotations.get("batch_max"),
-                         stage.annotations.get("batch_wait_ms"))
-                if new_b != old_b:
+                         stage.annotations.get("batch_wait_ms"),
+                         stage.annotations.get("batch_array", False))
+                if new_b != old_b and n not in replacements:
                     # None = the annotation was removed: revert the flake
-                    # to the default adaptive policy at commit
+                    # to the default adaptive policy at commit (a replaced
+                    # stage spawns with its new annotations already)
                     batch_updates[n] = (
                         None if new_b[0] is None
-                        else {"max_size": new_b[0], "max_wait_ms": new_b[1]})
+                        else {"max_size": new_b[0], "max_wait_ms": new_b[1],
+                              "array": new_b[2]})
             from collections import Counter
 
             from ..core.engine import _edge_key
@@ -421,7 +436,8 @@ class Session:
             nc = Counter(_edge_key(e) for e in new_graph.edges)
             changed_edges = list((nc - oc).elements()) \
                 + list((oc - nc).elements())
-            structural = bool(added or removed or changed_edges)
+            structural = bool(added or removed or changed_edges
+                              or replacements)
             # elasticity policy delta vs the current blueprint
             old_pol = {n: s.policy for n, s in self.flow.stages.items()
                        if s.policy is not None}
@@ -437,7 +453,7 @@ class Session:
                         "version": coord.topology_version}
             # every endpoint of a changed edge that is live must drain with
             # the transaction (its routes / landmark in-degree change)
-            affected = set(swaps) | set(removed)
+            affected = set(swaps) | set(removed) | set(replacements)
             for k in changed_edges:          # _edge_key: (src, .., dst, ..)
                 affected.update((k[0], k[2]))
             affected = {n for n in affected if n in coord.flakes}
@@ -454,15 +470,22 @@ class Session:
                                          else quiesce_timeout),
                         swap_protos=swap_protos,
                         remove_backlog={n: self._norm_apply_backlog(backlog)
-                                        for n in removed} or None)
-                except TimeoutError as e:
+                                        for n in removed} or None,
+                        replace=replacements or None,
+                        replace_protos=replace_protos or None)
+                except (TimeoutError, ValueError, RuntimeError) as e:
+                    # engine-side validation/allocation failures (new
+                    # wiring naming a port the replacement proto lacks, a
+                    # container refusing the core delta) abort before any
+                    # change — surface them as the API's failure type
                     raise RecompositionError(
                         f"{e}; apply aborted, nothing applied") from e
             else:
                 summary = {"changed": True,
                            "version": coord.topology_version,
                            "swapped": [], "scaled": {}, "added": [],
-                           "removed": [], "edges_added": [],
+                           "removed": [], "replaced": [],
+                           "edges_added": [],
                            "edges_removed": [], "removed_backlog": {}}
             if not structural:
                 # adopt the new blueprint graph (factories/cores/

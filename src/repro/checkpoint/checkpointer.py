@@ -190,8 +190,20 @@ def checkpoint_floe_graph(coordinator, path: str, *,
         pending = {port: [snap_msg(m) for m in list(ch._q)]
                    for port, ch in flake.inputs.items()}
         window = [snap_msg(m) for m in flake._window_buf]
+        # mutable instance attributes of the live pellet (push pellets
+        # that accumulate on ``self`` — outside the explicit state
+        # object): captured via the Pellet.get_state hook / __floe_state__
+        with flake._pellet_lock:
+            try:
+                pellet_state = flake._proto.get_state()
+            except Exception as e:
+                # a broken snapshot hook must not kill the checkpoint,
+                # but silent state loss on the recovery path needs a
+                # diagnostic
+                pellet_state = None
+                coordinator._record_error(name, e)
         state[name] = {"state": flake.state, "pending": pending,
-                       "window": window,
+                       "window": window, "pellet": pellet_state,
                        "version": flake.version, "cores": flake.cores}
     if extra:
         state["__meta__"] = dict(extra)
@@ -235,6 +247,11 @@ def restore_floe_graph(coordinator, path: str) -> None:
             continue
         flake.state = snap["state"]
         flake.set_cores(snap["cores"])
+        if snap.get("pellet") is not None:
+            # restore mutable instance attributes onto the fresh pellet
+            # (the Pellet.set_state half of the checkpoint hook)
+            with flake._pellet_lock:
+                flake._proto.set_state(snap["pellet"])
         if snap.get("window") and flake.inputs:
             port0 = next(iter(flake.inputs))
             for rec in snap["window"]:

@@ -1,4 +1,5 @@
 """Floe core: continuous dataflow composition and execution (paper §II–III)."""
+from .arraybatch import ArrayBatch
 from .message import Message, control, landmark, update_landmark
 from .pellet import (BatchItemError, Drop, FnPellet, KeyedEmit, Pellet,
                      PullPellet, PushPellet, TuplePellet, WindowPellet)
@@ -11,6 +12,7 @@ from .mapreduce import FnMapper, FnReducer, Mapper, Reducer, add_mapreduce
 from .bsp import BSPManager, BSPWorker, add_bsp, start_bsp
 
 __all__ = [
+    "ArrayBatch",
     "Message", "control", "landmark", "update_landmark",
     "BatchItemError", "Drop", "FnPellet", "KeyedEmit", "Pellet",
     "PullPellet", "PushPellet", "TuplePellet", "WindowPellet",

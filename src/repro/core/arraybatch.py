@@ -1,0 +1,117 @@
+"""ArrayBatch — columnar micro-batch payload for the array fast path.
+
+The adaptive micro-batched data path (PR 2) amortizes *dispatch*: B queued
+messages are drained, computed, and routed per batch.  But between two
+vectorized JAX stages the engine still unstacked every batch into B Python
+payloads, re-wrapped them into B Messages, and re-stacked them on the next
+hop — exactly the regime where one-device-call-per-hop matters most.
+
+An ``ArrayBatch`` keeps a drained batch as **one columnar value**: a
+stacked array (leading dimension = rows, one row per logical message) plus
+a lightweight per-row sidecar (lineage seq ids and routing keys).  A
+Message whose payload is an ArrayBatch is a *carrier*: the engine routes
+it as a single unit (split destinations computed per row, the array sliced
+once per destination group), counts it as ``len(batch)`` rows everywhere
+that matters (inflight credits, backpressure, arrival/processed stats,
+batch occupancy), and hands the stacked array straight to the next
+vectorized stage's ``compute_array``.  Anything that cannot consume a
+stacked array — window/tuple/pull pellets, non-array stages, sinks, custom
+split policies — sees the carrier unstacked back into ordinary per-row
+Messages, so semantics degrade to exactly the row-wise data path.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from .message import Message
+
+
+class ArrayBatch:
+    """Stacked payload array + per-row (seq, key) sidecar.
+
+    ``array`` is any array-like with a leading batch dimension (``np`` or
+    ``jnp``; jax arrays pass through untouched so device residency is
+    preserved between stages).  ``seqs`` carries the upstream messages'
+    seq ids (lineage), ``keys`` the per-row routing keys — both optional.
+    The container is read-only by convention: stages return *new*
+    ArrayBatches (or raw arrays the engine re-wraps), never mutate one
+    in flight, since duplicate splits share a single instance.
+    """
+
+    __slots__ = ("array", "seqs", "keys")
+
+    def __init__(self, array: Any, *, seqs: Optional[Sequence[int]] = None,
+                 keys: Optional[Sequence[Any]] = None):
+        n = int(array.shape[0]) if hasattr(array, "shape") else len(array)
+        if seqs is not None and len(seqs) != n:
+            raise ValueError(f"ArrayBatch: {len(seqs)} seqs for {n} rows")
+        if keys is not None and len(keys) != n:
+            raise ValueError(f"ArrayBatch: {len(keys)} keys for {n} rows")
+        self.array = array
+        self.seqs = list(seqs) if seqs is not None else None
+        self.keys = list(keys) if keys is not None else None
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def try_stack(cls, payloads: Sequence[Any], *,
+                  seqs: Optional[Sequence[int]] = None,
+                  keys: Optional[Sequence[Any]] = None
+                  ) -> Optional["ArrayBatch"]:
+        """Stack a list of per-message payloads into one array, or return
+        ``None`` when the payloads are ragged / non-stackable (the engine
+        then falls back to the row-wise batched path)."""
+        if not payloads:
+            return None
+        try:
+            arr = np.asarray(payloads)
+        except Exception:
+            return None
+        if arr.dtype == object or arr.ndim == 0:
+            return None
+        return cls(arr, seqs=seqs, keys=keys)
+
+    # -- row access ----------------------------------------------------------
+    def __len__(self) -> int:
+        a = self.array
+        return int(a.shape[0]) if hasattr(a, "shape") else len(a)
+
+    def take(self, rows: Sequence[int]) -> "ArrayBatch":
+        """Row-slice into a new ArrayBatch (ONE gather on the array)."""
+        idx = np.asarray(rows, dtype=np.int64)
+        return ArrayBatch(
+            self.array[idx],
+            seqs=[self.seqs[i] for i in rows] if self.seqs else None,
+            keys=[self.keys[i] for i in rows] if self.keys else None)
+
+    def to_messages(self, port: str = "out") -> List[Message]:
+        """Unstack into ordinary per-row Messages (the degradation path:
+        non-array consumers, sink collection, custom split policies)."""
+        out: List[Message] = []
+        for i in range(len(self)):
+            m = Message(payload=self.array[i],
+                        key=self.keys[i] if self.keys else None,
+                        port=port)
+            if self.seqs:
+                m.meta["parent_seq"] = self.seqs[i]
+            out.append(m)
+        return out
+
+    # -- serialization (checkpoints, SerializingTransport) -------------------
+    def __getstate__(self):
+        # device arrays are materialized on host so a carrier crossing a
+        # pickling boundary (checkpoint file, cross-host transport) never
+        # depends on the sender's device state
+        return {"array": np.asarray(self.array),
+                "seqs": self.seqs, "keys": self.keys}
+
+    def __setstate__(self, state):
+        self.array = state["array"]
+        self.seqs = state["seqs"]
+        self.keys = state["keys"]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        shape = getattr(self.array, "shape", ("?",))
+        return (f"<ArrayBatch rows={len(self)} shape={tuple(shape)} "
+                f"keys={'yes' if self.keys else 'no'}>")

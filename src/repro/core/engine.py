@@ -42,6 +42,7 @@ from concurrent.futures import ThreadPoolExecutor
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
+from .arraybatch import ArrayBatch
 from .graph import FloeGraph
 from .message import Message
 from .patterns import SPLITS, Split, make_split
@@ -68,6 +69,45 @@ BOOTSTRAP_BATCH_MAX = 32
 def _is_special(msg: Message) -> bool:
     """Batch boundary predicate: landmarks/control never share a batch."""
     return not msg.is_data()
+
+
+def _is_carrier(msg: Message) -> bool:
+    """Is this message an ArrayBatch carrier (one entry, many rows)?"""
+    return msg.is_data() and isinstance(msg.payload, ArrayBatch)
+
+
+def _batch_boundary(msg: Message) -> bool:
+    """Push-path pop boundary: specials never share a batch, and a carrier
+    is already a whole batch — it dispatches alone (as one columnar unit)
+    rather than being mixed with scalar messages."""
+    return not msg.is_data() or isinstance(msg.payload, ArrayBatch)
+
+
+def _rows_of(msg: Message) -> int:
+    """Logical row count of one channel entry.  All credit, backpressure
+    and stats accounting is in rows, so an ArrayBatch carrier weighs
+    exactly what its unstacked messages would."""
+    p = msg.payload
+    return len(p) if isinstance(p, ArrayBatch) else 1
+
+
+def _rows_total(msgs) -> int:
+    return sum(_rows_of(m) for m in msgs)
+
+
+def _degrade_carriers(msgs: List[Message]) -> List[Message]:
+    """Unstack any ArrayBatch carriers into per-row messages (in place,
+    order preserved).  Used by raw channel hand-offs (backlog reroute /
+    replacement re-admit) whose target cannot consume carriers — going
+    through ``enqueue`` would do this automatically, but those paths
+    deliberately bypass it to keep credits moving with the messages."""
+    if not any(_is_carrier(m) for m in msgs):
+        return msgs
+    out: List[Message] = []
+    for m in msgs:
+        out.extend(m.payload.to_messages(port=m.port)
+                   if _is_carrier(m) else (m,))
+    return out
 
 
 def _edge_key(e) -> Tuple[str, str, str, str, str, str]:
@@ -130,12 +170,19 @@ class Channel:
     The batch operations (``put_many`` / ``pop_up_to``) move a whole
     micro-batch per lock round-trip — the primitive underneath the engine's
     adaptive micro-batched data path.
+
+    Capacity, queue length (``len``), and backpressure are all accounted in
+    **rows**: an ArrayBatch carrier is one deque entry but weighs its row
+    count, so batching never loosens the buffer bound and queue-depth
+    readers (adaptive B, balanced splits, adaptation strategies) see the
+    real backlog.
     """
 
     def __init__(self, capacity: int = 100_000,
                  on_put: Optional[Callable[[], None]] = None):
         self._q: deque = deque()
         self._capacity = capacity
+        self._rows = 0
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
         self._on_put = on_put
@@ -143,9 +190,10 @@ class Channel:
     def put(self, msg: Message, timeout: Optional[float] = 30.0) -> None:
         with self._not_full:
             if not self._not_full.wait_for(
-                    lambda: len(self._q) < self._capacity, timeout=timeout):
+                    lambda: self._rows < self._capacity, timeout=timeout):
                 raise TimeoutError("channel full: backpressure timeout")
             self._q.append(msg)
+            self._rows += _rows_of(msg)
         if self._on_put:
             self._on_put()
 
@@ -157,21 +205,38 @@ class Channel:
         space frees up (waiting for room for the *whole* batch could
         deadlock a graph cycle); each chunk still respects the capacity
         bound, so downstream backpressure semantics are unchanged.
+        ``timeout`` is ONE shared deadline for the whole call, not a
+        per-chunk allowance — a multi-chunk admit against a slow consumer
+        fails within ``timeout`` wall-clock, never N×timeout.
         """
         if not msgs:
             return
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
         i, n = 0, len(msgs)
         while i < n:
             with self._not_full:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
                 if not self._not_full.wait_for(
-                        lambda: len(self._q) < self._capacity,
-                        timeout=timeout):
+                        lambda: self._rows < self._capacity,
+                        timeout=remaining):
                     err = TimeoutError(
                         "channel full: backpressure timeout")
                     err.appended = i   # callers roll back the remainder
                     raise err
-                take = min(self._capacity - len(self._q), n - i)
+                space = self._capacity - self._rows
+                take, rows = 0, 0
+                while i + take < n:
+                    r = _rows_of(msgs[i + take])
+                    if take > 0 and rows + r > space:
+                        break   # always admit >= 1 entry per chunk
+                    rows += r
+                    take += 1
+                    if rows >= space:
+                        break
                 self._q.extend(msgs[i:i + take])
+                self._rows += rows
                 i += take
             if self._on_put:   # per chunk, so the consumer makes progress
                 self._on_put()
@@ -180,6 +245,7 @@ class Channel:
         with self._not_full:
             if self._q:
                 msg = self._q.popleft()
+                self._rows -= _rows_of(msg)
                 self._not_full.notify_all()
                 return msg
             return None
@@ -205,6 +271,7 @@ class Channel:
                     break
                 out.append(q.popleft())
             if out:
+                self._rows -= _rows_total(out)
                 self._not_full.notify_all()
         return out
 
@@ -212,13 +279,15 @@ class Channel:
         """Push a popped message back to the head (locked restore path)."""
         with self._lock:
             self._q.appendleft(msg)
+            self._rows += _rows_of(msg)
 
     def peek(self) -> Optional[Message]:
         with self._lock:
             return self._q[0] if self._q else None
 
     def __len__(self) -> int:
-        return len(self._q)
+        """Pending ROWS (not deque entries) — the logical queue depth."""
+        return self._rows
 
 
 class FlakeStats:
@@ -300,6 +369,7 @@ class Flake:
                  speculative_timeout: Optional[float] = None,
                  batch_max: Optional[int] = None,
                  batch_wait_ms: float = 0.0,
+                 batch_array: bool = False,
                  proto: Optional[Pellet] = None):
         self.name = name
         self.factory = factory
@@ -361,6 +431,10 @@ class Flake:
         self.batch_max = (DEFAULT_BATCH_MAX if batch_max is None
                           else max(1, int(batch_max)))
         self.batch_wait = max(0.0, float(batch_wait_ms)) / 1000.0
+        #: array fast path opt-in (``stage.batch(..., array=True)``): a
+        #: drained batch of stackable payloads is kept as ONE ArrayBatch
+        #: carrier — computed via ``compute_array``, routed columnar.
+        self.batch_array = bool(batch_array)
         self._batch_deadline: Optional[float] = None
         self.version = 0                       # bumps on dynamic task update
         #: landmark alignment (watermark semantics): a flush landmark is
@@ -413,16 +487,20 @@ class Flake:
         self._sem.set_capacity(max(1, self.cores * ALPHA) if self.cores else 0)
 
     def set_batch(self, max_size: int,
-                  max_wait_ms: Optional[float] = None) -> None:
+                  max_wait_ms: Optional[float] = None,
+                  array: Optional[bool] = None) -> None:
         """Runtime micro-batch tuning (max_size=1 disables batching).
 
         An explicit size is authoritative: it replaces the default
-        latency-targeting policy for this flake.
+        latency-targeting policy for this flake.  ``array`` toggles the
+        ArrayBatch fast path (None = leave unchanged).
         """
         self.batch_max = max(1, int(max_size))
         self._batch_explicit = True
         if max_wait_ms is not None:
             self.batch_wait = max(0.0, float(max_wait_ms)) / 1000.0
+        if array is not None:
+            self.batch_array = bool(array)
         self._batch_deadline = None   # drop any in-progress linger
         self._notify()
 
@@ -432,8 +510,18 @@ class Flake:
         self.batch_max = DEFAULT_BATCH_MAX
         self.batch_wait = 0.0
         self._batch_explicit = False
+        self.batch_array = False
         self._batch_deadline = None
         self._notify()
+
+    @property
+    def accepts_arrays(self) -> bool:
+        """Can this flake consume an ArrayBatch carrier whole?  Anything
+        else (window/tuple/pull pellets, speculation, no opt-in) gets the
+        carrier unstacked into per-row messages at enqueue — the clean
+        fallback to the row-wise data path."""
+        return (self.batch_array and self.speculative_timeout is None
+                and isinstance(self._proto, PushPellet))
 
     def _drain_acquire(self) -> None:
         with self._drain_lock:
@@ -505,6 +593,12 @@ class Flake:
     def enqueue(self, port: str, msg: Message) -> None:
         if port not in self.inputs:
             raise KeyError(f"{self.name}: no input port {port!r}")
+        if _is_carrier(msg) and not self.accepts_arrays:
+            # columnar fast path ends here: this flake cannot consume a
+            # stacked batch (window/tuple/pull semantics, no opt-in, or
+            # speculation) — degrade to the exact row-wise data path
+            self.enqueue_many(port, msg.payload.to_messages(port=msg.port))
+            return
         if msg.landmark and self.in_degree > 1:
             with self._lm_lock:
                 self._lm_count += 1
@@ -513,16 +607,17 @@ class Flake:
                     return  # swallow: wait for copies from remaining edges
                 self._lm_count = 0
                 self._lm_pending = None
+        n = _rows_of(msg)
         if self.engine is not None:
-            self.engine._inflight_inc()
-        self.stats.on_arrive()
+            self.engine._inflight_inc(n)
+        self.stats.on_arrive(n)
         try:
             self.inputs[port].put(msg)
         except Exception:
             # never-admitted message: release its credit or engine-wide
             # quiescence would wedge for the life of the session
             if self.engine is not None:
-                self.engine._inflight_dec()
+                self.engine._inflight_dec(n)
             raise
 
     def enqueue_many(self, port: str, msgs: List[Message]) -> None:
@@ -544,15 +639,18 @@ class Flake:
             for m in msgs:
                 self.enqueue(port, m)
             return
+        if not self.accepts_arrays:
+            msgs = _degrade_carriers(msgs)
+        rows = _rows_total(msgs)
         if self.engine is not None:
-            self.engine._inflight_inc(len(msgs))
-        self.stats.on_arrive(len(msgs))
+            self.engine._inflight_inc(rows)
+        self.stats.on_arrive(rows)
         try:
             self.inputs[port].put_many(msgs)
         except Exception as e:
             # release credits for the never-admitted remainder (put_many
-            # reports how many it appended before timing out)
-            lost = len(msgs) - getattr(e, "appended", 0)
+            # reports how many entries it appended before timing out)
+            lost = _rows_total(msgs[getattr(e, "appended", 0):])
             if self.engine is not None and lost > 0:
                 self.engine._inflight_dec(lost)
             raise
@@ -687,7 +785,9 @@ class Flake:
                 self._batch_deadline = None
                 return None
             head = target.peek()
-            if head is not None and head.is_data() and len(target) < limit:
+            if head is not None and head.is_data() \
+                    and not isinstance(head.payload, ArrayBatch) \
+                    and len(target) < limit:
                 now = time.time()
                 if self._batch_deadline is None:
                     self._batch_deadline = now + self.batch_wait
@@ -700,11 +800,18 @@ class Flake:
             limit = self._batch_limit()
             channels = self.inputs.values()
         for c in channels:
-            batch = c.pop_up_to(limit, stop=_is_special)
+            batch = c.pop_up_to(limit, stop=_batch_boundary)
             if not batch:
                 continue
-            if not batch[0].is_data():
-                return ("landmark", batch[0], 1)
+            head = batch[0]
+            if not head.is_data():
+                return ("landmark", head, 1)
+            if isinstance(head.payload, ArrayBatch):
+                # an upstream stage already stacked this batch: dispatch
+                # the carrier whole — credits/stats counted in rows
+                rows = len(head.payload)
+                self.stats.on_dispatch(rows)
+                return ("abatch", head, rows)
             self.stats.on_dispatch(len(batch))
             if len(batch) == 1:
                 return ("msg", batch[0], 1)
@@ -835,45 +942,23 @@ class Flake:
             elif kind == "batch":
                 # micro-batch of data messages from ONE channel: one
                 # compute_batch call, per-message lineage/wrap preserved.
-                # The default compute_batch executes each payload exactly
-                # once and marks failures as BatchItemError entries, so
-                # error semantics stay message-granular with no
-                # double-execution of side effects.
-                payloads = [m.payload for m in item]
-                fn = getattr(proto, "compute_batch", None)
-                try:
-                    if fn is not None:
-                        results = fn(payloads)
-                    else:
-                        results = PushPellet.compute_batch(proto, payloads)
-                    if len(results) != len(item):
-                        raise ValueError(
-                            f"compute_batch returned {len(results)} results "
-                            f"for {len(item)} payloads")
-                except Exception as batch_exc:
-                    # a vectorized override failed as a unit; such overrides
-                    # must be side-effect free (documented, and the same
-                    # statelessness contract speculative re-execution relies
-                    # on), so recover by re-running per message — only
-                    # raising messages are dropped, the rest delivered
-                    results = []
-                    for m in item:
-                        try:
-                            results.append(proto.compute(m.payload))
-                        except Exception as e:
-                            results.append(BatchItemError(e))
-                    if not any(isinstance(r, BatchItemError)
-                               for r in results) and self.engine is not None:
-                        # batch-level bug (e.g. wrong result count) that
-                        # per-message compute recovered from: deliver the
-                        # data, surface the bug
-                        self.engine._record_error(self.name, batch_exc)
-                for m, r in zip(item, results):
-                    if isinstance(r, BatchItemError):
-                        if self.engine is not None:
-                            self.engine._record_error(self.name, r.exc)
-                        continue
-                    outputs.extend(self._wrap(r, m))
+                # With the array opt-in, stackable payloads take the
+                # columnar fast path instead (one ArrayBatch carrier out).
+                outputs = None
+                if self.batch_array:
+                    outputs = self._array_outputs(proto, msgs=item)
+                if outputs is None:
+                    outputs = self._batch_outputs(proto, item)
+            elif kind == "abatch":
+                # an ArrayBatch carrier: one compute_array call over the
+                # stacked array, no unstack between vectorized stages.  If
+                # the pellet declines the array path, degrade the carrier
+                # to the exact row-wise batched semantics.
+                ab = item.payload
+                outputs = self._array_outputs(proto, ab=ab)
+                if outputs is None:
+                    outputs = self._batch_outputs(
+                        proto, ab.to_messages(port=item.port))
             elif kind == "tuple":
                 payloads = {p: m.payload for p, m in item.items()}
                 anchor = next(iter(item.values()))
@@ -914,7 +999,7 @@ class Flake:
         self.stats.on_process(time.time() - t0, n=credits)
         try:
             self._route_many(outputs)
-            self.stats.on_emit(len(outputs))
+            self.stats.on_emit(_rows_total(outputs))
             # forward a landmark that flushed a partial window
             lm = getattr(self, "_requeue_landmark_after", None)
             if lm is not None:
@@ -930,6 +1015,134 @@ class Flake:
         finally:
             if self.engine is not None:
                 self.engine._inflight_dec(credits)
+
+    def _batch_outputs(self, proto: Pellet,
+                       item: List[Message]) -> List[Message]:
+        """Row-wise batched compute: one compute_batch call, per-message
+        lineage/wrap preserved.  The default compute_batch executes each
+        payload exactly once and marks failures as BatchItemError entries,
+        so error semantics stay message-granular with no double-execution
+        of side effects."""
+        payloads = [m.payload for m in item]
+        fn = getattr(proto, "compute_batch", None)
+        try:
+            if fn is not None:
+                results = fn(payloads)
+            else:
+                results = PushPellet.compute_batch(proto, payloads)
+            if len(results) != len(item):
+                raise ValueError(
+                    f"compute_batch returned {len(results)} results "
+                    f"for {len(item)} payloads")
+        except Exception as batch_exc:
+            # a vectorized override failed as a unit; such overrides
+            # must be side-effect free (documented, and the same
+            # statelessness contract speculative re-execution relies
+            # on), so recover by re-running per message — only
+            # raising messages are dropped, the rest delivered
+            results = []
+            for m in item:
+                try:
+                    results.append(proto.compute(m.payload))
+                except Exception as e:
+                    results.append(BatchItemError(e))
+            if not any(isinstance(r, BatchItemError)
+                       for r in results) and self.engine is not None:
+                # batch-level bug (e.g. wrong result count) that
+                # per-message compute recovered from: deliver the
+                # data, surface the bug
+                self.engine._record_error(self.name, batch_exc)
+        return self._wrap_results(item, results)
+
+    def _wrap_results(self, item: List[Message],
+                      results: List[Any]) -> List[Message]:
+        outputs: List[Message] = []
+        for m, r in zip(item, results):
+            if isinstance(r, BatchItemError):
+                if self.engine is not None:
+                    self.engine._record_error(self.name, r.exc)
+                continue
+            outputs.extend(self._wrap(r, m))
+        return outputs
+
+    def _array_outputs(self, proto: Pellet, *,
+                       msgs: Optional[List[Message]] = None,
+                       ab: Optional[ArrayBatch] = None
+                       ) -> Optional[List[Message]]:
+        """The columnar fast path: ONE compute_array call over a stacked
+        batch, ONE carrier message out.
+
+        Returns ``None`` when the fast path does not apply — ragged or
+        non-stackable payloads, or a pellet whose ``compute_array``
+        declines — and the caller falls back to the row-wise batched
+        machinery.  A raising/misbehaving ``compute_array`` degrades to
+        per-row ``compute`` with exactly the BatchItemError semantics of
+        the row-wise path (only the raising row drops).
+        """
+        fn = getattr(proto, "compute_array", None)
+        if fn is None:
+            return None
+        # decline BEFORE paying the stack: a pellet that never overrides
+        # the hook (or a non-vectorized FnPellet) would only return
+        # NotImplemented after an O(B) copy, every dispatch
+        if type(proto).compute_array is PushPellet.compute_array:
+            return None
+        if isinstance(proto, FnPellet) and not proto.vectorized:
+            return None
+        if ab is None:
+            ab = ArrayBatch.try_stack([m.payload for m in msgs],
+                                      seqs=[m.seq for m in msgs],
+                                      keys=[m.key for m in msgs])
+            if ab is None:
+                return None    # ragged / non-array payloads: fall back
+        try:
+            res = fn(ab.array)
+        except Exception as exc:
+            return self._degrade_rowwise(proto, ab, exc)
+        if res is NotImplemented:
+            return None
+        rows = len(ab)
+        if isinstance(res, ArrayBatch):
+            if len(res) != rows:
+                return self._degrade_rowwise(proto, ab, ValueError(
+                    f"compute_array returned {len(res)} rows for {rows}"))
+            if res.seqs is None:
+                res.seqs = ab.seqs
+            if res.keys is None:
+                res.keys = ab.keys
+            return [Message(payload=res, port=proto.out_ports[0])]
+        if hasattr(res, "ndim") and getattr(res, "ndim", 0) >= 1 \
+                and res.shape[0] == rows \
+                and getattr(res, "dtype", None) != object:
+            out = ArrayBatch(res, seqs=ab.seqs, keys=ab.keys)
+            return [Message(payload=out, port=proto.out_ports[0])]
+        if isinstance(res, (list, tuple)) and len(res) == rows:
+            # classic per-row vectorized contract (KeyedEmit / Drop /
+            # multi-port dicts): correct, but the columnar hand-off ends
+            # here — rows are wrapped individually
+            return self._wrap_results(ab.to_messages(), list(res))
+        return self._degrade_rowwise(proto, ab, ValueError(
+            f"compute_array returned {type(res).__name__}, expected an "
+            f"array with leading dim {rows} (or a {rows}-item sequence)"))
+
+    def _degrade_rowwise(self, proto: Pellet, ab: ArrayBatch,
+                         batch_exc: Exception) -> List[Message]:
+        """Recover a failed array-batch by re-running per row — exactly
+        the row-wise recovery contract: only raising rows are dropped
+        (recorded), everything else is delivered."""
+        msgs = ab.to_messages()
+        results: List[Any] = []
+        for m in msgs:
+            try:
+                results.append(proto.compute(m.payload))
+            except Exception as e:
+                results.append(BatchItemError(e))
+        if not any(isinstance(r, BatchItemError) for r in results) \
+                and self.engine is not None:
+            # batch-level bug the per-row pass recovered from: deliver
+            # the data, surface the bug
+            self.engine._record_error(self.name, batch_exc)
+        return self._wrap_results(msgs, results)
 
     def _wrap(self, result: Any, anchor: Message) -> List[Message]:
         """Normalize a compute() return value into output Messages."""
@@ -973,6 +1186,9 @@ class Flake:
 
     # -- output side -----------------------------------------------------------
     def _route(self, msg: Message, broadcast: bool = False) -> None:
+        if _is_carrier(msg):
+            self._route_carrier(msg)
+            return
         route = self.routes.get(msg.port)
         if route is None:
             if broadcast and self.routes:  # landmark: fan out on every route
@@ -993,6 +1209,47 @@ class Flake:
             flake, dst_port = targets[i]
             flake.enqueue(dst_port, msg)
 
+    def _route_carrier(self, msg: Message) -> None:
+        """Route an ArrayBatch carrier WITHOUT unstacking.
+
+        Per-row destinations come from the split's ``choose_rows`` (key
+        sidecar only) and the array is sliced once per destination group —
+        one enqueue per downstream flake, rows in emit order so
+        per-destination (and per-key, under hash) FIFO is preserved.
+        Policies without a row path fall back to unstacked per-message
+        routing, which owns the exact legacy semantics.
+        """
+        ab: ArrayBatch = msg.payload
+        route = self.routes.get(msg.port)
+        if route is None:
+            if self.engine is not None:  # sink: rows surface as messages
+                self.engine._collect_output(self.name, msg)
+            return
+        split, targets = route
+        n = len(targets)
+        if n == 1:
+            targets[0][0].enqueue(targets[0][1], msg)
+            return
+        if split.broadcast_rows():
+            for flake, dst_port in targets:   # shared, read-only carrier
+                flake.enqueue(dst_port, msg)
+            return
+        depths = [t[0].queue_length() for t in targets]
+        dests = split.choose_rows(len(ab), ab.keys, n, depths)
+        if dests is None:
+            # no vectorized row path (custom policy, keyless hash):
+            # unstack and route rows through the per-message machinery
+            for m in ab.to_messages(port=msg.port):
+                self._route(m)
+            return
+        groups: Dict[int, List[int]] = {}
+        for i, d in enumerate(dests):
+            groups.setdefault(int(d), []).append(i)
+        for d, rows in groups.items():
+            flake, dst_port = targets[d]
+            sub = ab if len(rows) == len(ab) else ab.take(rows)
+            flake.enqueue(dst_port, Message(payload=sub, port=msg.port))
+
     def _route_many(self, msgs: List[Message]) -> None:
         """Amortized routing for a batch of emitted messages.
 
@@ -1002,11 +1259,14 @@ class Flake:
         is paid per group, not per message.  Per-destination FIFO order is
         preserved (groups are filled in emit order).  Any special message
         in the batch falls back to the per-message path, which owns the
-        broadcast/alignment semantics.
+        broadcast/alignment semantics; ArrayBatch carriers route whole
+        via ``_route_carrier``.
         """
         if not msgs:
             return
-        if len(msgs) == 1 or any(not m.is_data() for m in msgs):
+        if len(msgs) == 1 or any(not m.is_data()
+                                 or isinstance(m.payload, ArrayBatch)
+                                 for m in msgs):
             for m in msgs:
                 self._route(m)
             return
@@ -1179,10 +1439,19 @@ class Coordinator:
         self.errors.append((flake, exc))
 
     def _collect_output(self, flake: str, msg: Message) -> None:
+        if _is_carrier(msg):
+            # a columnar batch leaving the dataflow surfaces as ordinary
+            # per-row messages, so drain_outputs/census tooling is
+            # payload-container agnostic
+            msgs = msg.payload.to_messages(port=msg.port)
+            with self._out_lock:
+                self.outputs.extend(msgs)
+            return
         with self._out_lock:
             self.outputs.append(msg)
 
     def _collect_outputs(self, flake: str, msgs: List[Message]) -> None:
+        msgs = _degrade_carriers(msgs)
         with self._out_lock:
             self.outputs.extend(msgs)
 
@@ -1217,7 +1486,8 @@ class Coordinator:
                 channel_capacity=self._channel_capacity,
                 speculative_timeout=self._speculative_timeout,
                 batch_max=v.annotations.get("batch_max"),
-                batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0))
+                batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0),
+                batch_array=v.annotations.get("batch_array", False))
         # wire routes + landmark in-degrees (same derivation as a dynamic
         # dataflow update, so started and recomposed sessions never drift)
         self.apply_wiring(self.graph)
@@ -1361,7 +1631,9 @@ class Coordinator:
                  quiesce_timeout: float = 30.0,
                  swap_protos: Optional[Dict[str, Pellet]] = None,
                  remove_backlog: Optional[Dict[str, Any]] = None,
-                 add_protos: Optional[Dict[str, Pellet]] = None
+                 add_protos: Optional[Dict[str, Pellet]] = None,
+                 replace: Optional[Dict[str, Callable[[], Pellet]]] = None,
+                 replace_protos: Optional[Dict[str, Pellet]] = None
                  ) -> Dict[str, Any]:
         """Coordinated §II.B change set applied as one atomic step.
 
@@ -1394,6 +1666,16 @@ class Coordinator:
           hand-off into another stage's input, migration-style, credits
           moving with the messages).
 
+        ``replace`` stages a **same-name replacement with a changed port
+        signature**: the named flake retires and a fresh one (built from
+        the new factory) takes its name in the same atomic step.  Unlike a
+        ``swap``, ports may differ — the new wiring in ``graph`` is
+        validated against the replacement proto's ports up front.  Channel
+        backlog carries over FIFO for input ports the new signature keeps;
+        rows on retired ports are dropped (credits released, counts
+        surfaced in the summary).  Pellet/window state does NOT transfer —
+        a replacement is new logic, not a task update.
+
         Returns the structural diff summary of the commit (also stored as
         ``self.last_transaction``); ``topology_version`` bumps once per
         committed transaction that changed anything.
@@ -1401,15 +1683,18 @@ class Coordinator:
         with self._wiring_lock:   # vs concurrent migrations / task updates
             return self._transact_locked(swaps, graph, cores, extra_drain,
                                          quiesce_timeout, swap_protos,
-                                         remove_backlog, add_protos)
+                                         remove_backlog, add_protos,
+                                         replace, replace_protos)
 
     def _transact_locked(self, swaps, graph, cores, extra_drain,
                          quiesce_timeout, swap_protos,
-                         remove_backlog=None, add_protos=None
+                         remove_backlog=None, add_protos=None,
+                         replace=None, replace_protos=None
                          ) -> Dict[str, Any]:
         swaps = dict(swaps or {})
         cores = dict(cores or {})
         remove_backlog = dict(remove_backlog or {})
+        replace = dict(replace or {})
         # validate EVERYTHING up front so a bad input aborts before any
         # change is applied (the atomicity contract above)
         protos = dict(swap_protos or {})
@@ -1472,12 +1757,46 @@ class Coordinator:
                 raise ValueError(
                     f"transact: remove_backlog[{n!r}] must be 'drop', "
                     f"'collect' or (stage, port); got {policy!r}")
-        # the removed flakes' upstreams must be part of the drain set, or a
-        # neighbour could be mid-send while the backlog is popped
+        # same-name replacements: the fresh proto's ports are the ground
+        # truth the new wiring must satisfy (validated BEFORE any change)
+        rprotos: Dict[str, Pellet] = dict(replace_protos or {})
+        if replace and graph is None:
+            raise ValueError("transact: replace requires a graph naming "
+                             "the post-change topology")
+        for n, factory in replace.items():
+            if n not in self.flakes:
+                raise ValueError(f"transact: replace names unknown "
+                                 f"flake {n!r}")
+            if n not in graph.vertices:
+                raise ValueError(f"transact: replaced stage {n!r} is "
+                                 "missing from the new graph")
+            if n in set(swaps) | set(cores):
+                raise ValueError(
+                    f"transact: {n!r} is being replaced; it cannot also "
+                    "be swapped or scaled in the same transaction")
+            p = rprotos.get(n) or factory()
+            if not isinstance(p, Pellet):
+                raise ValueError(
+                    f"transact: replacement of {n!r} produced "
+                    f"{type(p).__name__}, expected a Pellet")
+            rprotos[n] = p
+            for e in graph.edges:
+                if e.src == n and e.src_port not in p.out_ports:
+                    raise ValueError(
+                        f"transact: replacement {n!r} has no OUTPUT port "
+                        f"{e.src_port!r}; out={list(p.out_ports)}")
+                if e.dst == n and e.dst_port not in p.in_ports:
+                    raise ValueError(
+                        f"transact: replacement {n!r} has no INPUT port "
+                        f"{e.dst_port!r}; in={list(p.in_ports)}")
+        # the removed/replaced flakes' upstreams must be part of the drain
+        # set, or a neighbour could be mid-send while the backlog is popped
         upstream_removed = {e.src for n in removed
                             for e in self.graph.in_edges(n)} - set(removed)
+        upstream_replaced = {e.src for n in replace
+                             for e in self.graph.in_edges(n)} - set(replace)
         affected = set(swaps) | set(extra_drain) | set(removed) \
-            | upstream_removed
+            | upstream_removed | set(replace) | upstream_replaced
         flakes = [self.flakes[n] for n in sorted(affected)]
         for f in flakes:
             f._drain_acquire()
@@ -1502,29 +1821,63 @@ class Coordinator:
             add_order = [n for n in graph.wiring_order() if n in added] \
                 if added else []
             spawned = self._spawn_added(graph, add_order, added_protos)
+            try:
+                replaced_new = self._spawn_replacements(graph, replace,
+                                                        rprotos)
+            except Exception:
+                # the added flakes were built but never wired: unwind
+                # their allocations too, or an aborted transaction leaks
+                # cores/placements on every retry
+                self._rollback_spawn(add_order)
+                raise
             for n, factory in swaps.items():
                 self.flakes[n].swap_pellet(factory, mode="async",
                                            emit_update_landmark=False,
                                            new_proto=protos[n])
             old_graph = self.graph
+            retired_replaced: Dict[str, Flake] = {}
             if graph is not None:
                 # retire/adopt the vertex-set delta atomically vs injection:
                 # a racing inject must either land before the pop (and be
                 # disposed with the backlog) or fail to resolve the removed
                 # stage — never strand in a dead flake's channels
                 backlogs: Dict[str, List[Message]] = {}
+                carried: Dict[str, Dict[str, List[Message]]] = {}
                 with self._inject_lock:
                     for n in removed:
                         retired[n] = self.flakes.pop(n)
                         backlogs[n] = self._pop_backlog(retired[n])
+                    for n, f in replaced_new.items():
+                        old_f = self.flakes[n]
+                        retired_replaced[n] = old_f
+                        # FIFO backlog hand-off, migration-style: credits
+                        # move with the messages; ports the new signature
+                        # dropped are disposed below
+                        carried[n] = {p: ch.pop_up_to(None)
+                                      for p, ch in old_f.inputs.items()}
+                        # landmark-alignment progress is an input-side
+                        # property, independent of pellet logic: move it
+                        # (as migration does) so a half-counted flush
+                        # round is completed by apply_wiring below, not
+                        # silently lost
+                        with old_f._lm_lock:
+                            f.in_degree = old_f.in_degree
+                            f._lm_count = old_f._lm_count
+                            f._lm_pending = old_f._lm_pending
+                        self.flakes[n] = f
                     self.flakes.update(spawned)
                 self.apply_wiring(graph)
                 for n, msgs in backlogs.items():
                     self._dispose_backlog(
                         n, msgs, remove_backlog.get(n, "drop"), summary)
+                for n, by_port in carried.items():
+                    self._readmit_replaced_backlog(
+                        n, retired_replaced[n], by_port, summary)
                 # activate downstream-first, same discipline as start()
                 for n in add_order:
                     spawned[n].activate()
+                for n in replaced_new:
+                    replaced_new[n].activate()
             for n, c in cores.items():
                 self.set_cores(n, c)
             # one coordinated update landmark from each swapped pellet
@@ -1537,7 +1890,7 @@ class Coordinator:
                         broadcast=True)
             e_added, e_removed = _edge_delta(old_graph, self.graph) \
                 if graph is not None else ([], [])
-            changed = bool(swaps or cores or added or removed
+            changed = bool(swaps or cores or added or removed or replace
                            or e_added or e_removed)
             if changed:
                 self.topology_version += 1
@@ -1548,9 +1901,10 @@ class Coordinator:
                 "scaled": dict(cores),
                 "added": sorted(added),
                 "removed": sorted(removed),
+                "replaced": sorted(replace),
                 "edges_added": e_added,
                 "edges_removed": e_removed,
-                "removed_backlog": {n: len(b) for n, b in
+                "removed_backlog": {n: _rows_total(b) for n, b in
                                     (backlogs.items() if removed else ())},
             })
         finally:
@@ -1577,7 +1931,21 @@ class Coordinator:
                 self._dispose_backlog(n, leftovers,
                                       remove_backlog.get(n, "drop"), summary)
                 summary["removed_backlog"][n] = \
-                    summary["removed_backlog"].get(n, 0) + len(leftovers)
+                    summary["removed_backlog"].get(n, 0) \
+                    + _rows_total(leftovers)
+        for n, f in retired_replaced.items():
+            f.deactivate()
+            try:
+                f._proto.teardown()   # old logic retired for good
+            except Exception:
+                pass
+            # belt-and-braces sweep, like migration: anything a stale
+            # reference enqueued into the dead flake moves to the
+            # replacement (surviving ports) or is disposed
+            leftovers = {p: ch.pop_up_to(None)
+                         for p, ch in f.inputs.items()}
+            if any(leftovers.values()):
+                self._readmit_replaced_backlog(n, f, leftovers, summary)
         if summary.get("changed"):
             # the stored copy drops the raw collected Messages: they belong
             # to the caller of THIS commit, and pinning a whole backlog on
@@ -1622,18 +1990,130 @@ class Coordinator:
                     speculative_timeout=self._speculative_timeout,
                     batch_max=v.annotations.get("batch_max"),
                     batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0),
+                    batch_array=v.annotations.get("batch_array", False),
                     proto=added_protos[n])
         except Exception:
-            for n in add_order:
-                c = self._container_of.pop(n, None)
-                if c is not None and self.cluster is None:
-                    c.release(n)
-                if self.cluster is not None:
-                    # releases the host container's cores and forgets the
-                    # placement/home bookkeeping in one step
-                    self.cluster.unplace(n)
+            self._rollback_spawn(add_order)
             raise
         return spawned
+
+    def _rollback_spawn(self, add_order: List[str]) -> None:
+        """Release every core/placement taken for not-yet-wired added
+        flakes (all-or-nothing abort of a spawning transaction)."""
+        for n in add_order:
+            c = self._container_of.pop(n, None)
+            if c is not None and self.cluster is None:
+                c.release(n)
+            if self.cluster is not None:
+                # releases the host container's cores and forgets the
+                # placement/home bookkeeping in one step
+                self.cluster.unplace(n)
+
+    def _spawn_replacements(self, graph: Optional[FloeGraph],
+                            replace: Dict[str, Callable[[], Pellet]],
+                            rprotos: Dict[str, Pellet]
+                            ) -> Dict[str, "Flake"]:
+        """Build (not wire/activate) same-name replacement flakes.
+
+        The replacement stays on the old flake's container; only the core
+        *delta* against the new blueprint is allocated/released.  All-or-
+        nothing: a failed grant rolls back every adjustment made so far
+        and re-raises, leaving the running graph untouched.
+        """
+        out: Dict[str, Flake] = {}
+        adjusted: List[Tuple[Container, str, int]] = []
+        try:
+            for n, factory in replace.items():
+                old = self.flakes[n]
+                c = self._container_of[n]
+                v = graph.vertices[n]
+                delta = v.cores - old.cores
+                if delta > 0:
+                    if not c.allocate(n, delta):
+                        raise RuntimeError(
+                            f"transact: container {c.name!r} cannot grant "
+                            f"{delta} extra cores to replace {n!r} "
+                            f"(free={c.free_cores})")
+                    adjusted.append((c, n, delta))
+                elif delta < 0:
+                    c.release(n, -delta)
+                    adjusted.append((c, n, delta))
+                out[n] = Flake(
+                    n, factory, cores=v.cores, engine=self,
+                    channel_capacity=self._channel_capacity,
+                    speculative_timeout=self._speculative_timeout,
+                    batch_max=v.annotations.get("batch_max"),
+                    batch_wait_ms=v.annotations.get("batch_wait_ms", 0.0),
+                    batch_array=v.annotations.get("batch_array", False),
+                    proto=rprotos[n])
+        except Exception:
+            for c, n, delta in adjusted:
+                if delta > 0:
+                    c.release(n, delta)
+                else:
+                    c.allocate(n, -delta, force=True)
+            raise
+        return out
+
+    def _readmit_replaced_backlog(self, name: str, old_flake: "Flake",
+                                  by_port: Dict[str, List[Message]],
+                                  summary: Dict[str, Any]) -> None:
+        """Re-admit a replaced flake's backlog into the replacement.
+
+        Ports the new signature keeps get their messages back in FIFO
+        order (credits move with them); rows on retired ports — plus the
+        old logic's half-gathered window buffer — leave the dataflow:
+        credits released, counts surfaced in the summary.
+        """
+        new = self.flakes.get(name)
+        dropped = 0
+
+        def admit(port: str, msgs: List[Message]) -> None:
+            nonlocal dropped
+            if not new.accepts_arrays:
+                msgs = _degrade_carriers(msgs)
+            # bounded put: this runs under the wiring lock (and the
+            # replacement may not be consuming yet), so a backlog that
+            # cannot fit must degrade to dropped-with-credits-released
+            # rather than wedge the engine (same hazard and remedy as
+            # the _dispose_backlog reroute)
+            try:
+                new.inputs[port].put_many(msgs, timeout=30.0)
+                new.stats.on_arrive(_rows_total(msgs))
+                new._notify()
+            except TimeoutError as e:
+                admitted = getattr(e, "appended", 0)
+                if admitted:
+                    new.stats.on_arrive(_rows_total(msgs[:admitted]))
+                    new._notify()
+                rest = msgs[admitted:]
+                dropped += _rows_total(rest)
+                self._record_error(name, RuntimeError(
+                    f"replacement backlog re-admit into {name!r} "
+                    f"port {port!r} timed out with "
+                    f"{_rows_total(rest)} rows unadmitted (channel "
+                    "full); they were dropped, credits released"))
+
+        # the half-gathered window buffer holds INPUT data (popped but
+        # never processed — the oldest messages): re-admit it ahead of
+        # the channel backlog, like checkpoint restore does
+        wbuf, old_flake._window_buf = old_flake._window_buf, []
+        if wbuf:
+            if new is not None and new.inputs:
+                admit(next(iter(new.inputs)), list(wbuf))
+            else:
+                dropped += _rows_total(wbuf)
+        for port, msgs in by_port.items():
+            if not msgs:
+                continue
+            if new is not None and port in new.inputs:
+                admit(port, msgs)
+            else:
+                dropped += _rows_total(msgs)
+        if dropped:
+            self._inflight_dec(dropped)
+            d = summary.setdefault("replaced_backlog_dropped", {})
+            d[name] = d.get(name, 0) + dropped
 
     def _pop_backlog(self, flake: "Flake") -> List[Message]:
         """Drain a retiring flake's undelivered input: the half-gathered
@@ -1666,15 +2146,17 @@ class Coordinator:
             # wedge the engine under the wiring lock.  On timeout the
             # unadmitted remainder degrades to 'collect' (surfaced, not
             # lost) and the condition is recorded as an engine error.
+            if not target.accepts_arrays:
+                msgs = _degrade_carriers(msgs)
             try:
                 target.inputs[dport].put_many(msgs, timeout=30.0)
-                target.stats.on_arrive(len(msgs))
+                target.stats.on_arrive(_rows_total(msgs))
                 target._notify()
                 return
             except TimeoutError as e:
                 admitted = getattr(e, "appended", 0)
                 if admitted:
-                    target.stats.on_arrive(admitted)
+                    target.stats.on_arrive(_rows_total(msgs[:admitted]))
                     target._notify()
                 msgs = msgs[admitted:]
                 self._record_error(name, RuntimeError(
@@ -1684,10 +2166,14 @@ class Coordinator:
                     "summary instead"))
                 policy = "collect"
         # drop/collect: the messages leave the dataflow — release their
-        # credits or engine-wide quiescence would wedge forever
-        self._inflight_dec(len(msgs))
+        # credits (rows, for ArrayBatch carriers) or engine-wide
+        # quiescence would wedge forever.  Collected carriers surface as
+        # per-row messages, like sink collection, so the caller's census/
+        # replay code stays payload-container agnostic
+        self._inflight_dec(_rows_total(msgs))
         if policy == "collect":
-            summary.setdefault("backlog", {}).setdefault(name, []).extend(msgs)
+            summary.setdefault("backlog", {}).setdefault(name, []).extend(
+                _degrade_carriers(msgs))
 
     def set_cores(self, name: str, cores: int) -> None:
         if self.cluster is not None:
@@ -1864,6 +2350,7 @@ class Coordinator:
             new.batch_max = old.batch_max
             new._batch_explicit = old._batch_explicit
             new.batch_wait = old.batch_wait
+            new.batch_array = old.batch_array  # array fast path survives
             with old._lm_lock:                 # landmark-alignment progress
                 new.in_degree = old.in_degree
                 new._lm_count = old._lm_count
@@ -1911,6 +2398,7 @@ class Coordinator:
                     "avg_latency": f.stats.avg_latency,
                     "cores": f.cores,
                     "batch_max": f.batch_max,
+                    "batch_array": f.batch_array,
                     "last_batch": f.stats.last_batch,
                     "avg_batch": f.stats.avg_batch,
                     "host": placement.get(n),

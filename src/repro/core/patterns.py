@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import hashlib
 import itertools
-from typing import Any, List, Sequence
+from typing import Any, List, Optional, Sequence
 
 from .message import Message
 
@@ -67,10 +67,32 @@ class Split:
         """Landmarks/control messages go to *all* edges regardless of policy."""
         return True
 
+    def broadcast_rows(self) -> bool:
+        """Array fast path: does every edge receive the whole carrier?"""
+        return False
+
+    def choose_rows(self, n_rows: int, keys: Optional[Sequence],
+                    n_edges: int, queue_depths: Sequence[int]
+                    ) -> Optional[List[int]]:
+        """Array fast path: one destination edge index *per row* of an
+        ``ArrayBatch`` carrier, computed from the per-row key sidecar
+        alone (no payload unstacking).  Returning ``None`` (the default —
+        and the right answer for any policy that needs the full Message,
+        like a custom content-based split) makes the engine unstack the
+        carrier and route the rows through ``choose`` one by one, so
+        custom policies keep exact per-message semantics.  Policies that
+        override this MUST place each row exactly where ``choose`` would
+        have placed the equivalent message.
+        """
+        return None
+
 
 class DuplicateSplit(Split):
     def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
         return list(range(n_edges))
+
+    def broadcast_rows(self) -> bool:
+        return True
 
 
 class RoundRobinSplit(Split):
@@ -80,6 +102,10 @@ class RoundRobinSplit(Split):
     def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
         return [next(self._counter) % n_edges]
 
+    def choose_rows(self, n_rows, keys, n_edges, queue_depths):
+        c = self._counter
+        return [next(c) % n_edges for _ in range(n_rows)]
+
 
 class HashSplit(Split):
     """Dynamic port mapping: same key -> same edge, Hadoop-style."""
@@ -87,6 +113,13 @@ class HashSplit(Split):
     def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
         key = msg.key if msg.key is not None else msg.payload
         return [stable_hash(key) % n_edges]
+
+    def choose_rows(self, n_rows, keys, n_edges, queue_depths):
+        # a keyless row would hash its payload — that needs the unstacked
+        # message, so fall back rather than silently misplace the key
+        if keys is None or any(k is None for k in keys):
+            return None
+        return [stable_hash(k) % n_edges for k in keys]
 
 
 class DirectSplit(Split):
@@ -99,6 +132,11 @@ class DirectSplit(Split):
     def choose(self, msg: Message, n_edges: int, queue_depths: Sequence[int]) -> List[int]:
         key = msg.key if msg.key is not None else 0
         return [int(key) % n_edges]
+
+    def choose_rows(self, n_rows, keys, n_edges, queue_depths):
+        if keys is None:
+            return [0] * n_rows
+        return [int(k) % n_edges if k is not None else 0 for k in keys]
 
 
 class BalancedSplit(Split):
@@ -126,6 +164,20 @@ class BalancedSplit(Split):
             for i in idxs:
                 depths[i] += 1
             out.append(idxs)
+        return out
+
+    def choose_rows(self, n_rows, keys, n_edges, queue_depths):
+        # key-independent: same in-batch placement simulation as
+        # choose_many, one int per row
+        depths = (list(queue_depths) if len(queue_depths) == n_edges
+                  else [0] * n_edges)
+        out: List[int] = []
+        for _ in range(n_rows):
+            m = min(depths)
+            candidates = [i for i, d in enumerate(depths) if d == m]
+            i = candidates[next(self._tie) % len(candidates)]
+            depths[i] += 1
+            out.append(i)
         return out
 
 

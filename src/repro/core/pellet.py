@@ -58,6 +58,12 @@ class Pellet:
     stateful: bool = False
     #: force sequential (in-order) execution — disables data parallelism
     sequential: bool = False
+    #: checkpoint hook for mutable *instance* attributes (e.g. a push pellet
+    #: that accumulates a counter or cache on ``self``): list their names
+    #: here and ``get_state``/``set_state`` snapshot and restore them.  The
+    #: explicit state object (``initial_state``/pull-pellet state) is
+    #: checkpointed separately — this hook covers what that one cannot see.
+    __floe_state__: tuple = ()
 
     # -- lifecycle ---------------------------------------------------------
     def setup(self) -> None:  # called once per instance before first compute
@@ -69,6 +75,21 @@ class Pellet:
     # -- explicit state object (§II.A) -------------------------------------
     def initial_state(self) -> Any:
         return None
+
+    # -- instance-attribute checkpoint hook ---------------------------------
+    def get_state(self) -> Any:
+        """Snapshot mutable instance state for a checkpoint (``None`` =
+        nothing to capture).  The default serializes the attributes named
+        in ``__floe_state__``; override for custom snapshot logic."""
+        if not self.__floe_state__:
+            return None
+        return {k: getattr(self, k) for k in self.__floe_state__}
+
+    def set_state(self, snapshot: Any) -> None:
+        """Restore a ``get_state`` snapshot onto this (fresh) instance."""
+        if snapshot:
+            for k, v in snapshot.items():
+                setattr(self, k, v)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<{type(self).__name__} in={self.in_ports} out={self.out_ports}>"
@@ -105,6 +126,25 @@ class PushPellet(Pellet):
             except Exception as e:
                 out.append(BatchItemError(e))
         return out
+
+    def compute_array(self, array: Any) -> Any:
+        """Array fast path: one call over a whole *stacked* batch.
+
+        The engine's array-payload data path (``stage.batch(...,
+        array=True)``) hands the pellet the stacked array of an
+        ``ArrayBatch`` carrier (leading dim = rows) and expects back an
+        array-like with the same leading dimension — which then travels
+        downstream as one columnar value, no unstacking between
+        vectorized stages.  Returning ``NotImplemented`` (the default)
+        declines the fast path: the engine degrades that batch to the
+        row-wise ``compute_batch`` machinery.  A per-row *list* result
+        (the classic vectorized contract) is also accepted — it is
+        wrapped row-wise, i.e. the columnar hand-off ends at this stage.
+        Like ``compute_batch`` overrides, implementations must be
+        side-effect free: on failure the engine recovers by re-running
+        the rows through ``compute``.
+        """
+        return NotImplemented
 
 
 class TuplePellet(Pellet):
@@ -187,6 +227,13 @@ class FnPellet(PushPellet):
             return list(self.fn(payloads))
         # non-vectorized: inherit the exactly-once, error-isolating loop
         return super().compute_batch(payloads)
+
+    def compute_array(self, array: Any) -> Any:
+        if self.vectorized:
+            # the callable gets the stacked array itself; an array-in /
+            # array-out fn (e.g. a jitted vmap) keeps the batch columnar
+            return self.fn(array)
+        return NotImplemented
 
 
 class KeyedEmit:

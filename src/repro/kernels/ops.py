@@ -12,12 +12,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import cluster_distance as _cd
 from . import decode_attention as _dec
 from . import flash_attention as _fa
 from . import moe_dispatch as _moe
 from . import ssm_scan as _ssm
 
 LANE = 128
+SUBLANE = 8
 
 
 def _pad_last(x: jnp.ndarray, mult: int = LANE) -> Tuple[jnp.ndarray, int]:
@@ -78,6 +80,37 @@ def ssm_scan_op(x, dt, A, B_, C_, h0=None, *, block_d: int = 128,
         bd //= 2
     return _ssm.ssm_scan(x, dt, A, B_, C_, h0, block_d=bd,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def cluster_distance_op(x, centroids, *, block_b: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Padded batched point-to-centroid squared L2: (B,D) × (K,D) -> (B,K).
+
+    The streaming-clustering distance stage: with the engine's array fast
+    path a whole ArrayBatch of posts is scored against every centroid in
+    ONE kernel launch.  Feature dim is padded to the lane width (zero
+    features are distance-neutral), centroid count to the sublane width
+    (padded centroids sliced off), batch to the block size.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centroids, jnp.float32)
+    B, _ = x.shape
+    K, _ = c.shape
+    xp, _ = _pad_last(x)
+    cp, _ = _pad_last(c)
+    pad_k = (-K) % SUBLANE
+    if pad_k:
+        cp = jnp.pad(cp, ((0, pad_k), (0, 0)))
+    # batch tile must itself be sublane-aligned (f32 tiles are 8x128),
+    # so round the block up and pad B to a multiple of it
+    bb = min(block_b, B + (-B) % SUBLANE)
+    bb = bb + (-bb) % SUBLANE
+    pad_b = (-B) % bb
+    if pad_b:
+        xp = jnp.pad(xp, ((0, pad_b), (0, 0)))
+    out = _cd.cluster_distances(xp, cp, block_b=bb, interpret=interpret)
+    return out[:B, :K]
 
 
 # ---------------------------------------------------------------------------

@@ -133,3 +133,73 @@ def test_elastic_resume_smaller_mesh(tmp_path, setup):
     small_pipe = TokenPipeline(cfg, global_batch=2, seq_len=16, seed=3)
     s2, metrics = jstep(restored, small_pipe.batch_at(1))
     assert np.isfinite(float(metrics["loss"]))
+
+
+def test_checkpoint_captures_push_pellet_instance_state(tmp_path):
+    """ROADMAP follow-up: mutable state a push pellet keeps on ``self``
+    (outside the explicit state object) survives checkpoint/restore via
+    the ``__floe_state__``/get_state hook."""
+    from repro.api import Flow, Session
+    from repro.core import PushPellet
+
+    class Dedup(PushPellet):
+        """Drops repeats — the seen-set is instance state."""
+        __floe_state__ = ("seen",)
+        sequential = True
+
+        def __init__(self):
+            self.seen = set()
+
+        def compute(self, x):
+            if x in self.seen:
+                from repro.core import Drop
+                return Drop
+            self.seen.add(x)
+            return x
+
+    flow = Flow("ps")
+    flow.pellet("d", Dedup)
+    path = str(tmp_path / "floe.ckpt")
+    with flow.session() as s:
+        s.inject_many("d", [1, 2, 3, 2])
+        assert sorted(s.results()) == [1, 2, 3]
+        s.checkpoint(path)
+    # restart: the fresh pellet instance must remember what it has seen
+    with Session.restore(path, flow) as s2:
+        proto = s2.coordinator.flakes["d"]._proto
+        assert proto.seen == {1, 2, 3}
+        s2.inject_many("d", [3, 4])
+        assert s2.results() == [4]          # 3 still deduped post-restore
+
+
+def test_checkpoint_custom_get_state_override(tmp_path):
+    """Pellets can override get_state/set_state directly (no attr list)."""
+    from repro.api import Flow, Session
+    from repro.core import PushPellet
+
+    class Counter(PushPellet):
+        sequential = True
+
+        def __init__(self):
+            self.count = 0
+
+        def compute(self, x):
+            self.count += 1
+            return (self.count, x)
+
+        def get_state(self):
+            return self.count
+
+        def set_state(self, snapshot):
+            self.count = snapshot
+
+    flow = Flow("cnt")
+    flow.pellet("c", Counter)
+    path = str(tmp_path / "floe.ckpt")
+    with flow.session() as s:
+        s.inject_many("c", ["a", "b"])
+        assert sorted(s.results()) == [(1, "a"), (2, "b")]
+        s.checkpoint(path)
+    with Session.restore(path, flow) as s2:
+        s2.inject("c", "c")
+        assert s2.results() == [(3, "c")]   # numbering continues

@@ -6,6 +6,7 @@ import time
 
 import pytest
 
+from conftest import wait_until
 from repro import (ClusterManager, ClusterSpec, Flow, FnPellet, PullPellet,
                    PushPellet, RecompositionError, Session, WindowPellet)
 from repro.checkpoint import read_floe_meta
@@ -423,25 +424,128 @@ def test_apply_noop_commits_nothing():
 
 
 def test_apply_invalid_diff_rolls_back_before_any_change():
-    class TwoOut(PushPellet):
-        out_ports = ("a", "b")
-
-        def compute(self, x):
-            return {"a": x}
-
     flow = _linear_flow()
     with flow.session() as s:
         v0 = s.describe()["topology_version"]
         nf = s.flow.derive()
-        nf.remove("work")
-        nf.pellet("work", TwoOut)           # same name, new port signature
-        nf.stages["src"] >> nf.stages["work"]
-        with pytest.raises(RecompositionError, match="port signature"):
+        # bypass .replace() validation: a factory producing a non-Pellet
+        # must be caught by apply itself, before any change
+        nf.stages["work"].factory = lambda: 42
+        with pytest.raises(RecompositionError, match="expected a Pellet"):
             s.apply(nf)
         assert s.describe()["topology_version"] == v0
         assert s.flow is not nf
         s.inject("src", 9)
         assert s.results() == [9]
+
+
+def test_apply_same_name_replacement_with_changed_ports():
+    """ROADMAP follow-up: a same-name stage whose factory changes the port
+    signature is committed as a replacement in ONE transaction — new
+    wiring validated against the fresh proto's ports, backlog on the
+    surviving input port carried over FIFO."""
+    class TwoOut(PushPellet):
+        out_ports = ("hi", "lo")
+
+        def compute(self, x):
+            return {"hi" if x >= 10 else "lo": x}
+
+    flow = Flow("rep")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    work = flow.pellet("work", lambda: Tag("v1"))
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: ("sunk", x)))
+    src >> work
+    work >> sink
+    with flow.session() as s:
+        s.inject("src", 1)
+        assert s.results() == [("sunk", ("v1", 1))]
+        v0 = s.describe()["topology_version"]
+        # park backlog in the stage being replaced: it must survive the
+        # swap and be processed by the NEW logic
+        s.coordinator.flakes["work"].pause()
+        s.inject("src", 3)
+        s.inject("src", 42)
+        assert wait_until(
+            lambda: s.coordinator.flakes["work"].queue_length() == 2)
+        nf = s.flow.derive()
+        nf.disconnect("src", "work")
+        nf.disconnect("work", "sink")
+        nf.stages["work"].replace(TwoOut)      # in=(in,), out=(hi, lo)
+        nf.stages["src"] >> nf.stages["work"]
+        nf.stages["work"]["hi"] >> nf.stages["sink"]
+        nf.stages["work"]["lo"] >> nf.stages["sink"]
+        summary = s.apply(nf)
+        assert summary["replaced"] == ["work"]
+        assert summary["swapped"] == []
+        assert s.describe()["topology_version"] == v0 + 1
+        out = s.results()
+        assert sorted(out) == [("sunk", 3), ("sunk", 42)]   # carried FIFO
+        s.inject("src", 7)
+        s.inject("src", 70)
+        assert sorted(s.results()) == [("sunk", 7), ("sunk", 70)]
+        assert not s.errors, s.errors[:3]
+
+
+def test_apply_replacement_preserves_landmark_alignment():
+    """A fan-in-2 stage replaced mid-alignment (one landmark copy already
+    swallowed) must complete the round when the second copy arrives —
+    alignment progress moves to the replacement like it does in
+    migration."""
+    class TwoOut(PushPellet):
+        out_ports = ("x", "y")
+
+        def compute(self, v):
+            return {"x": v}
+
+    flow = Flow("lmrep")
+    s1 = flow.pellet("s1", lambda: FnPellet(lambda x: x))
+    s2 = flow.pellet("s2", lambda: FnPellet(lambda x: x))
+    mid = flow.pellet("mid", lambda: FnPellet(lambda x: x))
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    s1 >> mid
+    s2 >> mid
+    mid >> sink
+    with flow.session() as s:
+        s.inject_landmark("s1", tag="w0")   # copy 1 of 2: swallowed at mid
+        assert s.quiesce()
+        assert s.coordinator.flakes["mid"]._lm_count == 1
+        nf = s.flow.derive()
+        nf.disconnect("mid", "sink")
+        nf.stages["mid"].replace(TwoOut)
+        nf.stages["mid"]["x"] >> nf.stages["sink"]
+        nf.stages["mid"]["y"] >> nf.stages["sink"]
+        assert s.apply(nf)["replaced"] == ["mid"]
+        s.inject_landmark("s2", tag="w0")   # copy 2 completes the round
+        out = s.drain()
+        assert sum(1 for m in out if m.landmark) == 1
+        assert not s.errors, s.errors[:3]
+
+
+def test_apply_replacement_rejects_stale_wiring():
+    """Edges still naming a port the replacement proto lacks abort the
+    whole transaction before any change."""
+    class TwoOut(PushPellet):
+        out_ports = ("hi", "lo")
+
+        def compute(self, x):
+            return {"hi": x}
+
+    flow = Flow("stale")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    work = flow.pellet("work", lambda: Tag("v1"))
+    sink = flow.pellet("sink", lambda: FnPellet(lambda x: x))
+    src >> work
+    work >> sink
+    with flow.session() as s:
+        v0 = s.describe()["topology_version"]
+        nf = s.flow.derive()
+        nf.stages["work"].replace(TwoOut)
+        # old edge work["out"] -> sink left in place: invalid for TwoOut
+        with pytest.raises(RecompositionError, match="OUTPUT port"):
+            s.apply(nf)
+        assert s.describe()["topology_version"] == v0
+        s.inject("src", 5)
+        assert s.results() == [("v1", 5)]   # old logic untouched
 
 
 def test_apply_swaps_pellet_and_retunes_batch():

@@ -182,3 +182,35 @@ def test_moe_ffn_pallas_matches_model_moe():
                              params["w_up"], params["w_down"], K, cap,
                              interpret=True)
     assert maxerr(got, want) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# cluster distance (array fast-path distance stage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,D,K", [
+    (8, 16, 4),       # tiny, aligned-ish
+    (37, 19, 5),      # every dim unaligned (pad paths)
+    (256, 32, 12),    # multi-tile batch
+])
+def test_cluster_distance_sweep(B, D, K):
+    x = rand(0, (B, D), jnp.float32)
+    c = rand(1, (K, D), jnp.float32)
+    got = ops.cluster_distance_op(x, c, block_b=64, interpret=True)
+    want = jnp.sum((x[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+    assert got.shape == (B, K)
+    assert maxerr(got, want) < 1e-3
+
+
+def test_cluster_distance_nearest_assignment_exact():
+    """argmin over the kernel's distances == brute-force nearest centroid."""
+    import numpy as np
+    rng = np.random.default_rng(3)
+    c = rng.normal(size=(6, 24)).astype(np.float32) * 2
+    x = c[rng.integers(6, size=100)] + \
+        rng.normal(size=(100, 24)).astype(np.float32) * 0.05
+    got = jnp.argmin(ops.cluster_distance_op(x, c, interpret=True), axis=1)
+    want = jnp.argmin(jnp.sum(
+        (jnp.asarray(x)[:, None, :] - jnp.asarray(c)[None, :, :]) ** 2,
+        axis=-1), axis=1)
+    assert (np.asarray(got) == np.asarray(want)).all()
