@@ -51,10 +51,12 @@ def _chain_graph(chain_len: int, cores: int) -> FloeGraph:
 
 def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
                batch_max: Optional[int] = None,
-               cluster_hosts: int = 0) -> float:
+               cluster_hosts: int = 0, telemetry: bool = True) -> float:
     """chain_len stages; ``cluster_hosts > 0`` runs the same topology on a
     loopback-transport cluster with stages spread across the hosts (every
     edge cross-host), so the delta vs 0 is pure cluster-runtime overhead.
+    ``telemetry=False`` disables the metrics plane — the on/off pair is
+    the instrumentation-overhead budget check.
     """
     g = _chain_graph(chain_len, cores)
     _set_batch(g, batch_max)
@@ -62,9 +64,9 @@ def _run_chain(n_msgs: int, chain_len: int, cores: int = 2,
         cluster = ClusterManager(ClusterSpec(
             hosts=cluster_hosts, cores_per_host=max(8, cores * chain_len),
             placement="spread"))
-        coord = Coordinator(g, cluster=cluster).start()
+        coord = Coordinator(g, cluster=cluster, telemetry=telemetry).start()
     else:
-        coord = Coordinator(g).start()
+        coord = Coordinator(g, telemetry=telemetry).start()
     try:
         t0 = time.time()
         coord.inject_many("p0", list(range(n_msgs)))
@@ -191,6 +193,33 @@ def run_array(n: int = 4000, repeats: int = 2
     return rows, results
 
 
+def run_telemetry(n: int = 4000, repeats: int = 2
+                  ) -> Tuple[List[Tuple[str, float, str]], dict]:
+    """Telemetry overhead suite: chain4 with the metrics plane on vs off.
+
+    The acceptance budget is 5%: per-dispatch weighted histogram
+    observes plus cached counter children must stay in the noise of the
+    data path.  Measured interleaved best-of-N (N >= 3) like the cluster
+    pair — single runs on a shared box swing past the delta under test.
+    """
+    tr = max(repeats, 3)
+    on_times, off_times = [], []
+    for _ in range(tr):
+        on_times.append(_run_chain(n, chain_len=4, telemetry=True))
+        off_times.append(_run_chain(n, chain_len=4, telemetry=False))
+    dt_on, dt_off = min(on_times), min(off_times)
+    overhead_pct = (dt_on - dt_off) / dt_off * 100.0
+    results = {"telemetry": {
+        "chain4_on_msgs_per_s": round(n / dt_on, 1),
+        "chain4_off_msgs_per_s": round(n / dt_off, 1),
+        "overhead_pct": round(overhead_pct, 2),
+        "budget_pct": 5.0}}
+    rows = [("engine_chain4_telemetry", dt_on * 1e6 / n,
+             f"{n / dt_on:,.0f} msg/s instrumented "
+             f"({overhead_pct:+.1f}% vs telemetry off, budget 5%)")]
+    return rows, results
+
+
 def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], dict]:
     rows = []
     results = {"n_msgs": n, "repeats": repeats}
@@ -219,6 +248,10 @@ def run(n: int = 4000, repeats: int = 2) -> Tuple[List[Tuple[str, float, str]], 
     a_rows, a_results = run_array(n, repeats)
     rows.extend(a_rows)
     results.update(a_results)
+    # telemetry plane: instrumented vs telemetry-off overhead budget
+    t_rows, t_results = run_telemetry(n, repeats)
+    rows.extend(t_rows)
+    results.update(t_results)
     cr = max(repeats, 3)
     in_times, cl_times = [], []
     for _ in range(cr):
@@ -274,11 +307,17 @@ def main() -> None:
                     help="trajectory JSON path ('' disables the record)")
     ap.add_argument("--array-only", action="store_true",
                     help="run only the array fast-path suite (CI smoke)")
+    ap.add_argument("--telemetry-only", action="store_true",
+                    help="run only the telemetry overhead suite (CI smoke)")
     args = ap.parse_args()
     if args.array_only:
         rows, results = run_array(n=args.n, repeats=args.repeats)
         results = {"n_msgs": args.n, "repeats": args.repeats,
                    "suite_subset": "array", **results}
+    elif args.telemetry_only:
+        rows, results = run_telemetry(n=args.n, repeats=args.repeats)
+        results = {"n_msgs": args.n, "repeats": args.repeats,
+                   "suite_subset": "telemetry", **results}
     else:
         rows, results = run(n=args.n, repeats=args.repeats)
     for name, us, derived in rows:

@@ -56,11 +56,15 @@ class AdaptationController:
         """One sampling round (also called by the loop; useful in tests)."""
         now = time.time() - self._t0
         # snapshot: Session.recompose may add/remove policies concurrently
+        tele = getattr(self.coordinator, "telemetry", None)
+        tele = tele if tele is not None and tele.enabled else None
         for name, strat in list(self.strategies.items()):
             flake = self.coordinator.flakes.get(name)
             if flake is None:
                 continue
             in_rate, _ = flake.stats.sample_rates()
+            pct = (tele.stage_percentiles(name) if tele is not None
+                   else {})
             obs = Observation(
                 t=now,
                 queue_length=flake.queue_length(),
@@ -68,7 +72,9 @@ class AdaptationController:
                 service_latency=flake.stats.avg_latency,
                 cores=flake.cores,
                 last_batch=flake.stats.last_batch,
-                avg_batch=flake.stats.avg_batch)
+                avg_batch=flake.stats.avg_batch,
+                **pct)
+            prev = flake.cores
             cores = max(0, strat.decide(obs))
             if self.cluster is not None:
                 # two-level actuation: intra-VM resize when the host can
@@ -78,6 +84,11 @@ class AdaptationController:
                     cores = self.cluster.actuate(name, cores)
             elif cores != flake.cores:
                 flake.set_cores(cores)
+            if tele is not None and cores != prev:
+                tele.events.emit(
+                    "elasticity", flake=name, cores_before=prev,
+                    cores_after=cores, queue=obs.queue_length,
+                    service_p95=obs.service_p95)
             self.history.append((now, name, obs, cores))
 
     def _loop(self) -> None:

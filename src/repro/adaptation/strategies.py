@@ -51,6 +51,15 @@ class Observation:
     #: stays low while the queue saturates.
     last_batch: int = 0
     avg_batch: float = 0.0
+    #: latency percentiles from the telemetry plane's per-stage service
+    #: and queue-wait histograms (0.0 when telemetry is off).  Percentile
+    #: visibility, not averages, is what makes scaling timely (Shukla &
+    #: Simmhan 1712.00605): an EWMA hides a bimodal tail that p99 shows
+    #: instantly, so tail-latency SLO strategies key off these.
+    service_p50: float = 0.0
+    service_p95: float = 0.0
+    service_p99: float = 0.0
+    queue_wait_p95: float = 0.0
 
 
 @dataclass

@@ -61,9 +61,17 @@ class Session:
                  channel_capacity: int = 100_000,
                  speculative_timeout: Optional[float] = None,
                  sample_interval: float = 0.25,
-                 drain_timeout: float = 60.0):
+                 drain_timeout: float = 60.0,
+                 telemetry: bool = True,
+                 trace_sample: float = 0.0):
         self.flow = flow
         self._containers = containers
+        #: ops plane: ``telemetry=False`` strips every instrumentation
+        #: hook (the overhead-guard configuration); ``trace_sample``
+        #: samples that fraction of injected messages into dataflow
+        #: traces (0.0 = tracing off, 1.0 = trace everything)
+        self._telemetry = bool(telemetry)
+        self._trace_sample = float(trace_sample)
         #: ``ClusterSpec`` (a manager is built per open) or a prebuilt
         #: ``ClusterManager`` — turns this into a multi-host session:
         #: placement annotations apply, edges may cross transports, and
@@ -95,7 +103,9 @@ class Session:
         coord = Coordinator(graph, containers=self._containers,
                             cluster=cluster,
                             channel_capacity=self._channel_capacity,
-                            speculative_timeout=self._speculative_timeout)
+                            speculative_timeout=self._speculative_timeout,
+                            telemetry=self._telemetry,
+                            trace_sample=self._trace_sample)
         coord.start()
         self._coord = coord
         strategies = {s.name: s.policy.build_strategy()
@@ -151,12 +161,17 @@ class Session:
 
     def inject_many(self, target: Target, payloads: Sequence[Any], *,
                     port: Optional[str] = None,
-                    keys: Optional[Sequence[Any]] = None) -> None:
-        """Batched injection (one enqueue round-trip for the whole list)."""
+                    keys: Optional[Sequence[Any]] = None,
+                    stacked: bool = False) -> None:
+        """Batched injection (one enqueue round-trip for the whole list).
+
+        ``stacked=True`` stacks the payloads into one ArrayBatch carrier
+        at the source — the columnar fast path starts at injection (ragged
+        payloads fall back to the per-message path transparently)."""
         name = _name(target)
         self.coordinator.inject_many(
             name, list(payloads), port=port or self._default_in(name),
-            keys=list(keys) if keys is not None else None)
+            keys=list(keys) if keys is not None else None, stacked=stacked)
 
     def inject_landmark(self, target: Target, tag: Any = None, *,
                         port: Optional[str] = None) -> None:
@@ -201,6 +216,42 @@ class Session:
 
     def stats(self) -> Dict[str, Dict[str, Any]]:
         return self.coordinator.stats()
+
+    # -- telemetry plane ------------------------------------------------------
+    @property
+    def telemetry(self):
+        """The session's :class:`~repro.telemetry.Telemetry` facade
+        (registry + event bus + tracer)."""
+        return self.coordinator.telemetry
+
+    def metrics(self) -> Dict[str, Dict[str, Any]]:
+        """Full metrics scrape as a nested dict: every registered family
+        (per-stage service-time / queue-wait histograms with p50/p95/p99,
+        stall/array-path/error counters) plus the live-engine collectors
+        (queue depths, cores, FlakeStats counters, host fleet)."""
+        return self.telemetry.metrics()
+
+    def prometheus(self) -> str:
+        """The same scrape rendered in Prometheus text exposition format."""
+        return self.telemetry.prometheus()
+
+    def events(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        """The unified structural event log (transactions, migrations,
+        elasticity actuations, errors, cluster ledger), totally ordered by
+        ``seq``; optionally filtered by ``kind``.  Use
+        ``session.telemetry.events.to_jsonl()`` for the JSONL rendering or
+        ``.subscribe(fn)`` for push delivery."""
+        return self.telemetry.events.records(kind)
+
+    def trace(self, trace_id: Optional[int] = None
+              ) -> Union[List[Dict[str, Any]], List[int]]:
+        """Dataflow trace query (requires ``trace_sample > 0``): with a
+        trace id, the hop-ordered spans (stage, host, rows, service time)
+        of that message's journey; with no argument, the known trace ids."""
+        tracer = self.telemetry.tracer
+        if trace_id is None:
+            return tracer.trace_ids()
+        return tracer.spans(trace_id)
 
     @property
     def cluster(self):

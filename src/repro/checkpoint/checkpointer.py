@@ -181,9 +181,12 @@ def checkpoint_floe_graph(coordinator, path: str, *,
     def snap_msg(m):
         # the 4th field keeps landmark/control/update flags across the
         # round-trip (a checkpointed flush marker must not replay as data);
-        # restore accepts the historical 3-tuples too
+        # the 5th carries message meta — lineage and trace contexts parked
+        # in a channel survive the restore.  restore accepts the
+        # historical 3- and 4-tuples too.
         return (m.payload, m.key, m.seq,
-                (m.landmark, m.update_landmark, m.control))
+                (m.landmark, m.update_landmark, m.control),
+                dict(m.meta) if m.meta else None)
 
     state: Dict[str, Any] = {}
     for name, flake in coordinator.flakes.items():
@@ -236,6 +239,8 @@ def restore_floe_graph(coordinator, path: str) -> None:
         m = Message(payload=payload, key=key)
         if len(rec) > 3:
             m.landmark, m.update_landmark, m.control = rec[3]
+        if len(rec) > 4 and rec[4]:
+            m.meta = dict(rec[4])
         return m
 
     with open(path, "rb") as f:

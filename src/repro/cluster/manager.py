@@ -404,6 +404,14 @@ class ClusterManager:
     def _event(self, kind: str, **detail) -> None:
         self.events.append(
             {"t": round(time.time() - self._t0, 6), "event": kind, **detail})
+        # mirror the ledger into the bound coordinator's event bus so one
+        # subscribable stream carries engine AND fleet events (kind is
+        # namespaced to keep the two vocabularies apart)
+        coord = self._coord
+        if coord is not None:
+            tele = getattr(coord, "telemetry", None)
+            if tele is not None and tele.enabled:
+                tele.events.emit("cluster", cluster_event=kind, **detail)
 
     def host_seconds(self) -> float:
         """Total billable VM time (the cost side of the elasticity ledger)."""

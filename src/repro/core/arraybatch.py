@@ -40,24 +40,33 @@ class ArrayBatch:
     in flight, since duplicate splits share a single instance.
     """
 
-    __slots__ = ("array", "seqs", "keys")
+    __slots__ = ("array", "seqs", "keys", "traces")
 
     def __init__(self, array: Any, *, seqs: Optional[Sequence[int]] = None,
-                 keys: Optional[Sequence[Any]] = None):
+                 keys: Optional[Sequence[Any]] = None,
+                 traces: Optional[Sequence[Any]] = None):
         n = int(array.shape[0]) if hasattr(array, "shape") else len(array)
         if seqs is not None and len(seqs) != n:
             raise ValueError(f"ArrayBatch: {len(seqs)} seqs for {n} rows")
         if keys is not None and len(keys) != n:
             raise ValueError(f"ArrayBatch: {len(keys)} keys for {n} rows")
+        if traces is not None and len(traces) != n:
+            raise ValueError(f"ArrayBatch: {len(traces)} traces for {n} rows")
         self.array = array
         self.seqs = list(seqs) if seqs is not None else None
         self.keys = list(keys) if keys is not None else None
+        #: per-row trace contexts (telemetry sampling): rides the carrier
+        #: so a traced message's context survives stacking, row slicing,
+        #: cross-host transport and checkpoints; None when nothing in the
+        #: batch is traced (the overwhelmingly common case)
+        self.traces = list(traces) if traces is not None else None
 
     # -- construction --------------------------------------------------------
     @classmethod
     def try_stack(cls, payloads: Sequence[Any], *,
                   seqs: Optional[Sequence[int]] = None,
-                  keys: Optional[Sequence[Any]] = None
+                  keys: Optional[Sequence[Any]] = None,
+                  traces: Optional[Sequence[Any]] = None
                   ) -> Optional["ArrayBatch"]:
         """Stack a list of per-message payloads into one array, or return
         ``None`` when the payloads are ragged / non-stackable (the engine
@@ -70,7 +79,7 @@ class ArrayBatch:
             return None
         if arr.dtype == object or arr.ndim == 0:
             return None
-        return cls(arr, seqs=seqs, keys=keys)
+        return cls(arr, seqs=seqs, keys=keys, traces=traces)
 
     # -- row access ----------------------------------------------------------
     def __len__(self) -> int:
@@ -83,7 +92,8 @@ class ArrayBatch:
         return ArrayBatch(
             self.array[idx],
             seqs=[self.seqs[i] for i in rows] if self.seqs else None,
-            keys=[self.keys[i] for i in rows] if self.keys else None)
+            keys=[self.keys[i] for i in rows] if self.keys else None,
+            traces=[self.traces[i] for i in rows] if self.traces else None)
 
     def to_messages(self, port: str = "out") -> List[Message]:
         """Unstack into ordinary per-row Messages (the degradation path:
@@ -95,6 +105,8 @@ class ArrayBatch:
                         port=port)
             if self.seqs:
                 m.meta["parent_seq"] = self.seqs[i]
+            if self.traces and self.traces[i] is not None:
+                m.meta["trace"] = self.traces[i]
             out.append(m)
         return out
 
@@ -104,12 +116,14 @@ class ArrayBatch:
         # pickling boundary (checkpoint file, cross-host transport) never
         # depends on the sender's device state
         return {"array": np.asarray(self.array),
-                "seqs": self.seqs, "keys": self.keys}
+                "seqs": self.seqs, "keys": self.keys,
+                "traces": self.traces}
 
     def __setstate__(self, state):
         self.array = state["array"]
         self.seqs = state["seqs"]
         self.keys = state["keys"]
+        self.traces = state.get("traces")   # pre-telemetry pickles lack it
 
     def __repr__(self) -> str:  # pragma: no cover
         shape = getattr(self.array, "shape", ("?",))

@@ -44,10 +44,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from .arraybatch import ArrayBatch
 from .graph import FloeGraph
-from .message import Message
+from .message import Message, _next_seq
 from .patterns import SPLITS, Split, make_split
 from .pellet import (BatchItemError, Drop, FnPellet, KeyedEmit, Pellet,
                      PullPellet, PushPellet, TuplePellet, WindowPellet)
+from ..telemetry import TRACE_KEY, Telemetry, trace_of
 
 ALPHA = 4  # pellet instances per core (§III)
 
@@ -179,19 +180,27 @@ class Channel:
     """
 
     def __init__(self, capacity: int = 100_000,
-                 on_put: Optional[Callable[[], None]] = None):
+                 on_put: Optional[Callable[[], None]] = None,
+                 on_stall: Optional[Callable[[], None]] = None):
         self._q: deque = deque()
         self._capacity = capacity
         self._rows = 0
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
         self._on_put = on_put
+        #: telemetry hook: called once per producer block on a full
+        #: channel (backpressure-stall counter), never on the fast path
+        self._on_stall = on_stall
 
     def put(self, msg: Message, timeout: Optional[float] = 30.0) -> None:
         with self._not_full:
-            if not self._not_full.wait_for(
-                    lambda: self._rows < self._capacity, timeout=timeout):
-                raise TimeoutError("channel full: backpressure timeout")
+            if self._rows >= self._capacity:
+                if self._on_stall:
+                    self._on_stall()
+                if not self._not_full.wait_for(
+                        lambda: self._rows < self._capacity,
+                        timeout=timeout):
+                    raise TimeoutError("channel full: backpressure timeout")
             self._q.append(msg)
             self._rows += _rows_of(msg)
         if self._on_put:
@@ -216,6 +225,8 @@ class Channel:
         i, n = 0, len(msgs)
         while i < n:
             with self._not_full:
+                if self._rows >= self._capacity and self._on_stall:
+                    self._on_stall()
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if not self._not_full.wait_for(
@@ -344,6 +355,20 @@ class FlakeStats:
         with self._lock:
             self.emitted += n
 
+    def reset_latency(self) -> None:
+        """Forget the latency EWMA (and batch-size EWMA) — used when a
+        flake moves to a different core budget (migration / replacement):
+        samples measured on the old host would poison post-move decisions
+        (a stale-fast EWMA over-batches a now-slow stage; a stale-slow one
+        keeps a now-fast stage trickling).  Zeroing also re-arms the
+        BOOTSTRAP_BATCH_MAX cold-start guard until fresh samples land.
+        Counters (arrived/processed/emitted) are cumulative facts about
+        the stage and deliberately survive."""
+        with self._lock:
+            self.avg_latency = 0.0
+            self.avg_batch = 0.0
+            self.last_batch = 0
+
     def sample_rates(self) -> Tuple[float, float]:
         """Return (input_rate, processed_rate) msgs/sec since last sample."""
         with self._lock:
@@ -380,10 +405,29 @@ class Flake:
         #: factory runs once per spawn
         self._proto = proto if proto is not None else factory()
         self.stats = FlakeStats()
+        #: telemetry handles, cached once so the hot path pays one method
+        #: call per dispatch (all None when telemetry is off — every
+        #: instrumentation site gates on a single attribute check)
+        tele = engine.telemetry if engine is not None else None
+        if tele is not None and tele.enabled:
+            self._tele: Optional[Telemetry] = tele
+            self._tele_service = tele.service_time.labels(stage=name)
+            self._tele_wait = tele.queue_wait.labels(stage=name)
+            self._tele_array = tele.array_hits.labels(stage=name)
+            self._tele_degrade = tele.degradations.labels(stage=name)
+            _stall = tele.stalls.labels(stage=name).inc
+        else:
+            self._tele = None
+            self._tele_service = None
+            self._tele_wait = None
+            self._tele_array = None
+            self._tele_degrade = None
+            _stall = None
         self._channel_capacity = channel_capacity
         self._wake = threading.Condition()
         self.inputs: Dict[str, Channel] = {
-            p: Channel(channel_capacity, on_put=self._notify)
+            p: Channel(channel_capacity, on_put=self._notify,
+                       on_stall=_stall)
             for p in self._proto.in_ports}
         #: routing: src_port -> (split, [(flake, dst_port)])
         self.routes: Dict[str, Tuple[Split, List[Tuple["Flake", str]]]] = {}
@@ -597,6 +641,8 @@ class Flake:
             # columnar fast path ends here: this flake cannot consume a
             # stacked batch (window/tuple/pull semantics, no opt-in, or
             # speculation) — degrade to the exact row-wise data path
+            if self._tele_degrade is not None:
+                self._tele_degrade.inc()
             self.enqueue_many(port, msg.payload.to_messages(port=msg.port))
             return
         if msg.landmark and self.in_degree > 1:
@@ -640,7 +686,11 @@ class Flake:
                 self.enqueue(port, m)
             return
         if not self.accepts_arrays:
-            msgs = _degrade_carriers(msgs)
+            degraded = _degrade_carriers(msgs)
+            if degraded is not msgs and self._tele_degrade is not None:
+                self._tele_degrade.inc(sum(1 for m in msgs
+                                           if _is_carrier(m)))
+            msgs = degraded
         rows = _rows_total(msgs)
         if self.engine is not None:
             self.engine._inflight_inc(rows)
@@ -700,6 +750,15 @@ class Flake:
             else:
                 self._submit(kind, item, credits)
 
+    def _observe_wait(self, head_ts: float, rows: int) -> None:
+        """Queue-wait histogram: time from enqueue to dispatch, observed
+        once per dispatch with the batch-head's wait weighted by row count
+        (``derive()`` stamps a fresh ``ts`` per hop, so ``msg.ts`` is the
+        enqueue time at this stage to within routing latency)."""
+        w = self._tele_wait
+        if w is not None and rows > 0:
+            w.observe(max(time.time() - head_ts, 0.0), n=rows)
+
     def _ready(self) -> bool:
         """Is a unit of work available right now?"""
         proto = self._proto
@@ -734,6 +793,8 @@ class Flake:
                         if m is not None:
                             self.inputs[p].unpop(m)  # locked restore
                     return None
+                self._observe_wait(
+                    min(m.ts for m in tup.values()), len(tup))
                 return ("tuple", tup, len(tup))
             return None
         if isinstance(proto, PullPellet):
@@ -741,6 +802,7 @@ class Flake:
             for c in self.inputs.values():
                 msgs.extend(c.pop_up_to())   # drain all, one lock round-trip
             if msgs:
+                self._observe_wait(msgs[0].ts, len(msgs))
                 return ("pull", msgs, len(msgs))
             return None
         if isinstance(proto, WindowPellet):
@@ -759,11 +821,13 @@ class Flake:
                             # flush partial window, then forward the landmark
                             # (credits include the landmark message itself)
                             self._requeue_landmark_after = m
+                            self._observe_wait(buf[0].ts, len(buf))
                             return ("window", buf, len(buf) + 1)
                         return ("landmark", m, 1)
                     self._window_buf.extend(got)
                     if len(self._window_buf) >= proto.window:
                         buf, self._window_buf = self._window_buf, []
+                        self._observe_wait(buf[0].ts, len(buf))
                         return ("window", buf, len(buf))
             return None
         # plain push pellet (interleaved merge across ports, Fig. 1, P6):
@@ -811,8 +875,10 @@ class Flake:
                 # the carrier whole — credits/stats counted in rows
                 rows = len(head.payload)
                 self.stats.on_dispatch(rows)
+                self._observe_wait(head.ts, rows)
                 return ("abatch", head, rows)
             self.stats.on_dispatch(len(batch))
+            self._observe_wait(head.ts, len(batch))
             if len(batch) == 1:
                 return ("msg", batch[0], 1)
             return ("batch", batch, len(batch))
@@ -986,7 +1052,10 @@ class Flake:
                     self.state = new_state
                 outputs = emitted
         except Exception as e:  # pellet error: count and drop (log upstream)
-            self.stats.on_process(time.time() - t0, n=credits)
+            lat = time.time() - t0
+            self.stats.on_process(lat, n=credits)
+            if self._tele_service is not None:
+                self._tele_service.observe(lat / max(credits, 1), n=credits)
             if self.engine is not None:
                 self.engine._record_error(self.name, e)
                 self.engine._inflight_dec(credits)
@@ -996,7 +1065,12 @@ class Flake:
                 if seq_for_dedup in self._done_seqs:
                     return  # another speculative copy already delivered
                 self._done_seqs.add(seq_for_dedup)
-        self.stats.on_process(time.time() - t0, n=credits)
+        t1 = time.time()
+        self.stats.on_process(t1 - t0, n=credits)
+        if self._tele_service is not None:
+            self._tele_service.observe((t1 - t0) / max(credits, 1),
+                                       n=credits)
+            self._record_spans(kind, item, t0, t1)
         try:
             self._route_many(outputs)
             self.stats.on_emit(_rows_total(outputs))
@@ -1015,6 +1089,43 @@ class Flake:
         finally:
             if self.engine is not None:
                 self.engine._inflight_dec(credits)
+
+    def _record_spans(self, kind: str, item, t0: float, t1: float) -> None:
+        """One span per distinct traced context in the dispatched work
+        (rows sharing a trace aggregate into a single span).  Only runs
+        when the tracer is sampling — checked by the caller via
+        ``tracer.active`` before paying the per-message meta scan."""
+        tele = self._tele
+        if tele is None or not tele.tracer.active:
+            return
+        ctxs: Dict[int, Tuple[dict, int]] = {}
+
+        def add(ctx) -> None:
+            if isinstance(ctx, dict):
+                tid = ctx.get("id")
+                if tid is not None:
+                    cur = ctxs.get(tid)
+                    ctxs[tid] = (ctx, cur[1] + 1 if cur else 1)
+
+        if kind == "msg":
+            add(item.meta.get(TRACE_KEY) if item.meta else None)
+        elif kind in ("batch", "pull", "window"):
+            for m in item:
+                add(m.meta.get(TRACE_KEY) if m.meta else None)
+        elif kind == "abatch":
+            if item.payload.traces:
+                for ctx in item.payload.traces:
+                    add(ctx)
+        elif kind == "tuple":
+            for m in item.values():
+                add(m.meta.get(TRACE_KEY) if m.meta else None)
+        if not ctxs:
+            return
+        host = (self.engine._host_label(self.name)
+                if self.engine is not None else "local")
+        for ctx, rows in ctxs.values():
+            tele.tracer.record_span(ctx, stage=self.name, host=host,
+                                    rows=rows, t_start=t0, t_end=t1)
 
     def _batch_outputs(self, proto: Pellet,
                        item: List[Message]) -> List[Message]:
@@ -1090,9 +1201,16 @@ class Flake:
         if isinstance(proto, FnPellet) and not proto.vectorized:
             return None
         if ab is None:
+            traces = None
+            if self._tele is not None and self._tele.tracer.active:
+                traces = [m.meta.get(TRACE_KEY) if m.meta else None
+                          for m in msgs]
+                if not any(t is not None for t in traces):
+                    traces = None
             ab = ArrayBatch.try_stack([m.payload for m in msgs],
                                       seqs=[m.seq for m in msgs],
-                                      keys=[m.key for m in msgs])
+                                      keys=[m.key for m in msgs],
+                                      traces=traces)
             if ab is None:
                 return None    # ragged / non-array payloads: fall back
         try:
@@ -1110,16 +1228,25 @@ class Flake:
                 res.seqs = ab.seqs
             if res.keys is None:
                 res.keys = ab.keys
+            if res.traces is None:
+                res.traces = ab.traces   # trace contexts ride the carrier
+            if self._tele_array is not None:
+                self._tele_array.inc(rows)
             return [Message(payload=res, port=proto.out_ports[0])]
         if hasattr(res, "ndim") and getattr(res, "ndim", 0) >= 1 \
                 and res.shape[0] == rows \
                 and getattr(res, "dtype", None) != object:
-            out = ArrayBatch(res, seqs=ab.seqs, keys=ab.keys)
+            out = ArrayBatch(res, seqs=ab.seqs, keys=ab.keys,
+                             traces=ab.traces)
+            if self._tele_array is not None:
+                self._tele_array.inc(rows)
             return [Message(payload=out, port=proto.out_ports[0])]
         if isinstance(res, (list, tuple)) and len(res) == rows:
             # classic per-row vectorized contract (KeyedEmit / Drop /
             # multi-port dicts): correct, but the columnar hand-off ends
             # here — rows are wrapped individually
+            if self._tele_array is not None:
+                self._tele_array.inc(rows)
             return self._wrap_results(ab.to_messages(), list(res))
         return self._degrade_rowwise(proto, ab, ValueError(
             f"compute_array returned {type(res).__name__}, expected an "
@@ -1380,9 +1507,22 @@ class Coordinator:
                  containers: Optional[List[Container]] = None,
                  cluster=None,
                  channel_capacity: int = 100_000,
-                 speculative_timeout: Optional[float] = None):
+                 speculative_timeout: Optional[float] = None,
+                 telemetry: Union[bool, Telemetry] = True,
+                 trace_sample: float = 0.0):
         graph.validate()
         self.graph = graph
+        #: the ops plane: metrics registry + event bus + tracer.  Always
+        #: present as an object (so call sites never branch on None), but
+        #: with ``telemetry=False`` every hot-path hook is inert — the
+        #: configuration the overhead guard benches against.
+        if isinstance(telemetry, Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = Telemetry(enabled=bool(telemetry),
+                                       trace_sample=trace_sample)
+        if self.telemetry.enabled:
+            self.telemetry.bind_engine_collector(self)
         #: cluster mode (``repro.cluster.ClusterManager``): hosts own the
         #: containers, placement/migration/transports are cluster-managed
         self.cluster = cluster
@@ -1437,6 +1577,16 @@ class Coordinator:
 
     def _record_error(self, flake: str, exc: Exception) -> None:
         self.errors.append((flake, exc))
+        if self.telemetry.enabled:
+            self.telemetry.errors.labels(stage=flake).inc()
+            self.telemetry.events.emit(
+                "error", flake=flake, error=repr(exc))
+
+    def _host_label(self, name: str) -> str:
+        """Host a flake currently runs on ('local' in single-process mode)."""
+        if self.cluster is not None:
+            return self.cluster._placement.get(name, "local")
+        return "local"
 
     def _collect_output(self, flake: str, msg: Message) -> None:
         if _is_carrier(msg):
@@ -1521,24 +1671,78 @@ class Coordinator:
     def inject(self, flake_name: str, payload: Any, *, port: str = "in",
                key: Any = None) -> None:
         """Pass inputs to the dataflow via the input port endpoint (§III)."""
+        msg = Message(payload=payload, key=key)
+        tele = self.telemetry
+        if tele.enabled:
+            tele.injected.inc()
+            if tele.tracer.active:
+                ctx = tele.tracer.maybe_trace()
+                if ctx is not None:
+                    msg.meta[TRACE_KEY] = ctx
         with self._inject_lock:
-            self.flakes[flake_name].enqueue(
-                port, Message(payload=payload, key=key))
+            self.flakes[flake_name].enqueue(port, msg)
 
     def inject_many(self, flake_name: str, payloads: List[Any], *,
                     port: str = "in",
-                    keys: Optional[List[Any]] = None) -> None:
+                    keys: Optional[List[Any]] = None,
+                    stacked: bool = False) -> None:
         """Source-side amortized injection: one batched enqueue for a whole
         payload list (inflight accounting, arrival stats and the channel
         append via ``Channel.put_many`` are each paid once per batch, not
         once per message).  ``keys`` optionally aligns a routing key per
         payload (for hash splits / dynamic port mapping).
+
+        With ``stacked=True`` the payloads are stacked into ONE ArrayBatch
+        carrier at the source — the columnar fast path starts at injection
+        instead of at the first array stage, so a vectorized head stage
+        gets a single ``compute_array`` call with no per-message wrapping
+        at all.  Ragged / non-stackable payloads fall back to the
+        per-message path transparently; a target that cannot consume
+        carriers degrades on enqueue as usual.  Rows are telemetry-counted
+        from birth either way.
         """
         if keys is not None and len(keys) != len(payloads):
             raise ValueError(
                 f"inject_many: {len(keys)} keys for {len(payloads)} payloads")
+        tele = self.telemetry
+        tracing = tele.enabled and tele.tracer.active
+        if tele.enabled:
+            tele.injected.inc(len(payloads))
+        if stacked and payloads:
+            traces = None
+            if tracing:
+                traces = [tele.tracer.maybe_trace() for _ in payloads]
+                if not any(t is not None for t in traces):
+                    traces = None
+            ab = ArrayBatch.try_stack(
+                payloads, seqs=[_next_seq() for _ in payloads],
+                keys=keys, traces=traces)
+            if ab is not None:
+                if tele.enabled:
+                    tele.stacked_injections.inc()
+                with self._inject_lock:
+                    self.flakes[flake_name].enqueue(
+                        port, Message(payload=ab))
+                return
+            # ragged payloads: fall through to the per-message path (any
+            # contexts handed out above are reused row-aligned below)
+            if traces is not None:
+                msgs = [Message(payload=p,
+                                key=keys[i] if keys is not None else None)
+                        for i, p in enumerate(payloads)]
+                for m, ctx in zip(msgs, traces):
+                    if ctx is not None:
+                        m.meta[TRACE_KEY] = ctx
+                with self._inject_lock:
+                    self.flakes[flake_name].enqueue_many(port, msgs)
+                return
         msgs = [Message(payload=p, key=keys[i] if keys is not None else None)
                 for i, p in enumerate(payloads)]
+        if tracing:
+            for m in msgs:
+                ctx = tele.tracer.maybe_trace()
+                if ctx is not None:
+                    m.meta[TRACE_KEY] = ctx
         with self._inject_lock:
             self.flakes[flake_name].enqueue_many(port, msgs)
 
@@ -1907,6 +2111,19 @@ class Coordinator:
                 "removed_backlog": {n: _rows_total(b) for n, b in
                                     (backlogs.items() if removed else ())},
             })
+            if changed and self.telemetry.enabled:
+                # a replaced stage spawns with fresh FlakeStats but its
+                # label-keyed histograms persist by name: reset them so
+                # post-replacement percentiles reflect the new logic only
+                for n in replace:
+                    self.telemetry.reset_stage(n)
+                self.telemetry.events.emit(
+                    "transaction",
+                    version=self.topology_version,
+                    swapped=sorted(swaps), scaled=dict(cores),
+                    added=sorted(added), removed=sorted(removed),
+                    replaced=sorted(replace),
+                    edges_added=e_added, edges_removed=e_removed)
         finally:
             for f in flakes:
                 f._drain_release()
@@ -2346,6 +2563,14 @@ class Coordinator:
             new.state = old.state              # pull-pellet explicit state
             new._window_buf = old._window_buf  # half-gathered count window
             new.stats = old.stats              # monitoring continuity
+            # ... but NOT latency continuity: the EWMA (and the latency
+            # histograms, keyed by stage name) were measured against the
+            # old host's core budget — carrying them poisons post-move
+            # batch sizing and elasticity decisions until enough fresh
+            # samples dilute them.  Counters survive; latency restarts.
+            new.stats.reset_latency()
+            if self.telemetry.enabled:
+                self.telemetry.reset_stage(name)
             new._done_seqs = old._done_seqs    # speculative dedup history
             new.batch_max = old.batch_max
             new._batch_explicit = old._batch_explicit
@@ -2371,6 +2596,10 @@ class Coordinator:
                 self.flakes[name] = new
                 self._container_of[name] = host.container
                 self.cluster._record_migration(name, host)
+            if self.telemetry.enabled:
+                self.telemetry.events.emit(
+                    "migration", flake=name, src=src_host.name,
+                    dst=host.name, cores=cores)
             # upstream routes re-point at the replacement (through the
             # transport where the edge is now cross-host)
             self.apply_wiring(self.graph)
@@ -2389,18 +2618,10 @@ class Coordinator:
 
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> Dict[str, Dict[str, Any]]:
-        placement = (self.cluster._placement if self.cluster is not None
-                     else {})
-        return {n: {"queue": f.queue_length(),
-                    "arrived": f.stats.arrived,
-                    "processed": f.stats.processed,
-                    "emitted": f.stats.emitted,
-                    "avg_latency": f.stats.avg_latency,
-                    "cores": f.cores,
-                    "batch_max": f.batch_max,
-                    "batch_array": f.batch_array,
-                    "last_batch": f.stats.last_batch,
-                    "avg_batch": f.stats.avg_batch,
-                    "host": placement.get(n),
-                    "version": f.version}
-                for n, f in self.flakes.items()}
+        """Per-stage runtime stats — one snapshot through the telemetry
+        plane (the single source of truth for observation surfaces:
+        ``session.stats()``, ``session.describe()``, the Prometheus
+        collector, and percentile-aware strategies all read the same
+        numbers).  With telemetry enabled each stage additionally carries
+        ``service_p50/p95/p99`` and ``queue_wait_p95``."""
+        return self.telemetry.stage_snapshot(self)

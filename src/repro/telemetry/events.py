@@ -1,0 +1,99 @@
+"""EventBus — one subscribable, ordered stream of structural events.
+
+The engine already produces structural events in three disconnected
+places: coordinator transactions (recomposition summaries), migrations,
+and the cluster ledger's private ``events`` list.  The bus unifies them:
+every event gets a monotonic sequence number under one lock (so ordering
+is total and testable even when transactions commit from concurrent
+threads), a wall-clock timestamp, a ``kind``, and a free-form detail
+dict.  Consumers either subscribe (push) or read the retained window
+(pull); ``to_jsonl``/``dump_jsonl`` give the structured log surface.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+
+class EventBus:
+    """Bounded, totally-ordered event log with push subscribers.
+
+    ``emit`` assigns the sequence number and appends under one lock —
+    subscribers are called OUTSIDE the lock (a slow subscriber must not
+    stall a transaction commit), in emit order per subscriber but with
+    no cross-subscriber guarantees.  Subscriber exceptions are swallowed:
+    observability must never take down the data plane.
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self._records: deque = deque(maxlen=maxlen)
+        self._subs: List[Callable[[Dict[str, Any]], None]] = []
+        self._seq = 0
+        self._lock = threading.Lock()
+
+    def emit(self, kind: str, **detail: Any) -> Dict[str, Any]:
+        rec = {"seq": 0, "ts": time.time(), "kind": kind, **detail}
+        with self._lock:
+            self._seq += 1
+            rec["seq"] = self._seq
+            self._records.append(rec)
+            subs = list(self._subs)
+        for fn in subs:
+            try:
+                fn(rec)
+            except Exception:
+                pass
+        return rec
+
+    def subscribe(self, fn: Callable[[Dict[str, Any]], None]) -> Callable[[], None]:
+        """Register a push subscriber; returns an unsubscribe callable."""
+        with self._lock:
+            self._subs.append(fn)
+
+        def _unsub() -> None:
+            with self._lock:
+                try:
+                    self._subs.remove(fn)
+                except ValueError:
+                    pass
+        return _unsub
+
+    def records(self, kind: Optional[str] = None,
+                since_seq: int = 0) -> List[Dict[str, Any]]:
+        """Retained events in seq order, optionally filtered by kind
+        and/or strictly after ``since_seq`` (incremental tailing)."""
+        with self._lock:
+            recs = list(self._records)
+        if since_seq:
+            recs = [r for r in recs if r["seq"] > since_seq]
+        if kind is not None:
+            recs = [r for r in recs if r["kind"] == kind]
+        return recs
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    @property
+    def last_seq(self) -> int:
+        with self._lock:
+            return self._seq
+
+    # -- structured log surface --------------------------------------------
+    def to_jsonl(self, kind: Optional[str] = None) -> str:
+        """Render retained events as JSON Lines (one object per line).
+        Non-JSON-native values (exceptions, arrays) degrade to ``str``."""
+        return "\n".join(
+            json.dumps(r, default=str, sort_keys=False)
+            for r in self.records(kind))
+
+    def dump_jsonl(self, path: str, kind: Optional[str] = None) -> int:
+        """Write the retained window to ``path``; returns the line count."""
+        recs = self.records(kind)
+        with open(path, "w") as f:
+            for r in recs:
+                f.write(json.dumps(r, default=str) + "\n")
+        return len(recs)

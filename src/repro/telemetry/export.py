@@ -1,0 +1,137 @@
+"""Prometheus text-format rendering of a MetricsRegistry scrape.
+
+Implements the text exposition format (version 0.0.4): ``# HELP`` /
+``# TYPE`` headers per family, ``name{label="v"} value`` samples, and for
+histograms the cumulative ``_bucket{le="..."}`` series plus ``_sum`` and
+``_count``.  No dependency on the prometheus_client package — the format
+is simple and the renderer doubles as the parse target for the smoke
+test in CI.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+from .registry import MetricsRegistry
+
+_ESCAPES = {"\\": "\\\\", "\n": "\\n", '"': '\\"'}
+
+
+def _escape(v: str) -> str:
+    return "".join(_ESCAPES.get(ch, ch) for ch in str(v))
+
+
+def _labelstr(labelkv, extra: Tuple[Tuple[str, str], ...] = ()) -> str:
+    items = tuple(labelkv) + tuple(extra)
+    if not items:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in items)
+    return "{" + body + "}"
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def render_prometheus(registry: MetricsRegistry) -> str:
+    """Scrape ``registry`` and render the Prometheus text format."""
+    # group samples by family name so HELP/TYPE are emitted once each
+    groups: "Dict[str, Dict[str, Any]]" = {}
+    order: List[str] = []
+    for name, help, kind, labelkv, value in registry.collect():
+        g = groups.get(name)
+        if g is None:
+            g = {"help": help, "kind": kind, "samples": []}
+            groups[name] = g
+            order.append(name)
+        g["samples"].append((labelkv, value))
+
+    lines: List[str] = []
+    for name in order:
+        g = groups[name]
+        kind = g["kind"]
+        prom_type = {"counter": "counter", "gauge": "gauge",
+                     "histogram": "histogram"}.get(kind, "untyped")
+        if g["help"]:
+            lines.append(f"# HELP {name} {_escape(g['help'])}")
+        lines.append(f"# TYPE {name} {prom_type}")
+        for labelkv, value in g["samples"]:
+            if kind == "histogram" and isinstance(value, dict):
+                cum = 0
+                bounds = value["bounds"]
+                for i, c in enumerate(value["buckets"]):
+                    cum += c
+                    le = _fmt(bounds[i]) if i < len(bounds) else "+Inf"
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{_labelstr(labelkv, (('le', le),))} {cum}")
+                lines.append(
+                    f"{name}_sum{_labelstr(labelkv)} {_fmt(value['sum'])}")
+                lines.append(
+                    f"{name}_count{_labelstr(labelkv)} {value['count']}")
+            else:
+                lines.append(f"{name}{_labelstr(labelkv)} {_fmt(value)}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_prometheus(text: str) -> Dict[str, List[Tuple[Dict[str, str], float]]]:
+    """Minimal parser for the text format (used by tests and the CI smoke
+    step to assert the rendering round-trips).  Returns
+    ``{series_name: [(labels, value), ...]}`` — histogram ``_bucket`` /
+    ``_sum`` / ``_count`` series appear under their suffixed names.
+    Raises ``ValueError`` on any malformed sample line.
+    """
+    out: Dict[str, List[Tuple[Dict[str, str], float]]] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        # name{labels} value   |   name value
+        if "{" in line:
+            name, rest = line.split("{", 1)
+            labelpart, _, valuepart = rest.rpartition("}")
+            labels: Dict[str, str] = {}
+            # split on '," ' boundaries, tolerating escaped quotes
+            part = labelpart
+            while part:
+                if "=" not in part:
+                    raise ValueError(f"line {lineno}: bad label in {line!r}")
+                k, part = part.split("=", 1)
+                if not part.startswith('"'):
+                    raise ValueError(f"line {lineno}: bad label value")
+                # find the closing unescaped quote
+                i, buf = 1, []
+                while i < len(part):
+                    ch = part[i]
+                    if ch == "\\" and i + 1 < len(part):
+                        buf.append(part[i + 1]); i += 2; continue
+                    if ch == '"':
+                        break
+                    buf.append(ch); i += 1
+                else:
+                    raise ValueError(f"line {lineno}: unterminated label")
+                labels[k.strip()] = "".join(buf)
+                part = part[i + 1:].lstrip(",").strip()
+            valstr = valuepart.strip()
+        else:
+            try:
+                name, valstr = line.rsplit(None, 1)
+            except ValueError:
+                raise ValueError(f"line {lineno}: malformed sample {line!r}")
+            labels = {}
+        name = name.strip()
+        try:
+            value = float(valstr)
+        except ValueError:
+            if valstr in ("+Inf", "-Inf", "NaN"):
+                value = float(valstr.replace("Inf", "inf").replace("NaN", "nan"))
+            else:
+                raise ValueError(f"line {lineno}: bad value {valstr!r}")
+        out.setdefault(name, []).append((labels, value))
+    return out

@@ -1,0 +1,323 @@
+"""Lock-cheap metrics registry: counters, gauges, fixed-bucket histograms.
+
+The ops plane underneath the MAPE loop (elasticity survey 1709.01363:
+monitoring is the foundation of every resource-elasticity decision).  The
+design goals, in order:
+
+* **hot-path cheap** — the engine observes per *dispatch* (an adaptive
+  micro-batch), never per message; one short lock round-trip per
+  histogram observation, plain GIL-atomic adds for counters.  Everything
+  expensive (percentiles, rendering, live-engine gauges) happens at
+  *scrape* time.
+* **percentile-ready** — histograms use fixed log-spaced buckets so
+  p50/p95/p99 queries are a cumulative walk + linear interpolation, the
+  latency-percentile visibility Shukla & Simmhan (1712.00605) show makes
+  scaling actions timely where EWMA averages lag.
+* **label sets** — every family carries ``(stage=…)`` / ``(host=…)`` /
+  arbitrary labels; children are created on demand and cached by the
+  caller, so the per-observation cost is one method call, no dict lookup.
+* **single source of truth at scrape** — engine state that is already
+  counted elsewhere (FlakeStats, Containers, the cluster ledger) is NOT
+  double-counted on the hot path: registered *collectors* read it live
+  when a snapshot or Prometheus scrape is taken.
+"""
+from __future__ import annotations
+
+import threading
+from bisect import bisect_left
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, \
+    Tuple
+
+#: default histogram buckets (seconds): log-ish spacing from 10 µs to 10 s,
+#: tuned for per-message service times and queue waits on this engine.
+#: The +Inf bucket is implicit (the trailing counts slot).
+LATENCY_BUCKETS = (
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4,
+    1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+LabelKV = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labelnames: Sequence[str], values: Dict[str, Any]) -> LabelKV:
+    if set(values) != set(labelnames):
+        raise ValueError(
+            f"labels {sorted(values)} do not match declared "
+            f"labelnames {sorted(labelnames)}")
+    return tuple((k, str(values[k])) for k in labelnames)
+
+
+class Counter:
+    """Monotonic counter child.  ``inc`` is a plain add — GIL-atomic
+    enough for monitoring (same contract as ``TransportStats``); exact
+    reconciliation tests go through histogram counts, which are locked."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value child (set-only; callback gauges are modeled
+    as collectors on the registry instead — see ``register_collector``)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Fixed-bucket histogram designed for p50/p95/p99 queries.
+
+    ``observe(value, n)`` files ``n`` logical observations of ``value``
+    under ONE lock round-trip — the engine calls it once per dispatched
+    micro-batch with ``n`` = rows, so histogram counts reconcile exactly
+    with the message census while the hot path stays amortized.
+    """
+
+    __slots__ = ("bounds", "counts", "total", "sum", "_lock")
+
+    def __init__(self, bounds: Sequence[float] = LATENCY_BUCKETS):
+        self.bounds = tuple(float(b) for b in bounds)
+        if list(self.bounds) != sorted(self.bounds):
+            raise ValueError("histogram bucket bounds must be sorted")
+        self.counts = [0] * (len(self.bounds) + 1)   # trailing slot = +Inf
+        self.total = 0
+        self.sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, value: float, n: int = 1) -> None:
+        idx = bisect_left(self.bounds, value)
+        with self._lock:
+            self.counts[idx] += n
+            self.total += n
+            self.sum += value * n
+
+    def reset(self) -> None:
+        """Zero every bucket (the migration/replace stats-reset path:
+        observations measured against a different core budget must not
+        poison post-move percentiles)."""
+        with self._lock:
+            self.counts = [0] * (len(self.bounds) + 1)
+            self.total = 0
+            self.sum = 0.0
+
+    def percentile(self, q: float) -> float:
+        """Estimate the q-th percentile (q in [0, 1]) by cumulative bucket
+        walk + linear interpolation inside the owning bucket.  Values in
+        the +Inf bucket report the last finite bound (a floor, like
+        Prometheus ``histogram_quantile``).  Returns 0.0 when empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"percentile q must be in [0, 1], got {q}")
+        with self._lock:
+            counts = list(self.counts)
+            total = self.total
+        if total == 0:
+            return 0.0
+        rank = q * total
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i] if i < len(self.bounds) \
+                    else self.bounds[-1]
+                if hi <= lo:
+                    return hi
+                frac = (rank - cum) / c
+                return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+            cum += c
+        return self.bounds[-1]
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            counts = list(self.counts)
+            total, s = self.total, self.sum
+        return {"count": total, "sum": round(s, 9),
+                "buckets": counts, "bounds": list(self.bounds),
+                "p50": self._pct_unlocked(counts, total, 0.50),
+                "p95": self._pct_unlocked(counts, total, 0.95),
+                "p99": self._pct_unlocked(counts, total, 0.99)}
+
+    def _pct_unlocked(self, counts: List[int], total: int, q: float
+                      ) -> float:
+        if total == 0:
+            return 0.0
+        rank = q * total
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i] if i < len(self.bounds) \
+                    else self.bounds[-1]
+                if hi <= lo:
+                    return hi
+                return lo + (hi - lo) * min(max((rank - cum) / c, 0.0), 1.0)
+            cum += c
+        return self.bounds[-1]
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class Family:
+    """One named metric with a fixed label-name set and per-label children.
+
+    ``labels(stage="p0")`` returns (creating on first use) the child for
+    that label combination — callers cache the child and pay one method
+    call per observation.  A label-less family has exactly one child,
+    reachable via the ``inc``/``set``/``observe`` conveniences.
+    """
+
+    def __init__(self, name: str, help: str, kind: str,
+                 labelnames: Sequence[str] = (),
+                 buckets: Sequence[float] = LATENCY_BUCKETS):
+        self.name = name
+        self.help = help
+        self.kind = kind
+        self.labelnames = tuple(labelnames)
+        self._buckets = tuple(buckets)
+        self._children: Dict[LabelKV, Any] = {}
+        self._lock = threading.Lock()
+
+    def _new_child(self):
+        if self.kind == "histogram":
+            return Histogram(self._buckets)
+        return _KINDS[self.kind]()
+
+    def labels(self, **values: Any):
+        key = _label_key(self.labelnames, values)
+        child = self._children.get(key)
+        if child is None:
+            with self._lock:
+                child = self._children.setdefault(key, self._new_child())
+        return child
+
+    def remove(self, **values: Any) -> None:
+        """Drop one child (retired stage/host) from future scrapes."""
+        with self._lock:
+            self._children.pop(_label_key(self.labelnames, values), None)
+
+    # -- label-less conveniences -------------------------------------------
+    def inc(self, n: int = 1) -> None:
+        self.labels().inc(n)
+
+    def set(self, v: float) -> None:
+        self.labels().set(v)
+
+    def observe(self, value: float, n: int = 1) -> None:
+        self.labels().observe(value, n)
+
+    def samples(self) -> List[Tuple[LabelKV, Any]]:
+        with self._lock:
+            return list(self._children.items())
+
+
+class MetricsRegistry:
+    """Registry of metric families plus scrape-time collectors.
+
+    A *collector* is a callable returning ``[(name, help, kind,
+    labelkv, value), ...]`` evaluated at ``collect()``/``snapshot()``
+    time — the mechanism for exposing live engine state (queue depths,
+    core allocations, FlakeStats counters, host fleet gauges) without
+    double-counting anything on the data path.
+    """
+
+    def __init__(self) -> None:
+        self._families: Dict[str, Family] = {}
+        self._collectors: List[Callable[[], List[Tuple]]] = []
+        self._lock = threading.Lock()
+
+    def _family(self, name: str, help: str, kind: str,
+                labelnames: Sequence[str],
+                buckets: Sequence[float] = LATENCY_BUCKETS) -> Family:
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = Family(name, help, kind, labelnames, buckets)
+                self._families[name] = fam
+            elif fam.kind != kind or fam.labelnames != tuple(labelnames):
+                raise ValueError(
+                    f"metric {name!r} re-registered with a different "
+                    f"kind/label set")
+            return fam
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Sequence[str] = ()) -> Family:
+        return self._family(name, help, "counter", labelnames)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Sequence[str] = ()) -> Family:
+        return self._family(name, help, "gauge", labelnames)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Sequence[float] = LATENCY_BUCKETS) -> Family:
+        return self._family(name, help, "histogram", labelnames, buckets)
+
+    def register_collector(self, fn: Callable[[], List[Tuple]]) -> None:
+        with self._lock:
+            self._collectors.append(fn)
+
+    def unregister_collector(self, fn: Callable[[], List[Tuple]]) -> None:
+        with self._lock:
+            try:
+                self._collectors.remove(fn)
+            except ValueError:
+                pass
+
+    # -- scrape ------------------------------------------------------------
+    def collect(self) -> Iterable[Tuple[str, str, str, LabelKV, Any]]:
+        """Flat sample stream: (name, help, kind, labelkv, value).
+
+        ``value`` is a number for counters/gauges and a histogram
+        ``snapshot()`` dict for histograms.  Registered families come
+        first (stable registration order), then collector output.
+        """
+        with self._lock:
+            families = list(self._families.values())
+            collectors = list(self._collectors)
+        out: List[Tuple[str, str, str, LabelKV, Any]] = []
+        for fam in families:
+            for key, child in fam.samples():
+                if fam.kind == "histogram":
+                    out.append((fam.name, fam.help, fam.kind, key,
+                                child.snapshot()))
+                else:
+                    out.append((fam.name, fam.help, fam.kind, key,
+                                child.value))
+        for fn in collectors:
+            try:
+                out.extend(fn())
+            except Exception:
+                # a scrape must never fail because one live-state reader
+                # raced a structural change; the next scrape self-heals
+                continue
+        return out
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """Nested dict view: {name: {"kind":…, "help":…, "samples":
+        [{"labels": {...}, "value"|"hist": …}, …]}}."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for name, help, kind, key, value in self.collect():
+            entry = out.setdefault(
+                name, {"kind": kind, "help": help, "samples": []})
+            sample: Dict[str, Any] = {"labels": dict(key)}
+            if kind == "histogram" and isinstance(value, dict):
+                sample["hist"] = value
+            else:
+                sample["value"] = value
+            entry["samples"].append(sample)
+        return out
