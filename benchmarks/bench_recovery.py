@@ -1,0 +1,198 @@
+"""Fault-tolerance benchmarks: seeded chaos recovery + fault-free overhead.
+
+Two suites, recorded in ``BENCH_recovery.json`` (append-style trajectory,
+one record per invocation):
+
+* **recovery** — the ISSUE acceptance chaos scenario: a 3-host cluster
+  (serializing transport) loses one VM mid-load while the wire drops 5%
+  of sends and one pellet crash-loops on poison rows.  Records
+  failure-declaration-to-recovered wall time, the end-to-end census
+  (lost MUST be 0; duplicates are the price of at-least-once and are
+  counted), dead-letter volume, and the chaos report.
+* **overhead** — the fault-free hot path: the bench_engine chain4
+  topology with the recovery plane ON (checkpoints + journal + heartbeat
+  supervisor armed, zero faults injected) vs OFF.  Budget: <= 3%.
+
+  PYTHONPATH=src python -m benchmarks.bench_recovery [--small] [--out ""]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro import (ChaosController, ClusterSpec, FaultPlan, FnPellet,
+                   Flow, RecoveryPolicy, census)
+from repro.faults import CheckpointPolicy
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_recovery.json")
+
+
+# -- suite 1: chaos recovery --------------------------------------------------
+
+def run_recovery(n: int = 3000, seed: int = 7) -> Tuple[List, Dict]:
+    flow = Flow("bench-recovery")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x)).place(host="h0")
+    mid = flow.pellet(
+        "mid", lambda: FnPellet(lambda x: x + 1_000_000)).place(host="h1")
+    snk = flow.pellet("snk", lambda: FnPellet(lambda x: x)).place(host="h2")
+    src >> mid
+    mid >> snk
+    policy = RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=0.25, freeze_timeout_s=10.0),
+        heartbeat_interval_s=0.05, suspicion_timeout_s=0.15,
+        max_restarts=2, restart_backoff_s=0.01, max_row_retries=1)
+    spec = ClusterSpec(hosts=3, cores_per_host=8, transport="serializing")
+    poison = {p for p in range(n) if p % 97 == 13}
+    t_wall0 = time.time()
+    with flow.session(cluster=spec, recovery=policy) as s:
+        plan = (FaultPlan(seed=seed)
+                .kill_host("h2", at_s=0.4)
+                .crash_pellet("src", match=lambda p: p % 97 == 13)
+                .flaky_wire(drop_rate=0.05, delay_s=0.0005, max_retries=8))
+        chaos = ChaosController(s.coordinator, plan).start()
+        for i in range(n):
+            s.inject(src, i)
+            time.sleep(0.0004)      # sustained load across the kill window
+        deadline = time.time() + 30
+        while time.time() < deadline and not s.faults.recoveries:
+            time.sleep(0.05)
+        out = s.results(timeout=120)
+        dead = {l.payload for l in s.dead_letters()}
+        expect = [i + 1_000_000 for i in range(n) if i not in poison]
+        c = census(expect, out)
+        rec = s.faults.last_recovery or {}
+        plane = s.faults.describe()
+        report = chaos.describe()
+        chaos.stop()
+    wall = time.time() - t_wall0
+    recovery_s = rec.get("duration_s", float("nan"))
+    dup_rate = c["duplicates"] / max(c["injected"], 1)
+    results = {
+        "n_rows": n, "seed": seed,
+        "recovery_s": recovery_s,
+        "lost": c["lost_count"],
+        "duplicates": c["duplicates"],
+        "dup_rate": round(dup_rate, 5),
+        "dead_lettered": len(dead),
+        "poison_rows": len(poison),
+        "quarantined": plane["quarantined"],
+        "replayed_rows": rec.get("replayed_rows"),
+        "discarded_rows": rec.get("discarded_rows"),
+        "checkpoint_epochs": plane["checkpoints"],
+        "wire": report["wire"],
+        "kills": report["kills"],
+        "wall_s": round(wall, 3),
+    }
+    rows = [
+        ("recovery_time", recovery_s * 1e6,
+         f"host kill -> recovered; {rec.get('replayed_rows')} rows replayed"),
+        ("recovery_census", 0.0,
+         f"lost {c['lost_count']} dup {c['duplicates']} "
+         f"({dup_rate:.2%}) dead {len(dead)}/{len(poison)}"),
+    ]
+    if c["lost_count"] != 0:
+        raise AssertionError(
+            f"recovery lost {c['lost_count']} rows: {c['lost'][:10]}")
+    if not (dead and dead <= poison):
+        raise AssertionError(f"dead letters {sorted(dead)[:5]} do not match "
+                             f"the poison set")
+    return rows, results
+
+
+# -- suite 2: fault-free overhead ---------------------------------------------
+
+def _chain4(n: int, recovery: Optional[RecoveryPolicy]) -> float:
+    flow = Flow("bench-plane")
+    prev = None
+    for i in range(4):
+        stage = flow.pellet(f"p{i}", lambda: FnPellet(lambda x: x + 1),
+                            cores=2)
+        if prev is not None:
+            prev >> stage
+        prev = stage
+    with flow.session(recovery=recovery, telemetry=False) as s:
+        t0 = time.time()
+        for i in range(n):
+            s.inject("p0", i)
+        assert s.coordinator.run_until_quiescent(timeout=120)
+        dt = time.time() - t0
+        assert len(s.coordinator.drain_outputs()) == n
+    return dt
+
+
+def run_overhead(n: int = 4000, repeats: int = 2) -> Tuple[List, Dict]:
+    policy = RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=1.0), journal=True)
+    base = min(_chain4(n, None) for _ in range(repeats))
+    plane = min(_chain4(n, policy) for _ in range(repeats))
+    overhead = plane / base - 1.0
+    results = {
+        "n_msgs": n, "repeats": repeats,
+        "chain4_base_s": round(base, 4),
+        "chain4_plane_s": round(plane, 4),
+        "plane_overhead": round(overhead, 4),
+        "budget": 0.03,
+    }
+    rows = [
+        ("chain4_plane_off", base * 1e6 / n, f"{n / base:.0f} msg/s"),
+        ("chain4_plane_on", plane * 1e6 / n,
+         f"{n / plane:.0f} msg/s; overhead {overhead:+.2%} (budget 3%)"),
+    ]
+    return rows, results
+
+
+def run(n_recovery: int = 3000, n_overhead: int = 4000,
+        repeats: int = 2) -> Tuple[List, Dict]:
+    rows, rec = run_recovery(n=n_recovery)
+    rows2, ovh = run_overhead(n=n_overhead, repeats=repeats)
+    return rows + rows2, {"recovery": rec, "overhead": ovh}
+
+
+def record(results: dict, path: str = _JSON_PATH) -> None:
+    """Append one trajectory record to BENCH_recovery.json."""
+    history: List[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = [history]
+        except (OSError, ValueError):
+            history = []
+    history.append({"ts": time.time(),
+                    "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                    "suite": "recovery", **results})
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=3000,
+                    help="rows through the chaos scenario")
+    ap.add_argument("--n-overhead", type=int, default=4000,
+                    help="messages per overhead chain4 run")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="best-of-N repeats for the overhead pair")
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke sizing (fewer rows, 1 repeat)")
+    ap.add_argument("--out", default=_JSON_PATH,
+                    help="trajectory JSON path ('' disables the record)")
+    args = ap.parse_args()
+    n, n_ovh, repeats = args.n, args.n_overhead, args.repeats
+    if args.small:
+        n, n_ovh, repeats = 1200, 2000, 1
+    rows, results = run(n_recovery=n, n_overhead=n_ovh, repeats=repeats)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        record(results, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import time
 import traceback
 
 SUITES = ("adaptation", "pipeline", "clustering", "engine", "kernels",
-          "train", "roofline")
+          "recovery", "train", "roofline")
 
 
 def _train_suite():
@@ -53,6 +53,10 @@ def main() -> None:
             elif suite == "kernels":
                 from . import bench_kernels as m
                 r, _ = m.run()
+            elif suite == "recovery":
+                from . import bench_recovery as m
+                r, extras = m.run()
+                m.record(extras)   # append to BENCH_recovery.json
             elif suite == "train":
                 r, _ = _train_suite()
             elif suite == "roofline":

@@ -34,6 +34,10 @@ from .core import (ArrayBatch, Drop, FnMapper, FnPellet, FnReducer,
                    PushPellet, Reducer, TuplePellet, WindowPellet)
 # Legacy engine surface (supported; the builder compiles to it)
 from .core import Coordinator, FloeGraph
+# Fault-tolerance plane (recovery policies, chaos harness, DLQ)
+from .checkpoint import CheckpointCorruptError
+from .faults import (ChaosController, CheckpointPolicy, DeadLetter,
+                     FaultPlan, PelletCrashError, RecoveryPolicy, census)
 
 __all__ = [
     # session API
@@ -49,4 +53,8 @@ __all__ = [
     "KeyedEmit", "Drop", "Message", "ArrayBatch",
     # legacy engine surface
     "FloeGraph", "Coordinator",
+    # fault tolerance
+    "RecoveryPolicy", "CheckpointPolicy", "PelletCrashError",
+    "FaultPlan", "ChaosController", "DeadLetter", "census",
+    "CheckpointCorruptError",
 ]

@@ -63,9 +63,15 @@ class Session:
                  sample_interval: float = 0.25,
                  drain_timeout: float = 60.0,
                  telemetry: bool = True,
-                 trace_sample: float = 0.0):
+                 trace_sample: float = 0.0,
+                 recovery=None):
         self.flow = flow
         self._containers = containers
+        #: fault-tolerance plane: a ``repro.faults.RecoveryPolicy`` turns
+        #: on heartbeat failure detection, periodic background checkpoints
+        #: with a source journal, automatic host recovery (at-least-once),
+        #: pellet crash restarts with quarantine, and a dead-letter queue
+        self._recovery = recovery
         #: ops plane: ``telemetry=False`` strips every instrumentation
         #: hook (the overhead-guard configuration); ``trace_sample``
         #: samples that fraction of injected messages into dataflow
@@ -105,7 +111,8 @@ class Session:
                             channel_capacity=self._channel_capacity,
                             speculative_timeout=self._speculative_timeout,
                             telemetry=self._telemetry,
-                            trace_sample=self._trace_sample)
+                            trace_sample=self._trace_sample,
+                            recovery=self._recovery)
         coord.start()
         self._coord = coord
         strategies = {s.name: s.policy.build_strategy()
@@ -253,6 +260,25 @@ class Session:
             return tracer.trace_ids()
         return tracer.spans(trace_id)
 
+    # -- fault-tolerance plane -----------------------------------------------
+    @property
+    def faults(self):
+        """The session's :class:`~repro.faults.FaultPlane` (None unless
+        opened with ``recovery=RecoveryPolicy(...)``)."""
+        return self.coordinator._faults
+
+    def dead_letters(self, drain: bool = False):
+        """Rows that exhausted their retry budget (poison pills), as
+        :class:`~repro.faults.DeadLetter` records — inspect, re-inject, or
+        drop.  ``drain=True`` also clears the queue."""
+        plane = self.faults
+        if plane is None:
+            raise SessionStateError(
+                "no fault plane; open the session with "
+                "recovery=RecoveryPolicy(...)")
+        return (plane.dead_letters.drain() if drain
+                else plane.dead_letters.items())
+
     @property
     def cluster(self):
         """The session's ``ClusterManager`` (None in single-process mode)."""
@@ -294,6 +320,8 @@ class Session:
                       for e in coord.graph.edges],
             "cluster": (self.cluster.describe()
                         if self.cluster is not None else None),
+            "faults": (coord._faults.describe()
+                       if coord._faults is not None else None),
         }
 
     @property

@@ -1,6 +1,8 @@
-from .checkpointer import (AsyncCheckpointer, checkpoint_floe_graph,
-                           latest_step, read_floe_meta, restore,
-                           restore_floe_graph, save)
+from .checkpointer import (AsyncCheckpointer, CheckpointCorruptError,
+                           checkpoint_floe_graph, latest_step,
+                           read_floe_meta, restore, restore_floe_graph,
+                           save)
 
-__all__ = ["AsyncCheckpointer", "checkpoint_floe_graph", "latest_step",
-           "read_floe_meta", "restore", "restore_floe_graph", "save"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruptError",
+           "checkpoint_floe_graph", "latest_step", "read_floe_meta",
+           "restore", "restore_floe_graph", "save"]

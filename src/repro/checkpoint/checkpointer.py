@@ -18,6 +18,7 @@ available then" — listed as future work there; implemented here:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pickle
@@ -28,6 +29,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A floe checkpoint failed verification (truncated file, checksum
+    mismatch, or unreadable payload).  Raised instead of unpickling
+    garbage so a recovery path can fall back to an older checkpoint."""
 
 
 def _flatten(tree: Any) -> Tuple[List[np.ndarray], List[str], Any]:
@@ -166,6 +173,93 @@ class AsyncCheckpointer:
 # Floe-engine checkpointing (pellet state objects + pending messages)
 # ---------------------------------------------------------------------------
 
+#: engine-checkpoint container format: MAGIC | 4-byte big-endian header
+#: length | JSON header {format, sha256, n_bytes, time} | pickle blob.
+#: The header checksum turns a torn/truncated write into a loud
+#: CheckpointCorruptError instead of an unpickling crash (or worse,
+#: silently restoring half a graph).
+_FLOE_MAGIC = b"FLOECKPT"
+_FLOE_FORMAT = "floe-ckpt-v1"
+
+
+def _write_floe_state(path: str, state: Dict[str, Any]) -> None:
+    """Atomic checkpoint write: temp file + fsync + ``os.replace``, with
+    a sha256 manifest over the payload.  A reader never observes a
+    partially-written file at ``path``."""
+    blob = pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+    header = json.dumps({
+        "format": _FLOE_FORMAT,
+        "sha256": hashlib.sha256(blob).hexdigest(),
+        "n_bytes": len(blob),
+        "time": time.time(),
+    }).encode("utf-8")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(_FLOE_MAGIC)
+        f.write(len(header).to_bytes(4, "big"))
+        f.write(header)
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _read_floe_state(path: str) -> Dict[str, Any]:
+    """Read + verify an engine checkpoint; raises CheckpointCorruptError
+    on any damage.  Pre-manifest checkpoints (raw pickle) still load."""
+    with open(path, "rb") as f:
+        magic = f.read(len(_FLOE_MAGIC))
+        if magic != _FLOE_MAGIC:
+            # legacy raw-pickle checkpoint from before the manifest format
+            f.seek(0)
+            try:
+                state = pickle.load(f)
+            except Exception as e:
+                raise CheckpointCorruptError(
+                    f"checkpoint {path!r}: not a floe checkpoint and "
+                    f"not a readable legacy pickle ({e!r})") from e
+            if not isinstance(state, dict):
+                raise CheckpointCorruptError(
+                    f"checkpoint {path!r}: legacy payload is "
+                    f"{type(state).__name__}, expected dict")
+            return state
+        raw_len = f.read(4)
+        if len(raw_len) != 4:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r}: truncated before header length")
+        hlen = int.from_bytes(raw_len, "big")
+        raw_header = f.read(hlen)
+        if len(raw_header) != hlen:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r}: truncated inside header")
+        try:
+            header = json.loads(raw_header.decode("utf-8"))
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r}: unreadable header ({e!r})") from e
+        blob = f.read()
+    n_expected = header.get("n_bytes")
+    if len(blob) != n_expected:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r}: truncated payload "
+            f"({len(blob)} of {n_expected} bytes)")
+    if hashlib.sha256(blob).hexdigest() != header.get("sha256"):
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r}: payload checksum mismatch")
+    try:
+        state = pickle.loads(blob)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r}: payload failed to unpickle "
+            f"({e!r})") from e
+    if not isinstance(state, dict):
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r}: payload is {type(state).__name__}, "
+            f"expected dict")
+    return state
+
+
 def checkpoint_floe_graph(coordinator, path: str, *,
                           extra: Optional[Dict[str, Any]] = None) -> None:
     """Persist every flake's state object and pending input messages.
@@ -210,15 +304,12 @@ def checkpoint_floe_graph(coordinator, path: str, *,
                        "version": flake.version, "cores": flake.cores}
     if extra:
         state["__meta__"] = dict(extra)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "wb") as f:
-        pickle.dump(state, f)
+    _write_floe_state(path, state)
 
 
 def read_floe_meta(path: str) -> Dict[str, Any]:
     """Session metadata embedded in a checkpoint ({} for old files)."""
-    with open(path, "rb") as f:
-        state = pickle.load(f)
+    state = _read_floe_state(path)
     meta = state.get("__meta__", {})
     return meta if isinstance(meta, dict) else {}
 
@@ -243,8 +334,7 @@ def restore_floe_graph(coordinator, path: str) -> None:
             m.meta = dict(rec[4])
         return m
 
-    with open(path, "rb") as f:
-        state = pickle.load(f)
+    state = _read_floe_state(path)
     for name, snap in state.items():
         flake = coordinator.flakes.get(name)
         if flake is None or not isinstance(snap, dict) \

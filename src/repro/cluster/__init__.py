@@ -10,9 +10,10 @@ cost.  Entry point: ``flow.session(cluster=ClusterSpec(...))``.
 from .host import ClusterError, ClusterSpec, Host
 from .manager import ClusterManager
 from .transport import (LoopbackTransport, RemoteFlake, SerializingTransport,
-                        Transport)
+                        TransientTransportError, Transport, TransportError)
 
 __all__ = [
     "ClusterError", "ClusterSpec", "Host", "ClusterManager",
     "Transport", "LoopbackTransport", "SerializingTransport", "RemoteFlake",
+    "TransportError", "TransientTransportError",
 ]

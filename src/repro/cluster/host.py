@@ -92,22 +92,42 @@ class Host:
         self.acquired_at = time.time()
         self.ready_at = self.acquired_at + (self.spinup_s if elastic else 0.0)
         self.released_at: Optional[float] = None
+        #: simulated VM crash (chaos harness / failure detection): a failed
+        #: host stops answering ``ping()`` and is excluded from placement,
+        #: but keeps its container so recovery can audit + reclaim cores
+        self.failed_at: Optional[float] = None
 
     # -- lifecycle ----------------------------------------------------------
     @property
     def is_ready(self) -> bool:
-        return self.released_at is None and time.time() >= self.ready_at
+        return (self.released_at is None and self.failed_at is None
+                and time.time() >= self.ready_at)
 
     @property
     def state(self) -> str:
         if self.released_at is not None:
             return "released"
+        if self.failed_at is not None:
+            return "failed"
         return "ready" if self.is_ready else "provisioning"
+
+    def fail(self) -> None:
+        """Mark the VM as crashed (it stops answering heartbeats)."""
+        if self.failed_at is None:
+            self.failed_at = time.time()
+
+    def ping(self) -> bool:
+        """Liveness probe: does the VM answer a heartbeat right now?
+        A provisioning host answers (it exists, it is just not ready);
+        failed and released hosts do not."""
+        return self.released_at is None and self.failed_at is None
 
     def wait_ready(self, timeout: Optional[float] = None) -> None:
         """Block until the VM finishes spinning up (acquisition latency)."""
         if self.released_at is not None:
             raise ClusterError(f"host {self.name!r} was released")
+        if self.failed_at is not None:
+            raise ClusterError(f"host {self.name!r} has failed")
         remaining = self.ready_at - time.time()
         if remaining <= 0:
             return

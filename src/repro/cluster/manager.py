@@ -113,6 +113,25 @@ class ClusterManager:
             self._event("release", host=host.name,
                         uptime_s=round(host.uptime(), 6))
 
+    def fail_host(self, ref: HostRef) -> Host:
+        """Mark one VM as crashed (chaos/simulation entry point).
+
+        Placement bookkeeping is deliberately untouched: the failure
+        detector observes the dead heartbeat and drives recovery
+        (unplace dead flakes, respawn on survivors, then release the
+        carcass).  Returns the failed host.
+        """
+        with self._lock:
+            host = self.host(ref)
+            if host.released_at is not None:
+                raise ClusterError(
+                    f"cannot fail released host {host.name!r}")
+            host.fail()
+            self._event("host_failed", host=host.name,
+                        flakes=sorted(f for f, h in self._placement.items()
+                                      if h == host.name))
+            return host
+
     # -- placement ---------------------------------------------------------
     def bind(self, coordinator) -> "ClusterManager":
         with self._lock:
@@ -196,6 +215,9 @@ class ClusterManager:
                 if chosen.released_at is not None:
                     raise ClusterError(
                         f"cannot place on released host {chosen.name!r}")
+                if chosen.failed_at is not None:
+                    raise ClusterError(
+                        f"cannot place on failed host {chosen.name!r}")
             else:
                 ready = [h for h in self.active_hosts() if h.is_ready]
                 if not ready:

@@ -25,9 +25,21 @@ from __future__ import annotations
 import dataclasses
 import pickle
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.message import Message
+from ..telemetry import TRACE_KEY
+
+
+class TransportError(RuntimeError):
+    """Permanent transport failure (retries exhausted / non-transient)."""
+
+
+class TransientTransportError(TransportError):
+    """A retriable send failure — an injected drop, a flaky wire, or a
+    per-send timeout.  ``SerializingTransport`` absorbs these with
+    retry-with-backoff; only exhausted retries surface as the permanent
+    :class:`TransportError`."""
 
 
 class TransportStats:
@@ -42,6 +54,9 @@ class TransportStats:
         self.batches = 0
         self.bytes = 0
         self.modeled_delay_s = 0.0
+        self.retries = 0
+        self.timeouts = 0
+        self.duplicated = 0
 
     def record(self, n_msgs: int, n_bytes: int, delay_s: float) -> None:
         self.messages += n_msgs
@@ -52,7 +67,9 @@ class TransportStats:
     def describe(self) -> Dict[str, Any]:
         return {"messages": self.messages, "batches": self.batches,
                 "bytes": self.bytes,
-                "modeled_delay_s": round(self.modeled_delay_s, 6)}
+                "modeled_delay_s": round(self.modeled_delay_s, 6),
+                "retries": self.retries, "timeouts": self.timeouts,
+                "duplicated": self.duplicated}
 
 
 class Transport:
@@ -94,12 +111,30 @@ class SerializingTransport(Transport):
     kind = "serializing"
 
     def __init__(self, per_msg_delay_s: float = 0.0,
-                 per_byte_delay_s: float = 0.0):
+                 per_byte_delay_s: float = 0.0, *,
+                 max_retries: int = 3,
+                 retry_backoff_s: float = 0.02,
+                 send_timeout_s: Optional[float] = None):
         super().__init__()
         self.per_msg_delay_s = max(0.0, float(per_msg_delay_s))
         self.per_byte_delay_s = max(0.0, float(per_byte_delay_s))
+        #: transient-failure policy: a send that raises
+        #: TransientTransportError is retried up to ``max_retries`` times
+        #: with exponential backoff; a send whose modeled + injected delay
+        #: exceeds ``send_timeout_s`` counts as a transient timeout.
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = max(0.0, float(retry_backoff_s))
+        self.send_timeout_s = send_timeout_s
+        #: seeded chaos hook (``repro.faults.FaultyWire``): an object with
+        #: ``before_send(msgs) -> (msgs, extra_delay_s)`` — which may
+        #: raise TransientTransportError to drop the attempt — and
+        #: ``should_duplicate() -> bool`` for at-least-once double
+        #: delivery after a success.  ``None`` (the default) costs one
+        #: attribute check per batch.
+        self.fault_injector = None
 
     def deliver(self, flake, port: str, msgs: List[Message]) -> None:
+        t_wire0 = time.time()
         total = 0
         out: List[Message] = []
         for m in msgs:
@@ -110,10 +145,78 @@ class SerializingTransport(Transport):
             out.append(dataclasses.replace(m, payload=pickle.loads(blob)))
         delay = self.per_msg_delay_s * len(msgs) + \
             self.per_byte_delay_s * total
-        if delay > 0.0:
-            time.sleep(delay)
-        self.stats.record(len(msgs), total, delay)
-        flake.enqueue_many(port, out)
+        inj = self.fault_injector
+        batch = out
+        attempt = 0
+        while True:
+            try:
+                batch, extra = out, 0.0
+                if inj is not None:
+                    batch, extra = inj.before_send(out)
+                    if self.send_timeout_s is not None and \
+                            delay + extra > self.send_timeout_s:
+                        self.stats.timeouts += 1
+                        raise TransientTransportError(
+                            f"send of {len(batch)} msgs exceeded "
+                            f"{self.send_timeout_s}s timeout")
+                if delay + extra > 0.0:
+                    time.sleep(delay + extra)
+                flake.enqueue_many(port, batch)
+                self.stats.record(len(batch), total, delay + extra)
+                break
+            except TransientTransportError as e:
+                if attempt >= self.max_retries:
+                    raise TransportError(
+                        f"delivery to {getattr(flake, 'name', flake)!r} "
+                        f"failed after {attempt + 1} attempts: {e}") from e
+                self.stats.retries += 1
+                if self.retry_backoff_s > 0.0:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+        if inj is not None and inj.should_duplicate():
+            # duplicate delivery AFTER a success: the at-least-once wire.
+            # Distinct Message objects, same seq/payload — downstream
+            # census counts them as duplicates, never as losses.
+            dup = [dataclasses.replace(m) for m in batch]
+            flake.enqueue_many(port, dup)
+            self.stats.duplicated += len(dup)
+            self.stats.record(len(dup), 0, 0.0)
+        self._record_wire_spans(flake, batch, t_wire0, time.time())
+
+    def _record_wire_spans(self, flake, msgs: List[Message],
+                           t0: float, t1: float) -> None:
+        """One ``wire:<dst>`` span per distinct traced context in the
+        batch, so cross-host transport time (including retries/backoff
+        during recovery) shows up in ``session.trace()`` between the
+        sender's and receiver's compute spans."""
+        tele = getattr(flake, "_tele", None)
+        if tele is None or not tele.tracer.active:
+            return
+        ctxs: Dict[int, Tuple[dict, int]] = {}
+
+        def add(ctx) -> None:
+            if isinstance(ctx, dict):
+                tid = ctx.get("id")
+                if tid is not None:
+                    cur = ctxs.get(tid)
+                    ctxs[tid] = (ctx, cur[1] + 1 if cur else 1)
+
+        for m in msgs:
+            traces = getattr(m.payload, "traces", None)
+            if traces:            # ArrayBatch carrier with trace sidecar
+                for ctx in traces:
+                    add(ctx)
+            else:
+                add(m.meta.get(TRACE_KEY) if m.meta else None)
+        if not ctxs:
+            return
+        engine = getattr(flake, "engine", None)
+        host = (engine._host_label(flake.name)
+                if engine is not None else "wire")
+        for ctx, rows in ctxs.values():
+            tele.tracer.record_span(ctx, stage=f"wire:{flake.name}",
+                                    host=host, rows=rows,
+                                    t_start=t0, t_end=t1)
 
 
 class RemoteFlake:

@@ -493,9 +493,15 @@ class Flake:
         self._lm_count = 0
         self._lm_pending: Optional[Message] = None
         self._lm_lock = threading.Lock()
+        #: failure-detection heartbeat: one float store per dispatch-loop
+        #: iteration, read by the fault plane's supervisor
+        self.heartbeat = 0.0
+        #: armed chaos CrashRule (fault-injection harness), None in production
+        self._chaos = None
 
     # -- lifecycle -----------------------------------------------------------
     def activate(self) -> None:
+        self.heartbeat = time.time()
         self._pool = ThreadPoolExecutor(
             max_workers=64, thread_name_prefix=f"flake-{self.name}")
         self._thread = threading.Thread(
@@ -716,6 +722,7 @@ class Flake:
     def _dispatch_loop(self) -> None:
         proto = self._proto
         while not self._stop.is_set():
+            self.heartbeat = time.time()
             if self._paused.is_set() or self._drain.is_set() or self.cores == 0:
                 with self._wake:
                     self._wake.wait(timeout=0.05)
@@ -1003,6 +1010,8 @@ class Flake:
                     with self._inflight_cond:
                         if seq_for_dedup in self._done_seqs:
                             return  # duplicate speculative task lost the race
+                if self._chaos is not None:
+                    self._chaos.check_one(item.payload)
                 result = proto.compute(item.payload)
                 outputs = self._wrap(result, item)
             elif kind == "batch":
@@ -1010,8 +1019,10 @@ class Flake:
                 # compute_batch call, per-message lineage/wrap preserved.
                 # With the array opt-in, stackable payloads take the
                 # columnar fast path instead (one ArrayBatch carrier out).
+                # An armed chaos rule forces the row-wise path so a
+                # poison row fails alone instead of sinking the batch.
                 outputs = None
-                if self.batch_array:
+                if self.batch_array and self._chaos is None:
                     outputs = self._array_outputs(proto, msgs=item)
                 if outputs is None:
                     outputs = self._batch_outputs(proto, item)
@@ -1021,7 +1032,9 @@ class Flake:
                 # the pellet declines the array path, degrade the carrier
                 # to the exact row-wise batched semantics.
                 ab = item.payload
-                outputs = self._array_outputs(proto, ab=ab)
+                outputs = None
+                if self._chaos is None:
+                    outputs = self._array_outputs(proto, ab=ab)
                 if outputs is None:
                     outputs = self._batch_outputs(
                         proto, ab.to_messages(port=item.port))
@@ -1057,7 +1070,12 @@ class Flake:
             if self._tele_service is not None:
                 self._tele_service.observe(lat / max(credits, 1), n=credits)
             if self.engine is not None:
-                self.engine._record_error(self.name, e)
+                # fault plane first: it may retry the rows or dead-letter
+                # them (returns True = handled); default is drop-and-log
+                faults = self.engine._faults
+                if faults is None or not faults.on_task_error(
+                        self, kind, item, e):
+                    self.engine._record_error(self.name, e)
                 self.engine._inflight_dec(credits)
             return
         if seq_for_dedup is not None and self.speculative_timeout is not None:
@@ -1135,6 +1153,22 @@ class Flake:
         so error semantics stay message-granular with no double-execution
         of side effects."""
         payloads = [m.payload for m in item]
+        chaos = self._chaos
+        if chaos is not None:
+            # chaos-armed stage: only the rows the rule selects crash
+            # (BatchItemError), innocent batch-mates compute normally
+            hits = chaos.scan(payloads)
+            if hits:
+                results: List[Any] = []
+                for i, m in enumerate(item):
+                    if i in hits:
+                        results.append(BatchItemError(chaos.crash_exc()))
+                        continue
+                    try:
+                        results.append(proto.compute(m.payload))
+                    except Exception as e:
+                        results.append(BatchItemError(e))
+                return self._wrap_results(item, results)
         fn = getattr(proto, "compute_batch", None)
         try:
             if fn is not None:
@@ -1171,6 +1205,10 @@ class Flake:
         for m, r in zip(item, results):
             if isinstance(r, BatchItemError):
                 if self.engine is not None:
+                    faults = self.engine._faults
+                    if faults is not None and faults.on_row_error(
+                            self, m, r.exc):
+                        continue
                     self.engine._record_error(self.name, r.exc)
                 continue
             outputs.extend(self._wrap(r, m))
@@ -1509,7 +1547,8 @@ class Coordinator:
                  channel_capacity: int = 100_000,
                  speculative_timeout: Optional[float] = None,
                  telemetry: Union[bool, Telemetry] = True,
-                 trace_sample: float = 0.0):
+                 trace_sample: float = 0.0,
+                 recovery=None):
         graph.validate()
         self.graph = graph
         #: the ops plane: metrics registry + event bus + tracer.  Always
@@ -1563,6 +1602,16 @@ class Coordinator:
         self.topology_version = 0
         #: structural diff summary of the last committed transaction
         self.last_transaction: Optional[Dict[str, Any]] = None
+        self._stopped = False
+        self._stop_lock = threading.Lock()
+        #: fault-tolerance plane (``recovery=RecoveryPolicy(...)``):
+        #: heartbeat failure detection, auto-checkpointing + source
+        #: journal, host recovery, row retry/dead-letter.  None (one
+        #: attribute check on cold error paths) when not configured.
+        self._faults = None
+        if recovery is not None:
+            from ..faults.plane import FaultPlane
+            self._faults = FaultPlane(self, recovery)
 
     # -- engine-wide quiescence ---------------------------------------------
     def _inflight_inc(self, n: int = 1) -> None:
@@ -1645,21 +1694,51 @@ class Coordinator:
         for name in order:
             self.flakes[name].activate()
         self._active = True
+        if self._faults is not None:
+            self._faults.start()
         return self
 
     def stop(self) -> None:
+        """Idempotent, exception-safe shutdown: a second call is a no-op,
+        and a failure in one flake's teardown never skips the others or
+        leaks container cores / cluster bindings.  The first exception is
+        re-raised once cleanup has run to completion."""
+        with self._stop_lock:
+            if self._stopped:
+                return
+            self._stopped = True
+        first_exc: Optional[BaseException] = None
+        if self._faults is not None:
+            try:
+                self._faults.stop()
+            except BaseException as e:
+                first_exc = e
         for name, f in self.flakes.items():
-            f.deactivate()
+            try:
+                f.deactivate()
+            except BaseException as e:
+                if first_exc is None:
+                    first_exc = e
             # release-on-deactivate: return the flake's cores to its
             # container so capacity cannot leak across session lifetimes
             c = self._container_of.pop(name, None)
             if c is not None:
-                c.release(name)
+                try:
+                    c.release(name)
+                except BaseException as e:
+                    if first_exc is None:
+                        first_exc = e
         if self.cluster is not None:
             # forget this graph's placements (the fleet survives, so a
             # prebuilt ClusterManager can host the next session)
-            self.cluster.unbind(self)
+            try:
+                self.cluster.unbind(self)
+            except BaseException as e:
+                if first_exc is None:
+                    first_exc = e
         self._active = False
+        if first_exc is not None:
+            raise first_exc
 
     def core_audit(self) -> Dict[str, Dict[str, int]]:
         """Outstanding per-container allocations (empty after ``stop``)."""
@@ -1681,6 +1760,10 @@ class Coordinator:
                     msg.meta[TRACE_KEY] = ctx
         with self._inject_lock:
             self.flakes[flake_name].enqueue(port, msg)
+            if self._faults is not None:
+                self._faults.journal_rows(
+                    flake_name, port, (payload,),
+                    None if key is None else (key,))
 
     def inject_many(self, flake_name: str, payloads: List[Any], *,
                     port: str = "in",
@@ -1723,6 +1806,9 @@ class Coordinator:
                 with self._inject_lock:
                     self.flakes[flake_name].enqueue(
                         port, Message(payload=ab))
+                    if self._faults is not None:
+                        self._faults.journal_rows(
+                            flake_name, port, payloads, keys)
                 return
             # ragged payloads: fall through to the per-message path (any
             # contexts handed out above are reused row-aligned below)
@@ -1735,6 +1821,9 @@ class Coordinator:
                         m.meta[TRACE_KEY] = ctx
                 with self._inject_lock:
                     self.flakes[flake_name].enqueue_many(port, msgs)
+                    if self._faults is not None:
+                        self._faults.journal_rows(
+                            flake_name, port, payloads, keys)
                 return
         msgs = [Message(payload=p, key=keys[i] if keys is not None else None)
                 for i, p in enumerate(payloads)]
@@ -1745,12 +1834,16 @@ class Coordinator:
                     m.meta[TRACE_KEY] = ctx
         with self._inject_lock:
             self.flakes[flake_name].enqueue_many(port, msgs)
+            if self._faults is not None:
+                self._faults.journal_rows(flake_name, port, payloads, keys)
 
     def inject_landmark(self, flake_name: str, tag: Any = None,
                         port: str = "in") -> None:
         from .message import landmark
         with self._inject_lock:
             self.flakes[flake_name].enqueue(port, landmark(tag))
+            if self._faults is not None:
+                self._faults.journal_landmark(flake_name, port, tag)
 
     def run_until_quiescent(self, timeout: float = 60.0) -> bool:
         """Block until no message is in flight anywhere in the graph."""

@@ -1,0 +1,20 @@
+"""Fault-tolerance plane: detection, recovery, chaos injection.
+
+``RecoveryPolicy`` (handed to ``flow.session(recovery=...)``) turns on
+heartbeat failure detection, periodic background checkpoints with a
+source journal, automatic host recovery (global rollback + replay,
+at-least-once), per-stage crash restarts with quarantine, and a
+dead-letter queue for poison rows.  ``FaultPlan``/``ChaosController``
+are the seeded chaos harness that proves it all works.
+"""
+from .chaos import ChaosController, CrashRule, FaultPlan, FaultyWire
+from .plane import FaultPlane
+from .policy import (CheckpointPolicy, DeadLetter, DeadLetterQueue,
+                     PelletCrashError, RecoveryPolicy, census)
+
+__all__ = [
+    "CheckpointPolicy", "RecoveryPolicy", "PelletCrashError",
+    "DeadLetter", "DeadLetterQueue", "census",
+    "FaultPlan", "ChaosController", "CrashRule", "FaultyWire",
+    "FaultPlane",
+]

@@ -1,0 +1,273 @@
+"""Seeded chaos-injection harness.
+
+A :class:`FaultPlan` declares *what goes wrong and when* — kill host h1
+at t=0.5s, crash a pellet on its Nth row (or every row matching a
+predicate), run the cross-host wire at a 5% drop rate — and a
+:class:`ChaosController` arms it against a live Coordinator.  Everything
+randomized is driven by one seeded ``random.Random``, so a chaos run is
+reproducible end-to-end: same plan + same seed → same drops, same
+duplicates, same delays.
+
+The injection points are the ones a real deployment has:
+
+* **host kill** — the VM stops answering heartbeats
+  (``ClusterManager.fail_host``) and every flake on it hard-stops
+  mid-flight, stranding whatever was parked in its channels (that is the
+  loss the recovery plane must win back);
+* **pellet crash** — a :class:`CrashRule` attached to the flake raises
+  :class:`PelletCrashError` from inside compute, exercising the row
+  retry/restart/quarantine/dead-letter ladder;
+* **flaky wire** — a :class:`FaultyWire` plugged into
+  ``SerializingTransport.fault_injector`` drops/delays/duplicates/
+  reorders batches, exercising the transport's retry-with-backoff.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from ..cluster.transport import SerializingTransport, TransientTransportError
+from .policy import PelletCrashError
+
+
+class CrashRule:
+    """When should this stage's pellet crash?
+
+    ``on_nth`` crashes exactly once, on the Nth row the stage sees
+    (1-based, counted across batches).  ``match`` crashes every row the
+    predicate matches — the crash-looping case that drives a stage into
+    quarantine.  Rows are counted under a lock so batched and concurrent
+    dispatches agree on N.
+    """
+
+    def __init__(self, *, on_nth: Optional[int] = None,
+                 match: Optional[Callable[[Any], bool]] = None,
+                 message: str = "chaos: injected pellet crash"):
+        if on_nth is None and match is None:
+            raise ValueError("CrashRule needs on_nth and/or match")
+        self.on_nth = on_nth
+        self.match = match
+        self.message = message
+        self.crashes = 0
+        self._seen = 0
+        self._lock = threading.Lock()
+
+    def crash_exc(self) -> PelletCrashError:
+        with self._lock:
+            self.crashes += 1
+        return PelletCrashError(self.message)
+
+    def _should(self, payload: Any) -> bool:
+        with self._lock:
+            self._seen += 1
+            if self.on_nth is not None and self._seen == self.on_nth:
+                return True
+        if self.match is not None:
+            try:
+                return bool(self.match(payload))
+            except Exception:
+                return False
+        return False
+
+    def check_one(self, payload: Any) -> None:
+        """Single-row hook (raises on a hit)."""
+        if self._should(payload):
+            raise self.crash_exc()
+
+    def scan(self, payloads: List[Any]) -> Set[int]:
+        """Batch hook: indices of rows that crash.  Only the matching
+        rows fail (as ``BatchItemError``) so innocent rows batched with
+        a poison row never burn their own retry budget."""
+        return {i for i, p in enumerate(payloads) if self._should(p)}
+
+
+class FaultyWire:
+    """Seeded transport fault injector (``SerializingTransport`` hook).
+
+    ``drop_rate`` raises :class:`TransientTransportError` *before*
+    delivery (the transport retries — a drop is never a silent loss);
+    ``dup_rate`` asks for a second delivery after a success;
+    ``delay_s`` adds 0..delay_s of jitter per send; ``reorder_rate``
+    shuffles a batch's intra-batch order.  One guarded RNG keeps a run
+    deterministic per seed.
+    """
+
+    def __init__(self, *, drop_rate: float = 0.0, dup_rate: float = 0.0,
+                 delay_s: float = 0.0, reorder_rate: float = 0.0,
+                 seed: int = 0):
+        for name, v in (("drop_rate", drop_rate), ("dup_rate", dup_rate),
+                        ("reorder_rate", reorder_rate)):
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        self.drop_rate = drop_rate
+        self.dup_rate = dup_rate
+        self.delay_s = max(0.0, delay_s)
+        self.reorder_rate = reorder_rate
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.drops = 0
+        self.dups = 0
+        self.reorders = 0
+
+    def before_send(self, msgs: List[Any]) -> Tuple[List[Any], float]:
+        with self._lock:
+            if self.drop_rate and self._rng.random() < self.drop_rate:
+                self.drops += 1
+                raise TransientTransportError(
+                    f"chaos: dropped batch of {len(msgs)}")
+            extra = (self._rng.random() * self.delay_s
+                     if self.delay_s else 0.0)
+            if self.reorder_rate and len(msgs) > 1 \
+                    and self._rng.random() < self.reorder_rate:
+                self.reorders += 1
+                msgs = list(msgs)
+                self._rng.shuffle(msgs)
+        return msgs, extra
+
+    def should_duplicate(self) -> bool:
+        with self._lock:
+            if self.dup_rate and self._rng.random() < self.dup_rate:
+                self.dups += 1
+                return True
+        return False
+
+    def describe(self) -> Dict[str, Any]:
+        return {"drops": self.drops, "dups": self.dups,
+                "reorders": self.reorders}
+
+
+class FaultPlan:
+    """Declarative, seeded chaos scenario (fluent builder).
+
+    ::
+
+        plan = (FaultPlan(seed=7)
+                .kill_host("h1", at_s=0.5)
+                .crash_pellet("enrich", match=lambda p: p % 97 == 13)
+                .flaky_wire(drop_rate=0.05, delay_s=0.001, dup_rate=0.02))
+        chaos = ChaosController(coordinator, plan).start()
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.host_kills: List[Tuple[str, float]] = []
+        self.pellet_crashes: Dict[str, Dict[str, Any]] = {}
+        self.wire: Optional[Dict[str, Any]] = None
+
+    def kill_host(self, host: str, at_s: float) -> "FaultPlan":
+        self.host_kills.append((str(host), max(0.0, float(at_s))))
+        return self
+
+    def crash_pellet(self, stage: str, *, on_nth: Optional[int] = None,
+                     match: Optional[Callable[[Any], bool]] = None
+                     ) -> "FaultPlan":
+        if on_nth is None and match is None:
+            raise ValueError("crash_pellet needs on_nth and/or match")
+        self.pellet_crashes[str(stage)] = {"on_nth": on_nth, "match": match}
+        return self
+
+    def flaky_wire(self, *, drop_rate: float = 0.0, dup_rate: float = 0.0,
+                   delay_s: float = 0.0, reorder_rate: float = 0.0,
+                   max_retries: Optional[int] = None) -> "FaultPlan":
+        self.wire = {"drop_rate": drop_rate, "dup_rate": dup_rate,
+                     "delay_s": delay_s, "reorder_rate": reorder_rate,
+                     "max_retries": max_retries}
+        return self
+
+
+class ChaosController:
+    """Arms a :class:`FaultPlan` against a live Coordinator.
+
+    ``start()`` attaches crash rules to flakes, plugs the faulty wire
+    into the cluster transport, and schedules host kills relative to
+    now; ``stop()`` disarms everything it armed (rules detach, the wire
+    unplugs, pending kills cancel).  Kill = ``fail_host`` (heartbeats
+    stop) + hard-stop of every flake on the host (no drain, no join —
+    whatever its pool was mid-delivering models packets already on the
+    wire).
+    """
+
+    def __init__(self, coordinator, plan: FaultPlan):
+        self.coord = coordinator
+        self.plan = plan
+        self.rules: Dict[str, CrashRule] = {}
+        self.wire: Optional[FaultyWire] = None
+        self.kills: List[Dict[str, Any]] = []
+        self._timers: List[threading.Timer] = []
+        self._armed_flakes: List[Any] = []
+        self._transport: Optional[SerializingTransport] = None
+
+    def start(self) -> "ChaosController":
+        coord = self.coord
+        for stage, spec in self.plan.pellet_crashes.items():
+            flake = coord.flakes.get(stage)
+            if flake is None:
+                raise KeyError(f"chaos: unknown stage {stage!r}")
+            rule = CrashRule(**spec)
+            flake._chaos = rule
+            self.rules[stage] = rule
+            self._armed_flakes.append(flake)
+        if self.plan.wire is not None:
+            if coord.cluster is None or not isinstance(
+                    coord.cluster.transport, SerializingTransport):
+                raise RuntimeError(
+                    "chaos: flaky_wire needs a cluster with "
+                    "transport='serializing'")
+            spec = dict(self.plan.wire)
+            max_retries = spec.pop("max_retries", None)
+            self.wire = FaultyWire(seed=self.plan.seed, **spec)
+            self._transport = coord.cluster.transport
+            if max_retries is not None:
+                self._transport.max_retries = int(max_retries)
+            self._transport.fault_injector = self.wire
+        for host, at_s in self.plan.host_kills:
+            t = threading.Timer(at_s, self._kill_host, args=(host,))
+            t.daemon = True
+            self._timers.append(t)
+            t.start()
+        return self
+
+    def stop(self) -> "ChaosController":
+        for t in self._timers:
+            t.cancel()
+        self._timers = []
+        for flake in self._armed_flakes:
+            flake._chaos = None
+        self._armed_flakes = []
+        if self._transport is not None:
+            self._transport.fault_injector = None
+            self._transport = None
+        return self
+
+    def _kill_host(self, host_name: str) -> None:
+        coord = self.coord
+        if not coord._active or coord.cluster is None:
+            return
+        try:
+            host = coord.cluster.fail_host(host_name)
+        except Exception as e:
+            coord._record_error("__chaos__", e)
+            return
+        victims = [n for n, h in coord.cluster._placement.items()
+                   if h == host.name]
+        for name in victims:
+            flake = coord.flakes.get(name)
+            if flake is not None:
+                flake._stop.set()
+                flake._notify()
+        self.kills.append({"host": host.name, "flakes": sorted(victims),
+                           "t": time.time()})
+        if coord.telemetry.enabled:
+            coord.telemetry.events.emit(
+                "chaos", action="kill_host", host=host.name,
+                flakes=sorted(victims))
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "seed": self.plan.seed,
+            "kills": list(self.kills),
+            "crashes": {s: r.crashes for s, r in self.rules.items()},
+            "wire": self.wire.describe() if self.wire is not None else None,
+        }

@@ -1,0 +1,167 @@
+"""Fault-tolerance policies and vocabulary.
+
+The paper frames Floe as an *always-on* continuous dataflow (§1); these
+policies are the knobs a session turns to stay on when hosts die and
+pellets crash:
+
+* :class:`CheckpointPolicy`  — periodic background consistent cuts
+  (``Coordinator.frozen`` + ``checkpoint_floe_graph``) with retention.
+* :class:`RecoveryPolicy`    — failure detection (heartbeat interval,
+  suspicion timeout), per-stage restart budget (exponential backoff,
+  max-restarts quarantine), per-row retry budget and the dead-letter
+  queue, and the source journal that makes host recovery zero-loss.
+* :class:`PelletCrashError`  — the chaos harness's injected pellet fault
+  (also usable by user pellets to signal "crash me").
+* :class:`DeadLetter` / :class:`DeadLetterQueue` — rows that exhausted
+  their retry budget, surfaced on the session instead of retried forever.
+* :func:`census`             — end-to-end lost/duplicated accounting for
+  at-least-once delivery (lost must be 0; duplicates are counted).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+
+class PelletCrashError(RuntimeError):
+    """A pellet crash (injected by the chaos harness or raised by user
+    code).  Distinguished from ordinary compute errors because it charges
+    the *stage's* restart budget, not just the row's retry budget."""
+
+
+@dataclass
+class CheckpointPolicy:
+    """Periodic background checkpoints for automatic recovery.
+
+    ``dir=None`` lets the fault plane manage a private temporary
+    directory (removed on session close); pass a path to keep
+    checkpoints across sessions.  ``keep`` bounds retention;
+    ``freeze_timeout_s`` bounds how long one consistent cut may wait for
+    in-flight work (a cut that cannot freeze is skipped, not fatal).
+    """
+
+    interval_s: float = 5.0
+    dir: Optional[str] = None
+    keep: int = 2
+    freeze_timeout_s: float = 30.0
+
+    def __post_init__(self) -> None:
+        if self.interval_s <= 0:
+            raise ValueError("checkpoint interval_s must be > 0")
+        if self.keep < 1:
+            raise ValueError("checkpoint keep must be >= 1")
+
+
+@dataclass
+class RecoveryPolicy:
+    """How a session detects failures and drives itself back to healthy.
+
+    Guarantee: **at-least-once**.  With ``checkpoint`` + ``journal`` on,
+    a host failure is recovered by rolling the whole graph back to the
+    latest consistent cut and replaying every row injected since — no
+    row is lost; rows reprocessed by surviving stages surface as
+    duplicates (counted by :func:`census`).  Rows that poison a pellet
+    more than ``max_row_retries`` times move to the dead-letter queue; a
+    stage that crashes more than ``max_restarts`` times is quarantined
+    (kept running, but its errors go straight to the DLQ instead of
+    charging further restarts).
+    """
+
+    checkpoint: Optional[CheckpointPolicy] = field(
+        default_factory=CheckpointPolicy)
+    heartbeat_interval_s: float = 0.25
+    suspicion_timeout_s: float = 1.0
+    max_restarts: int = 3
+    restart_backoff_s: float = 0.1
+    max_row_retries: int = 2
+    dead_letter_capacity: int = 1024
+    #: journal injected rows since the last cut for replay on recovery
+    journal: bool = True
+    #: journal size backstop (entries): beyond this the oldest entries
+    #: drop and recovery can no longer prove zero loss (flagged)
+    journal_limit: int = 200_000
+    #: bound on waiting for surviving stages' in-flight work before the
+    #: rollback (best-effort; recovery proceeds on timeout)
+    recovery_quiesce_timeout_s: float = 30.0
+
+    def __post_init__(self) -> None:
+        if self.heartbeat_interval_s <= 0:
+            raise ValueError("heartbeat_interval_s must be > 0")
+        if self.suspicion_timeout_s <= 0:
+            raise ValueError("suspicion_timeout_s must be > 0")
+        if self.max_restarts < 0 or self.max_row_retries < 0:
+            raise ValueError("max_restarts/max_row_retries must be >= 0")
+
+
+@dataclass
+class DeadLetter:
+    """One poisoned row: enough context to inspect, re-inject, or drop."""
+
+    stage: str
+    port: Optional[str]
+    payload: Any
+    key: Any
+    seq: int
+    error: str
+    attempts: int
+    t: float
+
+
+class DeadLetterQueue:
+    """Bounded FIFO of poisoned rows, surfaced via ``session.dead_letters()``.
+
+    Capacity-bounded (oldest evicted) so a pathological poison storm
+    cannot hold the whole stream in memory.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self._items: deque = deque(maxlen=max(1, int(capacity)))
+        self._lock = threading.Lock()
+        self.total = 0          # all-time count (survives eviction)
+
+    def append(self, letter: DeadLetter) -> None:
+        with self._lock:
+            self._items.append(letter)
+            self.total += 1
+
+    def items(self) -> List[DeadLetter]:
+        with self._lock:
+            return list(self._items)
+
+    def drain(self) -> List[DeadLetter]:
+        with self._lock:
+            out = list(self._items)
+            self._items.clear()
+            return out
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+def census(injected: Iterable[Any], delivered: Iterable[Any],
+           dead: Iterable[Any] = ()) -> Dict[str, Any]:
+    """At-least-once delivery accounting.
+
+    ``lost`` = injected − delivered − dead-lettered (must be empty for a
+    healthy recovery); ``duplicates`` counts redundant deliveries
+    (recovery replay / duplicated wire sends).  Items must be hashable
+    identities (row ids), not payload objects.
+    """
+    inj = list(injected)
+    got = list(delivered)
+    dlq = set(dead)
+    lost = sorted(set(inj) - set(got) - dlq)
+    return {
+        "injected": len(inj),
+        "delivered": len(got),
+        "unique_delivered": len(set(got)),
+        "dead_lettered": len(dlq),
+        "duplicates": len(got) - len(set(got)),
+        "lost": lost,
+        "lost_count": len(lost),
+        "t": time.time(),
+    }

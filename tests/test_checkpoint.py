@@ -203,3 +203,79 @@ def test_checkpoint_custom_get_state_override(tmp_path):
     with Session.restore(path, flow) as s2:
         s2.inject("c", "c")
         assert s2.results() == [(3, "c")]   # numbering continues
+
+
+# -- atomic write + corruption detection --------------------------------------
+
+def _simple_flow():
+    from repro.api import Flow
+    from repro.core import FnPellet
+    flow = Flow("atomic")
+    flow.pellet("id", lambda: FnPellet(lambda x: x))
+    return flow
+
+
+def test_checkpoint_write_is_atomic_no_tmp_left(tmp_path):
+    flow = _simple_flow()
+    path = str(tmp_path / "cut.floe")
+    with flow.session() as s:
+        s.inject("id", 1)
+        s.results()
+        s.checkpoint(path)
+    assert os.path.exists(path)
+    # the temp file used for the atomic rename must not survive
+    assert [n for n in os.listdir(tmp_path) if n.endswith(".tmp")] == []
+
+
+def test_restore_truncated_checkpoint_raises(tmp_path):
+    """Regression: a checkpoint truncated mid-write (crash during save
+    before atomic rename existed) must fail loudly, not unpickle garbage
+    or silently restore a partial graph."""
+    from repro.api import Session
+    from repro.checkpoint import CheckpointCorruptError
+
+    flow = _simple_flow()
+    path = str(tmp_path / "cut.floe")
+    with flow.session() as s:
+        s.inject_many("id", list(range(100)))
+        s.results()
+        s.checkpoint(path)
+    data = open(path, "rb").read()
+    for cut in (len(data) // 2, 10, 3):     # payload, header, magic
+        open(path, "wb").write(data[:cut])
+        with pytest.raises(CheckpointCorruptError):
+            Session.restore(path, _simple_flow())
+
+
+def test_restore_corrupted_byte_fails_checksum(tmp_path):
+    from repro.api import Session
+    from repro.checkpoint import CheckpointCorruptError
+
+    flow = _simple_flow()
+    path = str(tmp_path / "cut.floe")
+    with flow.session() as s:
+        s.checkpoint(path)
+    data = bytearray(open(path, "rb").read())
+    data[-1] ^= 0xFF                        # flip one payload byte
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(CheckpointCorruptError):
+        Session.restore(path, _simple_flow())
+
+
+def test_restore_reads_legacy_raw_pickle(tmp_path):
+    """Pre-manifest checkpoints (raw pickle, no FLOECKPT header) still
+    restore."""
+    import pickle
+
+    from repro.checkpoint import read_floe_meta
+    from repro.checkpoint.checkpointer import _read_floe_state
+
+    flow = _simple_flow()
+    path = str(tmp_path / "cut.floe")
+    with flow.session() as s:
+        s.checkpoint(path)
+    state = _read_floe_state(path)
+    legacy = str(tmp_path / "legacy.pkl")
+    with open(legacy, "wb") as f:
+        pickle.dump(state, f)
+    assert read_floe_meta(legacy)["flow"] == read_floe_meta(path)["flow"]

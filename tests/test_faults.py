@@ -1,0 +1,436 @@
+"""Fault-tolerance plane: failure detection, automatic recovery,
+row retry / dead-letter ladder, transport hardening, seeded chaos.
+
+The acceptance scenario (``test_chaos_acceptance``) is the headline: a
+3-host cluster loses one VM mid-load while the cross-host wire drops 5%
+of sends and one pellet crash-loops on poison rows — the session must
+recover automatically with ZERO lost rows (duplicates allowed and
+counted), the poison rows in the dead-letter queue, and the stage
+quarantined.
+"""
+import os
+import time
+
+import pytest
+
+from repro import (ChaosController, ClusterSpec, FaultPlan, FnPellet,
+                   Flow, PelletCrashError, RecoveryPolicy, census)
+from repro.faults import CheckpointPolicy, CrashRule, FaultyWire
+from repro.cluster.transport import (SerializingTransport,
+                                     TransientTransportError, TransportError)
+
+
+def _wait(pred, timeout=10.0, step=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(step)
+    return pred()
+
+
+# -- policies & vocabulary ----------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        CheckpointPolicy(interval_s=0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(heartbeat_interval_s=0)
+    with pytest.raises(ValueError):
+        FaultPlan().crash_pellet("x")            # needs on_nth or match
+    with pytest.raises(ValueError):
+        FaultyWire(drop_rate=1.5)
+
+
+def test_census_accounting():
+    c = census([1, 2, 3, 4], [1, 2, 2, 3], dead=[4])
+    assert c["lost_count"] == 0 and c["duplicates"] == 1
+    assert c["dead_lettered"] == 1
+    c = census([1, 2, 3], [1])
+    assert c["lost"] == [2, 3]
+
+
+def test_faulty_wire_is_deterministic_per_seed():
+    def run(seed):
+        w = FaultyWire(drop_rate=0.3, dup_rate=0.2, reorder_rate=0.5,
+                       seed=seed)
+        events = []
+        for i in range(200):
+            try:
+                w.before_send([i, i + 1])
+                events.append(("ok", w.should_duplicate()))
+            except TransientTransportError:
+                events.append(("drop", None))
+        return events, w.describe()
+    assert run(7) == run(7)
+    assert run(7) != run(8)
+
+
+# -- transport hardening ------------------------------------------------------
+
+def _two_host_session(flow, **kw):
+    return flow.session(
+        cluster=ClusterSpec(hosts=2, cores_per_host=8,
+                            transport="serializing"), **kw)
+
+
+def test_transport_retries_dropped_sends_zero_loss():
+    flow = Flow("wire")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x)).place(host="h0")
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x * 3)).place(host="h1")
+    a >> b
+    with _two_host_session(flow) as s:
+        chaos = ChaosController(
+            s.coordinator,
+            FaultPlan(seed=11).flaky_wire(drop_rate=0.2, max_retries=10)
+        ).start()
+        s.inject_many(a, list(range(300)))
+        out = s.results(timeout=60)
+        c = census([i * 3 for i in range(300)], out)
+        assert c["lost_count"] == 0
+        # every chaos drop surfaced as a transport retry, never a loss
+        assert chaos.wire.drops > 0
+        assert s.cluster.transport.stats.retries == chaos.wire.drops
+        chaos.stop()
+
+
+def test_transport_duplicates_are_counted_not_lost():
+    flow = Flow("dup")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x)).place(host="h0")
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x)).place(host="h1")
+    a >> b
+    with _two_host_session(flow) as s:
+        chaos = ChaosController(
+            s.coordinator,
+            FaultPlan(seed=5).flaky_wire(dup_rate=1.0)).start()
+        s.inject_many(a, list(range(20)))
+        out = s.results(timeout=60)
+        c = census(list(range(20)), out)
+        assert c["lost_count"] == 0
+        assert c["duplicates"] > 0
+        assert s.cluster.transport.stats.duplicated == c["duplicates"]
+        chaos.stop()
+
+
+def test_transport_retry_exhaustion_is_permanent_error():
+    t = SerializingTransport(max_retries=2, retry_backoff_s=0.0)
+
+    class _AlwaysDrop:
+        def before_send(self, msgs):
+            raise TransientTransportError("chaos: always drop")
+
+        def should_duplicate(self):
+            return False
+
+    t.fault_injector = _AlwaysDrop()
+    flow = Flow("exh")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with flow.session() as s:
+        from repro.core.message import Message
+        with pytest.raises(TransportError):
+            t.deliver(s.coordinator.flakes["a"], "in",
+                      [Message(payload=1)])
+    assert t.stats.retries == 2
+
+
+def test_wire_trace_spans_visible_in_session_trace():
+    flow = Flow("spans")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x)).place(host="h0")
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x + 1)).place(host="h1")
+    a >> b
+    with _two_host_session(flow, trace_sample=1.0) as s:
+        s.inject(a, 1)
+        assert s.results(timeout=30) == [2]
+        tids = s.trace()
+        assert tids
+        stages = [sp["stage"] for sp in s.trace(tids[0])]
+        assert any(st.startswith("wire:") for st in stages), stages
+
+
+# -- row retry / dead letters -------------------------------------------------
+
+def test_transient_row_error_retried_then_delivered():
+    calls = {}
+
+    def mk():
+        def f(x):
+            calls[x] = calls.get(x, 0) + 1
+            if x == 7 and calls[x] == 1:
+                raise ValueError("transient")
+            return x
+        return FnPellet(f)
+
+    flow = Flow("retry")
+    a = flow.pellet("a", mk)
+    with flow.session(recovery=RecoveryPolicy(checkpoint=None,
+                                              max_row_retries=2)) as s:
+        s.inject_many(a, list(range(20)))
+        out = s.results(timeout=30)
+        assert sorted(out) == list(range(20))       # 7 recovered on retry
+        assert calls[7] == 2
+        assert s.dead_letters() == []
+
+
+def test_poison_row_lands_in_dead_letter_queue():
+    def mk():
+        def f(x):
+            if x == 13:
+                raise ValueError("poison")
+            return x + 1
+        return FnPellet(f)
+
+    flow = Flow("dlq")
+    a = flow.pellet("a", mk)
+    with flow.session(recovery=RecoveryPolicy(checkpoint=None,
+                                              max_row_retries=2)) as s:
+        s.inject_many(a, list(range(30)))
+        out = s.results(timeout=30)
+        assert sorted(out) == [i + 1 for i in range(30) if i != 13]
+        (letter,) = s.dead_letters()
+        assert letter.payload == 13 and letter.stage == "a"
+        assert letter.attempts == 3                 # 1 try + 2 retries
+        assert "poison" in letter.error
+        # drain clears
+        assert len(s.dead_letters(drain=True)) == 1
+        assert s.dead_letters() == []
+        assert s.faults.dead_letters.total == 1
+
+
+def test_dead_letter_without_plane_raises():
+    from repro import SessionStateError
+    flow = Flow("noplane")
+    flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with flow.session() as s:
+        with pytest.raises(SessionStateError):
+            s.dead_letters()
+
+
+# -- pellet crash restarts / quarantine ---------------------------------------
+
+def test_pellet_crash_restarts_with_fresh_instance():
+    flow = Flow("restart")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    pol = RecoveryPolicy(checkpoint=None, max_restarts=3,
+                         restart_backoff_s=0.01, max_row_retries=1)
+    with flow.session(recovery=pol) as s:
+        flake = s.coordinator.flakes["a"]
+        v0 = flake.version
+        chaos = ChaosController(
+            s.coordinator,
+            FaultPlan(seed=2).crash_pellet("a", on_nth=3)).start()
+        s.inject_many(a, list(range(10)))
+        out = s.results(timeout=30)
+        assert _wait(lambda: flake.version > v0, timeout=10)
+        d = s.faults.describe()
+        assert d["restarts"].get("a") == 1
+        assert d["quarantined"] == []
+        # the crashed row itself was retried and delivered: nothing lost
+        assert census(list(range(10)), out)["lost_count"] == 0
+        chaos.stop()
+
+
+def test_crash_loop_quarantines_healthy_rows_flow():
+    flow = Flow("quar")
+    b = flow.pellet("b", lambda: FnPellet(lambda x: x))
+    pol = RecoveryPolicy(checkpoint=None, max_restarts=2,
+                         restart_backoff_s=0.01, max_row_retries=1)
+    with flow.session(recovery=pol) as s:
+        chaos = ChaosController(
+            s.coordinator,
+            FaultPlan(seed=1).crash_pellet("b", match=lambda p: p % 10 == 3)
+        ).start()
+        s.inject_many(b, list(range(40)))
+        out = s.results(timeout=60)
+        d = s.faults.describe()
+        # circuit broken: stage quarantined, but every healthy row delivered
+        assert d["quarantined"] == ["b"]
+        assert sorted(out) == [i for i in range(40) if i % 10 != 3]
+        assert {l.payload for l in s.dead_letters()} == {3, 13, 23, 33}
+        assert any(e["kind"] == "flake_quarantined" for e in s.events())
+        chaos.stop()
+
+
+def test_dead_dispatch_thread_is_revived():
+    flow = Flow("revive")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    pol = RecoveryPolicy(checkpoint=None, heartbeat_interval_s=0.05,
+                         suspicion_timeout_s=0.2)
+    with flow.session(recovery=pol) as s:
+        flake = s.coordinator.flakes["a"]
+        # simulate the dispatch thread dying of a bug: swap in a corpse
+        import threading
+        dead = threading.Thread(target=lambda: None)
+        dead.start()
+        dead.join()
+        flake._thread = dead
+        assert _wait(lambda: flake._thread.is_alive(), timeout=10)
+        s.inject(a, 99)
+        assert s.results(timeout=30) == [99]
+        assert any(e["kind"] == "flake_failed"
+                   and e.get("stage") == "a" for e in s.events())
+
+
+# -- auto-checkpointing -------------------------------------------------------
+
+def test_background_checkpoints_rotate_and_truncate_journal(tmp_path):
+    flow = Flow("auto")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    pol = RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=0.15, dir=str(tmp_path),
+                                    keep=2))
+    with flow.session(recovery=pol) as s:
+        s.inject_many(a, list(range(10)))
+        s.results()
+        assert len(s.faults._journal) == 10
+        assert _wait(lambda: s.faults._ckpt_epoch >= 3, timeout=15)
+        # journal truncated by the cut (rows are inside the checkpoint now)
+        assert len(s.faults._journal) == 0
+        cuts = [n for n in os.listdir(tmp_path) if n.endswith(".floe")]
+        assert len(cuts) <= 2                       # retention
+        assert s.faults.checkpoint_path in [
+            os.path.join(str(tmp_path), n) for n in cuts]
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_crash_inside_frozen_releases_freeze():
+    """A raising body inside ``frozen()`` must unfreeze the graph: the
+    session keeps dispatching and injecting afterwards."""
+    flow = Flow("frz")
+    a = flow.pellet("a", lambda: FnPellet(lambda x: x))
+    with flow.session() as s:
+        coord = s.coordinator
+        with pytest.raises(RuntimeError, match="boom"):
+            with coord.frozen(timeout=10):
+                raise RuntimeError("boom")
+        s.inject(a, 5)
+        assert s.results(timeout=30) == [5]
+
+
+# -- idempotent shutdown (satellite) ------------------------------------------
+
+def test_coordinator_stop_is_idempotent_and_audit_clean():
+    flow = Flow("stop")
+    flow.pellet("a", lambda: FnPellet(lambda x: x))
+    s = flow.session(recovery=RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=0.1))).open()
+    coord = s.coordinator
+    tele = coord.telemetry
+    s.inject("a", 1)
+    s.results()
+    s.close()
+    n_events = len(tele.events.records())
+    coord.stop()                                   # second stop: no-op
+    coord.stop()
+    assert coord.core_audit() == {}
+    assert len(tele.events.records()) == n_events  # no re-fired events
+    s.close()                                      # session close also safe
+    # the fault plane's private checkpoint dir is gone
+    assert coord._faults._ckpt_dir is None
+
+
+def test_cluster_stop_idempotent_releases_once():
+    flow = Flow("cstop")
+    flow.pellet("a", lambda: FnPellet(lambda x: x))
+    mgr_holder = {}
+    with flow.session(cluster=ClusterSpec(hosts=2)) as s:
+        mgr_holder["m"] = s.cluster
+        s.inject("a", 1)
+        s.results()
+        coord = s.coordinator
+    coord.stop()
+    coord.stop()
+    assert coord.core_audit() == {}
+
+
+# -- host failure recovery ----------------------------------------------------
+
+def _three_host_flow():
+    flow = Flow("rec")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x)).place(host="h0")
+    mid = flow.pellet("mid",
+                      lambda: FnPellet(lambda x: x + 1000)).place(host="h1")
+    snk = flow.pellet("snk", lambda: FnPellet(lambda x: x)).place(host="h2")
+    src >> mid
+    mid >> snk
+    return flow, src
+
+
+def _recovery_policy():
+    return RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=0.25, freeze_timeout_s=10.0),
+        heartbeat_interval_s=0.05, suspicion_timeout_s=0.15,
+        max_row_retries=1, restart_backoff_s=0.01)
+
+
+def test_host_failure_recovers_zero_loss():
+    flow, src = _three_host_flow()
+    spec = ClusterSpec(hosts=3, cores_per_host=8, transport="serializing")
+    with flow.session(cluster=spec, recovery=_recovery_policy()) as s:
+        chaos = ChaosController(
+            s.coordinator, FaultPlan(seed=3).kill_host("h1", at_s=0.4)
+        ).start()
+        injected = []
+        for i in range(1500):
+            s.inject(src, i)
+            injected.append(i + 1000)
+            time.sleep(0.0005)
+        assert _wait(lambda: s.faults.recoveries, timeout=20), \
+            "host failure was never recovered"
+        out = s.results(timeout=60)
+        c = census(injected, out)
+        assert c["lost_count"] == 0, c["lost"][:10]
+        rec = s.faults.last_recovery
+        assert rec["host"] == "h1" and rec["flakes"] == ["mid"]
+        assert rec["placed"]["mid"] != "h1"       # respawned elsewhere
+        assert any(e["kind"] == "host_failed" for e in s.events())
+        assert any(e["kind"] == "recovery" for e in s.events())
+        # the dead VM's cores are fully released
+        assert s.cluster.hosts["h1"].container.allocated == {}
+        chaos.stop()
+    assert s._coord is None
+
+
+def test_chaos_acceptance():
+    """The ISSUE acceptance scenario: kill 1 of 3 hosts mid-load, 5%
+    transport drop, one crash-looping pellet — automatic recovery, zero
+    lost rows (dups counted), poison rows dead-lettered, stage
+    quarantined."""
+    flow = Flow("accept")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x)).place(host="h0")
+    mid = flow.pellet("mid",
+                      lambda: FnPellet(lambda x: x + 1000)).place(host="h1")
+    snk = flow.pellet("snk", lambda: FnPellet(lambda x: x)).place(host="h2")
+    src >> mid
+    mid >> snk
+    pol = RecoveryPolicy(
+        checkpoint=CheckpointPolicy(interval_s=0.25, freeze_timeout_s=10.0),
+        heartbeat_interval_s=0.05, suspicion_timeout_s=0.15,
+        max_restarts=2, restart_backoff_s=0.01, max_row_retries=1)
+    spec = ClusterSpec(hosts=3, cores_per_host=8, transport="serializing")
+    n = 1200
+    poison = {p for p in range(n) if p % 97 == 13}
+    with flow.session(cluster=spec, recovery=pol) as s:
+        plan = (FaultPlan(seed=7)
+                .kill_host("h2", at_s=0.4)
+                .crash_pellet("src", match=lambda p: p % 97 == 13)
+                .flaky_wire(drop_rate=0.05, delay_s=0.0005, max_retries=8))
+        chaos = ChaosController(s.coordinator, plan).start()
+        for i in range(n):
+            s.inject(src, i)
+            time.sleep(0.0004)
+        assert _wait(lambda: s.faults.recoveries, timeout=25), \
+            "host failure was never recovered"
+        out = s.results(timeout=90)
+        dead = {l.payload for l in s.dead_letters()}
+        expect = [i + 1000 for i in range(n) if i not in poison]
+        c = census(expect, out, dead=set())
+        # headline guarantee: nothing lost; duplicates allowed & counted
+        assert c["lost_count"] == 0, c["lost"][:10]
+        d = s.faults.describe()
+        assert d["quarantined"] == ["src"]          # crash-loop broke
+        assert dead and dead <= poison              # poison rows in DLQ
+        assert s.faults.last_recovery["host"] == "h2"
+        assert chaos.wire.drops > 0                 # the wire really dropped
+        report = chaos.describe()
+        assert report["kills"] and report["crashes"]["src"] > 0
+        chaos.stop()
