@@ -5,8 +5,9 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract.
   PYTHONPATH=src python -m benchmarks.run [suite ...]
 
 Suites: adaptation (Fig. 4), pipeline (§IV.A), clustering (§IV.B),
-engine (runtime micro), kernels, train (100M driver sanity), roofline
-(needs results/dryrun_roofline.json from the dry-run sweep).
+engine (runtime micro), kernels, recovery, serving (LM SLOs + hot-swap),
+train (100M driver sanity), roofline (needs
+results/dryrun_roofline.json from the dry-run sweep).
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ import time
 import traceback
 
 SUITES = ("adaptation", "pipeline", "clustering", "engine", "kernels",
-          "recovery", "train", "roofline")
+          "recovery", "serving", "train", "roofline")
 
 
 def _train_suite():
@@ -57,6 +58,10 @@ def main() -> None:
                 from . import bench_recovery as m
                 r, extras = m.run()
                 m.record(extras)   # append to BENCH_recovery.json
+            elif suite == "serving":
+                from . import bench_serving as m
+                r, extras = m.run()
+                m.record(extras)   # append to BENCH_serving.json
             elif suite == "train":
                 r, _ = _train_suite()
             elif suite == "roofline":

@@ -1,61 +1,74 @@
-"""Continuous serving with live model update and adaptive scaling.
+"""Continuous LM serving as a Floe dataflow, end to end.
 
-The "always-on" half of the paper, end to end: a bursty request stream hits
-the continuously-batched serving engine; a §III dynamic strategy watches the
-queue; and mid-stream the model weights are hot-swapped (§II.B dynamic task
-update) without dropping a single request — responses record which model
-version produced them (the "update landmark").
+The "always-on" half of the paper on the Session API (the PR 8 serving
+plane): a bursty request stream is injected into a flow whose stages are
+admission/scheduling → flash-attention prefill → continuously-batched
+flash-decode (a tick self-loop keeps generation inside the dataflow) →
+exactly-once response sink.  Mid-stream the model weights are hot-swapped
+via ``session.apply`` (§II.B dynamic task update) without dropping a
+request — the KV/slot tables ride across on ``__floe_state__`` and every
+response records which model version produced it — while a §III
+tail-latency SLO strategy elastically scales the decode stage.
+
+The seed's standalone loop is still importable as
+``repro.serving.ServingEngine``; this example drives the dataflow plane.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import time
 
-import jax
 import numpy as np
 
-from repro.adaptation import DynamicAdaptation
-from repro.configs import registry
-from repro.models import Model
-from repro.serving import ServingEngine
+from repro.serving import (LMSpec, build_serving_flow, make_request,
+                           swapped_flow)
 
 
 def main():
-    cfg = registry.get("qwen3-1.7b").scaled_down()
-    model = Model(cfg)
-    params_v0 = model.init(jax.random.PRNGKey(0))
-    params_v1 = model.init(jax.random.PRNGKey(1))   # the "bug-fix" release
+    spec = LMSpec(vocab=32, n_heads=2, n_kv_heads=1, head_dim=4,
+                  n_layers=2, max_len=32)
+    flow = build_serving_flow(
+        spec=spec, n_slots=4, default_budget=8, seed=0, version=0,
+        elastic={"strategy": "slo", "queue_slo": 0.002, "max_cores": 4,
+                 "drain_horizon": 0.2})
 
-    eng = ServingEngine(cfg, params_v0, n_slots=4, max_len=48)
-    strat = DynamicAdaptation(max_cores=8, drain_horizon=1.0)
     rng = np.random.default_rng(0)
-
-    swapped = False
+    rid = 0
     t0 = time.time()
-    for tick in range(40):
-        # bursty arrivals
-        n = 3 if (tick // 10) % 2 == 0 else 0
-        for _ in range(n):
-            eng.submit(rng.integers(0, cfg.vocab_size, size=6),
-                       max_new_tokens=6)
-        for _ in range(3):
-            eng.step()
-        if tick == 20 and not swapped:
-            v = eng.update_params(params_v1, mode="sync")
-            print(f"[t={tick}] live model update -> version {v} "
-                  f"(zero requests dropped)")
-            swapped = True
-        if tick % 10 == 9:
-            obs = eng.observation(1.0, float(tick))
-            print(f"[t={tick}] queue={obs.queue_length} "
-                  f"rate={obs.input_rate:.1f}/s "
-                  f"-> strategy cores={strat.decide(obs)}")
-    eng.run(until_idle=True)
-    v0 = sum(1 for r in eng.responses if r.model_version == 0)
-    v1 = sum(1 for r in eng.responses if r.model_version >= 1)
-    print(f"served {len(eng.responses)} requests in {time.time()-t0:.1f}s: "
-          f"{v0} on v0, {v1} on v1; p50 latency "
-          f"{np.percentile([r.latency for r in eng.responses], 50):.3f}s")
+    with flow.session(sample_interval=0.05) as s:
+        for burst in range(4):
+            n = 6 if burst % 2 == 0 else 2          # bursty arrivals
+            for _ in range(n):
+                prompt = rng.integers(1, spec.vocab, size=4).tolist()
+                s.inject("sched", make_request(rid, prompt, max_new=8,
+                                               t_sub=time.time()))
+                rid += 1
+            time.sleep(0.25)
+            if burst == 1:
+                # let the first bursts answer on v0, then update live:
+                # any generation still in flight carries over on
+                # __floe_state__ and is tagged with the new version
+                deadline = time.time() + 60
+                while (len(s.coordinator.outputs) < rid
+                       and time.time() < deadline):
+                    time.sleep(0.02)
+                summary = s.apply(swapped_flow(flow, seed=1, version=1))
+                print(f"[burst={burst}] live model update -> swapped "
+                      f"{sorted(summary['swapped'])} (zero requests lost)")
+        responses = [m.payload for m in s.drain(timeout=120)
+                     if isinstance(m.payload, dict) and "rid" in m.payload]
+        decode_events = [e for e in s.events("elasticity")
+                         if e.get("flake") == "decode"]
+
+    v0 = sum(1 for r in responses if r["version"] == 0)
+    v1 = sum(1 for r in responses if r["version"] >= 1)
+    ttft = [r["t_first"] - r["t_sub"] for r in responses]
+    print(f"served {len(responses)}/{rid} requests in "
+          f"{time.time() - t0:.1f}s: {v0} on v0, {v1} on v1; "
+          f"p50 TTFT {np.percentile(ttft, 50):.3f}s; "
+          f"{len(decode_events)} decode scaling events")
+    assert len(responses) == rid, "lost requests across the hot-swap"
     assert v0 > 0 and v1 > 0
+    assert all(len(r["tokens"]) == int(r["n_new"]) for r in responses)
 
 
 if __name__ == "__main__":

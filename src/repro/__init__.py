@@ -37,7 +37,8 @@ from .core import Coordinator, FloeGraph
 # Fault-tolerance plane (recovery policies, chaos harness, DLQ)
 from .checkpoint import CheckpointCorruptError
 from .faults import (ChaosController, CheckpointPolicy, DeadLetter,
-                     FaultPlan, PelletCrashError, RecoveryPolicy, census)
+                     ExactlyOnceSink, FaultPlan, PelletCrashError,
+                     RecoveryPolicy, census)
 
 __all__ = [
     # session API
@@ -56,5 +57,5 @@ __all__ = [
     # fault tolerance
     "RecoveryPolicy", "CheckpointPolicy", "PelletCrashError",
     "FaultPlan", "ChaosController", "DeadLetter", "census",
-    "CheckpointCorruptError",
+    "CheckpointCorruptError", "ExactlyOnceSink",
 ]

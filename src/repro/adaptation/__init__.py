@@ -6,7 +6,7 @@ Session API — don't pay JAX's import cost until they touch mesh scaling.
 """
 from .strategies import (ALPHA, DynamicAdaptation, HybridAdaptation,
                          Observation, PelletHints, StaticLookahead, Strategy,
-                         static_allocation)
+                         TailLatencySLO, static_allocation)
 from .simulator import (SimPellet, SimResult, periodic_profile,
                         random_walk_profile, run_i1_experiment, simulate,
                         spiky_profile)
@@ -17,7 +17,8 @@ _ELASTIC = ("ElasticMeshManager", "ElasticServingScaler", "MeshPlan",
 
 __all__ = [
     "ALPHA", "DynamicAdaptation", "HybridAdaptation", "Observation",
-    "PelletHints", "StaticLookahead", "Strategy", "static_allocation",
+    "PelletHints", "StaticLookahead", "Strategy", "TailLatencySLO",
+    "static_allocation",
     "SimPellet", "SimResult", "periodic_profile", "random_walk_profile",
     "run_i1_experiment", "simulate", "spiky_profile",
     "AdaptationController",

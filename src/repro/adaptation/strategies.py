@@ -165,6 +165,60 @@ class DynamicAdaptation(Strategy):
         return obs.cores
 
 
+class TailLatencySLO(Strategy):
+    """Tail-percentile-driven scaling for latency-SLO stages (serving).
+
+    ``DynamicAdaptation`` keys off *average* service latency, which a
+    vectorized decode stage amortizes so well that bursts never breach the
+    rate/capacity band.  This strategy instead keys off the telemetry
+    plane's per-stage tail percentiles carried on ``Observation``
+    (``queue_wait_p95`` / ``service_p95``): scale OUT while the p95 queue
+    wait exceeds the declared SLO *and* there is live traffic (queued
+    messages or a nonzero arrival rate), scale IN only when demand decays
+    (the histograms are cumulative over a stage's lifetime, so the breach
+    signal never un-breaches — recency comes from the queue/rate gate,
+    and the deterministic scale-in is the idle quiesce to zero cores).
+    """
+
+    name = "slo"
+
+    def __init__(self, *, queue_slo: float = 0.1, max_cores: int = 64,
+                 threshold: float = 0.1, drain_horizon: float = 30.0,
+                 alpha: int = ALPHA):
+        if queue_slo <= 0:
+            raise ValueError("queue_slo must be > 0 seconds")
+        self.queue_slo = queue_slo      # p95 queue-wait budget (seconds)
+        self.max_cores = max_cores
+        self.threshold = threshold      # hysteresis band for scale-down
+        self.drain_horizon = drain_horizon
+        self.alpha = alpha
+
+    def decide(self, obs: Observation) -> int:
+        cores = min(obs.cores, self.max_cores)
+        demand = obs.input_rate + obs.queue_length / self.drain_horizon
+        if demand <= 0:
+            return 0  # idle and drained: quiesce (the scale-in event)
+        wait = max(obs.queue_wait_p95, 0.0)
+        if wait > self.queue_slo and (obs.queue_length > 0
+                                      or obs.input_rate > 0):
+            # breach with live backlog: close half the gap toward the
+            # allocation that would bring the tail inside the SLO if wait
+            # scaled inversely with replicas (the same geometric approach
+            # DynamicAdaptation uses for its rate gap)
+            needed = min(self.max_cores,
+                         max(cores + 1, math.ceil(cores * wait /
+                                                  self.queue_slo)))
+            step = max(1, math.ceil((needed - cores) / 2))
+            return min(cores + step, self.max_cores)
+        # no live breach: release a core only if the reduced allocation
+        # still sustains demand (DynamicAdaptation's hysteresis check)
+        if cores > 1 and obs.service_latency > 0:
+            cap_minus = (cores - 1) * self.alpha / obs.service_latency
+            if demand < cap_minus * (1 - self.threshold):
+                return cores - 1
+        return max(cores, 1)
+
+
 class HybridAdaptation(Strategy):
     """Static hints + dynamic fallback (§III; paper future work, built here).
 

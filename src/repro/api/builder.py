@@ -307,6 +307,42 @@ class Flow:
         self.stages[name] = handle
         return handle
 
+    def sink(self, name: str, fn: Optional[Callable[[Any], Any]] = None, *,
+             exactly_once: bool = False,
+             key: Optional[Callable[[Any], Any]] = None,
+             cores: int = 1) -> StageHandle:
+        """Declare a delivery sink stage.
+
+        ``fn(payload)`` is the delivery side effect (may be ``None`` to
+        just surface results via ``session.results()``); payloads pass
+        through to the session's collected outputs either way.
+
+        ``exactly_once=True`` wraps delivery in the journal-aware
+        :class:`~repro.faults.sinks.ExactlyOnceSink`: results are deduped
+        on ``key(payload)`` (default: ``payload["rid"]`` for dicts, else
+        the payload/lineage seq) and the seen-set lives in checkpointed
+        pellet state — so the fault plane's at-least-once journal replay
+        becomes exactly-once delivery end-to-end.  ``key`` is only
+        meaningful with ``exactly_once=True``.
+        """
+        from ..faults.sinks import ExactlyOnceSink
+        if exactly_once:
+            factory = lambda: ExactlyOnceSink(fn=fn, key=key)  # noqa: E731
+        else:
+            if key is not None:
+                raise CompositionError(
+                    f"sink {name!r}: key= requires exactly_once=True")
+
+            def _deliver(payload, _fn=fn):
+                if _fn is not None:
+                    _fn(payload)
+                return payload
+
+            from ..core.pellet import FnPellet
+            factory = lambda: FnPellet(_deliver, name=name,  # noqa: E731
+                                       sequential=True)
+        return self.pellet(name, factory, cores=cores)
+
     # -- edge declaration ------------------------------------------------------
     def _as_out(self, ep: Connectable) -> PortRef:
         if isinstance(ep, StageHandle):

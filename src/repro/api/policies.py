@@ -12,10 +12,11 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 from ..adaptation.strategies import (DynamicAdaptation, HybridAdaptation,
-                                     StaticLookahead, Strategy)
+                                     StaticLookahead, Strategy,
+                                     TailLatencySLO)
 from .errors import CompositionError
 
-STRATEGIES = ("dynamic", "static", "hybrid")
+STRATEGIES = ("dynamic", "static", "hybrid", "slo")
 
 
 @dataclass
@@ -41,6 +42,8 @@ class ElasticPolicy:
     hinted_rate: Optional[Callable[[float], float]] = None
     veer_threshold: float = 0.5
     latency_slo: float = 20.0
+    # tail-latency SLO (strategy="slo"): p95 queue-wait budget in seconds
+    queue_slo: float = 0.1
 
     def __post_init__(self) -> None:
         if self.strategy not in STRATEGIES:
@@ -70,6 +73,9 @@ class ElasticPolicy:
         if self.strategy == "hybrid" and self.hinted_rate is None:
             raise CompositionError(
                 "strategy='hybrid' needs hinted_rate (callable t -> msgs/s)")
+        if self.strategy == "slo" and self.queue_slo <= 0:
+            raise CompositionError(
+                "strategy='slo' needs queue_slo > 0 (p95 wait budget, s)")
 
     # -- compilation ---------------------------------------------------------
     def build_strategy(self) -> Strategy:
@@ -78,6 +84,11 @@ class ElasticPolicy:
             return DynamicAdaptation(threshold=self.threshold,
                                      max_cores=self.max_cores,
                                      drain_horizon=self.drain_horizon)
+        if self.strategy == "slo":
+            return TailLatencySLO(queue_slo=self.queue_slo,
+                                  max_cores=self.max_cores,
+                                  threshold=self.threshold,
+                                  drain_horizon=self.drain_horizon)
         static = StaticLookahead(self.latency, self.expected_window_messages,
                                  self.window_duration, self.epsilon)
         # StaticLookahead has no cap of its own; the declared ceiling

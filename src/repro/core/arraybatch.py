@@ -18,14 +18,26 @@ vectorized stage's ``compute_array``.  Anything that cannot consume a
 stacked array — window/tuple/pull pellets, non-array stages, sinks, custom
 split policies — sees the carrier unstacked back into ordinary per-row
 Messages, so semantics degrade to exactly the row-wise data path.
+
+**Multi-column batches**: ``array`` may also be a *dict of arrays* — every
+column shares the leading row dimension and is stacked/sliced column-wise.
+Row payloads are then dicts (``{"tokens": row_tokens, "slot": row_slot}``),
+which is how the serving plane carries a token id, a slot index, and a
+request id per decode row without falling back to the ragged path.
+Single-array batches behave exactly as before.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .message import Message
+
+
+def _leading(a: Any) -> int:
+    """Leading-dimension row count of one column (array-like or list)."""
+    return int(a.shape[0]) if hasattr(a, "shape") else len(a)
 
 
 class ArrayBatch:
@@ -33,11 +45,13 @@ class ArrayBatch:
 
     ``array`` is any array-like with a leading batch dimension (``np`` or
     ``jnp``; jax arrays pass through untouched so device residency is
-    preserved between stages).  ``seqs`` carries the upstream messages'
-    seq ids (lineage), ``keys`` the per-row routing keys — both optional.
-    The container is read-only by convention: stages return *new*
-    ArrayBatches (or raw arrays the engine re-wraps), never mutate one
-    in flight, since duplicate splits share a single instance.
+    preserved between stages) **or a dict of such arrays** sharing the
+    leading dimension — the multi-column form.  ``seqs`` carries the
+    upstream messages' seq ids (lineage), ``keys`` the per-row routing
+    keys — both optional.  The container is read-only by convention:
+    stages return *new* ArrayBatches (or raw arrays the engine re-wraps),
+    never mutate one in flight, since duplicate splits share a single
+    instance.
     """
 
     __slots__ = ("array", "seqs", "keys", "traces")
@@ -45,7 +59,17 @@ class ArrayBatch:
     def __init__(self, array: Any, *, seqs: Optional[Sequence[int]] = None,
                  keys: Optional[Sequence[Any]] = None,
                  traces: Optional[Sequence[Any]] = None):
-        n = int(array.shape[0]) if hasattr(array, "shape") else len(array)
+        if isinstance(array, dict):
+            if not array:
+                raise ValueError("ArrayBatch: empty column dict")
+            counts = {name: _leading(col) for name, col in array.items()}
+            n = next(iter(counts.values()))
+            if any(c != n for c in counts.values()):
+                raise ValueError(
+                    f"ArrayBatch: ragged columns {counts} (all columns "
+                    "must share the leading row dimension)")
+        else:
+            n = _leading(array)
         if seqs is not None and len(seqs) != n:
             raise ValueError(f"ArrayBatch: {len(seqs)} seqs for {n} rows")
         if keys is not None and len(keys) != n:
@@ -70,9 +94,18 @@ class ArrayBatch:
                   ) -> Optional["ArrayBatch"]:
         """Stack a list of per-message payloads into one array, or return
         ``None`` when the payloads are ragged / non-stackable (the engine
-        then falls back to the row-wise batched path)."""
+        then falls back to the row-wise batched path).
+
+        Dict payloads with one shared key set stack **column-wise** into a
+        multi-column batch; any ragged or non-array column declines the
+        whole batch (no partial stacking)."""
         if not payloads:
             return None
+        if isinstance(payloads[0], dict):
+            cols = cls._stack_columns(payloads)
+            if cols is None:
+                return None
+            return cls(cols, seqs=seqs, keys=keys, traces=traces)
         try:
             arr = np.asarray(payloads)
         except Exception:
@@ -81,26 +114,62 @@ class ArrayBatch:
             return None
         return cls(arr, seqs=seqs, keys=keys, traces=traces)
 
+    @staticmethod
+    def _stack_columns(payloads: Sequence[Any]) -> Optional[Dict[str, Any]]:
+        """Column-wise stack of dict payloads; None when not stackable."""
+        names = set(payloads[0])
+        if not names:
+            return None
+        if any(not isinstance(p, dict) or set(p) != names
+               for p in payloads):
+            return None   # heterogeneous rows: ragged, fall back
+        cols: Dict[str, Any] = {}
+        for name in payloads[0]:
+            try:
+                col = np.asarray([p[name] for p in payloads])
+            except Exception:
+                return None
+            if col.dtype == object:
+                return None
+            cols[name] = col
+        return cols
+
     # -- row access ----------------------------------------------------------
     def __len__(self) -> int:
         a = self.array
-        return int(a.shape[0]) if hasattr(a, "shape") else len(a)
+        if isinstance(a, dict):
+            return _leading(next(iter(a.values())))
+        return _leading(a)
+
+    @property
+    def columns(self) -> Optional[Dict[str, Any]]:
+        """The column dict of a multi-column batch (None for single-array)."""
+        return self.array if isinstance(self.array, dict) else None
 
     def take(self, rows: Sequence[int]) -> "ArrayBatch":
-        """Row-slice into a new ArrayBatch (ONE gather on the array)."""
+        """Row-slice into a new ArrayBatch (ONE gather per column)."""
         idx = np.asarray(rows, dtype=np.int64)
+        a = self.array
+        sliced = ({name: col[idx] for name, col in a.items()}
+                  if isinstance(a, dict) else a[idx])
         return ArrayBatch(
-            self.array[idx],
+            sliced,
             seqs=[self.seqs[i] for i in rows] if self.seqs else None,
             keys=[self.keys[i] for i in rows] if self.keys else None,
             traces=[self.traces[i] for i in rows] if self.traces else None)
+
+    def _row(self, i: int) -> Any:
+        a = self.array
+        if isinstance(a, dict):
+            return {name: col[i] for name, col in a.items()}
+        return a[i]
 
     def to_messages(self, port: str = "out") -> List[Message]:
         """Unstack into ordinary per-row Messages (the degradation path:
         non-array consumers, sink collection, custom split policies)."""
         out: List[Message] = []
         for i in range(len(self)):
-            m = Message(payload=self.array[i],
+            m = Message(payload=self._row(i),
                         key=self.keys[i] if self.keys else None,
                         port=port)
             if self.seqs:
@@ -115,7 +184,10 @@ class ArrayBatch:
         # device arrays are materialized on host so a carrier crossing a
         # pickling boundary (checkpoint file, cross-host transport) never
         # depends on the sender's device state
-        return {"array": np.asarray(self.array),
+        a = self.array
+        host = ({name: np.asarray(col) for name, col in a.items()}
+                if isinstance(a, dict) else np.asarray(a))
+        return {"array": host,
                 "seqs": self.seqs, "keys": self.keys,
                 "traces": self.traces}
 
@@ -126,6 +198,9 @@ class ArrayBatch:
         self.traces = state.get("traces")   # pre-telemetry pickles lack it
 
     def __repr__(self) -> str:  # pragma: no cover
-        shape = getattr(self.array, "shape", ("?",))
-        return (f"<ArrayBatch rows={len(self)} shape={tuple(shape)} "
+        if isinstance(self.array, dict):
+            shape = f"cols={sorted(map(str, self.array))}"
+        else:
+            shape = f"shape={tuple(getattr(self.array, 'shape', ('?',)))}"
+        return (f"<ArrayBatch rows={len(self)} {shape} "
                 f"keys={'yes' if self.keys else 'no'}>")

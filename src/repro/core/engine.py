@@ -628,6 +628,19 @@ class Flake:
             # internal state survives the update if stateful (§II.B)
             if not new_proto.stateful:
                 self.state = new_proto.initial_state()
+            # mutable *instance* state declared via ``__floe_state__``
+            # also survives, when the replacement declares the same
+            # attributes: a task update swaps *logic*, not in-flight
+            # state (e.g. a decode stage's KV/slot tables across a live
+            # weight hot-swap).  Replacements that declare different
+            # (or no) state attributes start fresh, as before.
+            carry = tuple(type(old).__floe_state__)
+            if carry and tuple(type(new_proto).__floe_state__) == carry:
+                try:
+                    new_proto.set_state(old.get_state())
+                except Exception as e:
+                    if self.engine is not None:
+                        self.engine._record_error(self.name, e)
         try:
             old.teardown()
         except Exception:
@@ -1274,6 +1287,19 @@ class Flake:
         if hasattr(res, "ndim") and getattr(res, "ndim", 0) >= 1 \
                 and res.shape[0] == rows \
                 and getattr(res, "dtype", None) != object:
+            out = ArrayBatch(res, seqs=ab.seqs, keys=ab.keys,
+                             traces=ab.traces)
+            if self._tele_array is not None:
+                self._tele_array.inc(rows)
+            return [Message(payload=out, port=proto.out_ports[0])]
+        if isinstance(res, dict) and res and all(
+                getattr(c, "ndim", 0) >= 1
+                and c.shape[0] == rows
+                and getattr(c, "dtype", None) != object
+                for c in res.values()):
+            # dict-of-arrays result: a multi-column carrier (every column
+            # row-aligned with the input) — the serving plane's decode rows
+            # carry token + slot id this way without ragged fallback
             out = ArrayBatch(res, seqs=ab.seqs, keys=ab.keys,
                              traces=ab.traces)
             if self._tele_array is not None:

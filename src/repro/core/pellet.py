@@ -135,7 +135,10 @@ class PushPellet(Pellet):
         ``ArrayBatch`` carrier (leading dim = rows) and expects back an
         array-like with the same leading dimension — which then travels
         downstream as one columnar value, no unstacking between
-        vectorized stages.  Returning ``NotImplemented`` (the default)
+        vectorized stages.  For a *multi-column* batch the argument is a
+        dict of arrays (every column row-aligned), and a dict-of-arrays
+        result with the same leading dimension becomes a multi-column
+        carrier.  Returning ``NotImplemented`` (the default)
         declines the fast path: the engine degrades that batch to the
         row-wise ``compute_batch`` machinery.  A per-row *list* result
         (the classic vectorized contract) is also accepted — it is

@@ -11,10 +11,11 @@ from .chaos import ChaosController, CrashRule, FaultPlan, FaultyWire
 from .plane import FaultPlane
 from .policy import (CheckpointPolicy, DeadLetter, DeadLetterQueue,
                      PelletCrashError, RecoveryPolicy, census)
+from .sinks import ExactlyOnceSink
 
 __all__ = [
     "CheckpointPolicy", "RecoveryPolicy", "PelletCrashError",
     "DeadLetter", "DeadLetterQueue", "census",
     "FaultPlan", "ChaosController", "CrashRule", "FaultyWire",
-    "FaultPlane",
+    "FaultPlane", "ExactlyOnceSink",
 ]

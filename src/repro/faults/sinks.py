@@ -1,0 +1,78 @@
+"""Journal-aware exactly-once sink adapter (upgrade of PR 7's guarantee).
+
+The fault plane's recovery contract is at-least-once: the source journal
+replays everything after the last consistent cut, so a sink can see the
+same logical result twice (once before the crash, once from replay).
+:class:`ExactlyOnceSink` closes the gap *end-to-end*: it dedupes on a
+per-result identity key and keeps the seen-set in the explicit pull-pellet
+state object — which the checkpointer captures **in the same consistent
+cut** that truncates the journal.  After a restore, every replayed
+duplicate finds its key already in the restored seen-set and is dropped;
+every genuinely-lost result is absent from it and is delivered.  That
+alignment of dedup state with the replay boundary is what "journal-aware"
+means — a sink deduping in a plain instance attribute would forget
+everything on restore and deliver the whole replay twice.
+
+Exposed as ``Flow.sink(name, fn, exactly_once=True, key=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from ..core.pellet import PullPellet
+
+
+class ExactlyOnceSink(PullPellet):
+    """Seq/key-deduping delivery sink.
+
+    ``key(payload)`` yields the dedup identity.  Default resolution order:
+    ``payload["rid"]`` for dict results (the serving plane's request id),
+    then the payload itself when hashable, then the message's lineage seq
+    (``parent_seq`` survives ArrayBatch stacking) or its own seq.
+
+    ``fn(payload)`` — the client-delivery side effect — runs once per
+    unique key; the deduped payload is also re-emitted so
+    ``session.results()`` sees the exactly-once stream.
+    """
+
+    in_ports = ("in",)
+    out_ports = ("out",)
+
+    def __init__(self, fn: Optional[Callable[[Any], Any]] = None,
+                 key: Optional[Callable[[Any], Any]] = None):
+        self.fn = fn
+        self.key = key
+
+    def initial_state(self) -> Dict[str, Any]:
+        return {"seen": set(), "delivered": 0, "duplicates": 0}
+
+    def _key(self, msg) -> Any:
+        p = msg.payload
+        if self.key is not None:
+            return self.key(p)
+        if isinstance(p, dict) and "rid" in p:
+            return ("rid", p["rid"])
+        try:
+            hash(p)
+            return ("payload", p)
+        except TypeError:
+            pass
+        if msg.meta and "parent_seq" in msg.meta:
+            return ("seq", msg.meta["parent_seq"])
+        return ("seq", msg.seq)
+
+    def compute(self, messages, emit: Callable[..., None],
+                state: Dict[str, Any]) -> Dict[str, Any]:
+        for m in messages:
+            if not m.is_data():
+                continue
+            k = self._key(m)
+            if k in state["seen"]:
+                state["duplicates"] += 1
+                continue
+            state["seen"].add(k)
+            state["delivered"] += 1
+            if self.fn is not None:
+                self.fn(m.payload)
+            emit(m.payload, key=m.key)
+        return state

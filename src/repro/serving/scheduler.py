@@ -1,0 +1,106 @@
+"""Admission + slot-lifecycle scheduler pellet (admit → splice → free).
+
+The serving plane's continuous batching is a *dataflow cycle*: this pull
+pellet owns the free-slot pool and the waiting queue, admits requests into
+decode slots, and learns of completions through a feedback edge from the
+decode stage (``decode["free"] >> sched["free"]``).  All of its state
+lives in the explicit pull-pellet state object, so it is checkpointed with
+the session's consistent cut and survives restore — the slot table the
+decode stage carries in ``__floe_state__`` and the pool here are cut at
+the same frozen instant, which is what keeps them mutually consistent.
+
+Payload protocol (plain dicts, distinguished by shape — message ports are
+not rewritten across edges, so content beats port sniffing here):
+
+* request:    ``{"rid": int, "prompt": [token ids], "max_new": int}``
+  (``serving.make_request`` builds one)
+* free note:  ``{"free_slot": int}`` from the decode stage
+* admission:  fixed-shape columns (rid/slot/tokens/length/budget/t_sub)
+  emitted toward prefill — column-stackable into ONE multi-column
+  ``ArrayBatch`` carrier by the array fast path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable
+
+import numpy as np
+
+from ..core.pellet import PullPellet
+
+
+def make_request(rid: int, prompt: Iterable[int], *, max_new: int = 8,
+                 t_sub: float = None) -> Dict[str, Any]:
+    """Build a serving request payload (``t_sub`` stamps submission time,
+    the anchor for TTFT/TPOT measurement)."""
+    return {"rid": int(rid), "prompt": [int(t) for t in prompt],
+            "max_new": int(max_new),
+            "t_sub": time.time() if t_sub is None else float(t_sub)}
+
+
+class Scheduler(PullPellet):
+    """Admission control: pad/clip prompts, assign decode slots, queue
+    overflow, recycle freed slots.  Exactly-once admission per ``rid``
+    (the ``seen`` set rides the checkpoint), so at-least-once journal
+    replay after a recovery does not double-admit a generation."""
+
+    in_ports = ("in", "free")
+    out_ports = ("out",)
+
+    def __init__(self, *, n_slots: int = 4, max_prompt: int = 8,
+                 max_len: int = 32, default_budget: int = 8):
+        self.n_slots = int(n_slots)
+        self.max_prompt = int(max_prompt)
+        self.max_len = int(max_len)
+        self.default_budget = int(default_budget)
+        if self.max_prompt >= self.max_len:
+            raise ValueError("max_prompt must leave room to decode "
+                             "(max_prompt < max_len)")
+
+    def initial_state(self) -> Dict[str, Any]:
+        return {"free": list(range(self.n_slots)),   # slot pool
+                "waiting": [],                       # admission queue (FIFO)
+                "seen": set(),                       # rids ever admitted
+                "admitted": 0, "freed": 0, "rejected": 0}
+
+    def compute(self, messages, emit: Callable[..., None],
+                state: Dict[str, Any]) -> Dict[str, Any]:
+        for m in messages:
+            if not m.is_data():
+                continue                      # landmarks pass the pool by
+            p = m.payload
+            if not isinstance(p, dict):
+                continue
+            if "free_slot" in p:
+                slot = int(p["free_slot"])
+                if 0 <= slot < self.n_slots and slot not in state["free"]:
+                    state["free"].append(slot)    # idempotent vs replay dups
+                    state["freed"] += 1
+            elif "prompt" in p:
+                rid = int(p.get("rid", -1))
+                if rid in state["seen"]:
+                    state["rejected"] += 1        # replayed admission: drop
+                    continue
+                state["seen"].add(rid)
+                state["waiting"].append(p)
+        while state["free"] and state["waiting"]:
+            req = state["waiting"].pop(0)
+            slot = state["free"].pop(0)
+            state["admitted"] += 1
+            emit(self._admission(req, slot))
+        return state
+
+    def _admission(self, req: Dict[str, Any], slot: int) -> Dict[str, Any]:
+        """Fixed-shape admission record: every field is a scalar or a
+        padded ``(max_prompt,)`` array so a drained admission batch stacks
+        column-wise into one multi-column ArrayBatch carrier."""
+        prompt = [int(t) for t in req["prompt"]][: self.max_prompt] or [0]
+        length = len(prompt)
+        tokens = np.zeros(self.max_prompt, dtype=np.int32)
+        tokens[:length] = prompt
+        budget = int(req.get("max_new", self.default_budget))
+        budget = max(1, min(budget, self.max_len - length - 1))
+        return {"rid": np.int32(req["rid"]), "slot": np.int32(slot),
+                "tokens": tokens, "length": np.int32(length),
+                "budget": np.int32(budget),
+                "t_sub": np.float64(req.get("t_sub", time.time()))}

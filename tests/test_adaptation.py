@@ -7,7 +7,7 @@ import pytest
 
 from repro.adaptation import (ALPHA, AdaptationController, DynamicAdaptation,
                               HybridAdaptation, Observation, PelletHints,
-                              StaticLookahead, divisor_floor,
+                              StaticLookahead, TailLatencySLO, divisor_floor,
                               static_allocation)
 from repro.adaptation.simulator import (DURATION, EPSILON, PERIOD,
                                         run_i1_experiment)
@@ -80,6 +80,66 @@ def test_dynamic_respects_max_cores():
     for _ in range(20):
         c = d.decide(obs(rate=1e6, cores=c))
     assert c == 8
+
+
+# ---------------------------------------------------------------------------
+# unit: tail-latency SLO strategy (queue-wait p95, PR 6 percentiles)
+# ---------------------------------------------------------------------------
+
+def slo_obs(wait, rate=1.0, queue=0, cores=1, latency=0.01):
+    return Observation(t=0.0, queue_length=queue, input_rate=rate,
+                       service_latency=latency, cores=cores,
+                       queue_wait_p95=wait)
+
+
+def test_slo_scales_out_on_breach_with_live_traffic():
+    s = TailLatencySLO(queue_slo=0.01, max_cores=8)
+    assert s.decide(slo_obs(wait=0.1, queue=3, cores=1)) > 1
+    assert s.decide(slo_obs(wait=0.1, queue=0, rate=5.0, cores=1)) > 1
+
+
+def test_slo_ignores_stale_breach_when_idle():
+    """The histograms are cumulative: a past breach with no queued work
+    and no arrivals must not keep scaling out."""
+    s = TailLatencySLO(queue_slo=0.01)
+    assert s.decide(slo_obs(wait=0.1, queue=0, rate=0.0, cores=3)) == 0
+
+
+def test_slo_holds_inside_budget():
+    s = TailLatencySLO(queue_slo=0.05)
+    # capacity at 0 fewer cores comfortably covers demand -> release one;
+    # at the floor, hold
+    assert s.decide(slo_obs(wait=0.01, rate=50.0, cores=1,
+                            latency=0.01)) == 1
+
+
+def test_slo_releases_with_hysteresis():
+    s = TailLatencySLO(queue_slo=0.05, threshold=0.1)
+    # 1 core * ALPHA / 0.01s = 400/s; demand 10/s << 360 -> shed to 1
+    assert s.decide(slo_obs(wait=0.01, rate=10.0, cores=2,
+                            latency=0.01)) == 1
+    # demand right at the reduced capacity -> hold (no flap)
+    assert s.decide(slo_obs(wait=0.01, rate=395.0, cores=2,
+                            latency=0.01)) == 2
+
+
+def test_slo_respects_max_cores_and_quiesces():
+    s = TailLatencySLO(queue_slo=0.001, max_cores=4)
+    c = 1
+    for _ in range(10):
+        c = s.decide(slo_obs(wait=1.0, queue=5, cores=c))
+    assert c == 4
+    assert s.decide(slo_obs(wait=1.0, queue=0, rate=0.0, cores=c)) == 0
+
+
+def test_slo_policy_compiles():
+    from repro.api.policies import ElasticPolicy
+    strat = ElasticPolicy(strategy="slo", queue_slo=0.02,
+                          max_cores=6).build_strategy()
+    assert isinstance(strat, TailLatencySLO)
+    assert strat.queue_slo == 0.02 and strat.max_cores == 6
+    with pytest.raises(Exception):
+        ElasticPolicy(strategy="slo", queue_slo=0.0)
 
 
 # ---------------------------------------------------------------------------
