@@ -60,6 +60,11 @@ class Observation:
     service_p95: float = 0.0
     service_p99: float = 0.0
     queue_wait_p95: float = 0.0
+    #: sliding-window p95 queue wait (telemetry ``tail_window_s`` frame
+    #: differencing).  The cumulative ``queue_wait_p95`` never un-breaches
+    #: after one bad burst; this one decays, so SLO strategies prefer it.
+    #: None when the producer predates the windowed signal (back-compat).
+    queue_wait_p95_window: Optional[float] = None
 
 
 @dataclass
@@ -171,13 +176,17 @@ class TailLatencySLO(Strategy):
     ``DynamicAdaptation`` keys off *average* service latency, which a
     vectorized decode stage amortizes so well that bursts never breach the
     rate/capacity band.  This strategy instead keys off the telemetry
-    plane's per-stage tail percentiles carried on ``Observation``
-    (``queue_wait_p95`` / ``service_p95``): scale OUT while the p95 queue
-    wait exceeds the declared SLO *and* there is live traffic (queued
-    messages or a nonzero arrival rate), scale IN only when demand decays
-    (the histograms are cumulative over a stage's lifetime, so the breach
-    signal never un-breaches — recency comes from the queue/rate gate,
-    and the deterministic scale-in is the idle quiesce to zero cores).
+    plane's per-stage tail percentiles carried on ``Observation``: scale
+    OUT while the p95 queue wait exceeds the declared SLO *and* there is
+    live traffic (queued messages or a nonzero arrival rate), scale IN
+    only when demand decays.
+
+    The breach signal prefers the *windowed* percentile
+    (``queue_wait_p95_window``, telemetry frame differencing over
+    ``tail_window_s``) so a past burst un-breaches once the recent tail
+    recovers; with producers that predate the windowed signal it falls
+    back to the cumulative ``queue_wait_p95``, where recency comes only
+    from the queue/rate gate.
     """
 
     name = "slo"
@@ -198,7 +207,9 @@ class TailLatencySLO(Strategy):
         demand = obs.input_rate + obs.queue_length / self.drain_horizon
         if demand <= 0:
             return 0  # idle and drained: quiesce (the scale-in event)
-        wait = max(obs.queue_wait_p95, 0.0)
+        wait = (obs.queue_wait_p95 if obs.queue_wait_p95_window is None
+                else obs.queue_wait_p95_window)
+        wait = max(wait, 0.0)
         if wait > self.queue_slo and (obs.queue_length > 0
                                       or obs.input_rate > 0):
             # breach with live backlog: close half the gap toward the

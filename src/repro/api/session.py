@@ -93,6 +93,7 @@ class Session:
         self.drain_timeout = drain_timeout
         self._coord: Optional[Coordinator] = None
         self._controller: Optional[AdaptationController] = None
+        self._owned_cluster = None   # spec-built manager torn down on close
         self._tx_lock = threading.Lock()
 
     # -- lifecycle -----------------------------------------------------------
@@ -103,9 +104,12 @@ class Session:
         cluster = self._cluster_opt
         if cluster is not None and not hasattr(cluster, "place_all"):
             # a ClusterSpec blueprint: build a fresh manager per open, so
-            # the same Flow+spec can be opened repeatedly
+            # the same Flow+spec can be opened repeatedly.  The session
+            # owns this manager and tears its backend down on close
+            # (worker processes, shared memory under backend="process")
             from ..cluster import ClusterManager
             cluster = ClusterManager(cluster)
+            self._owned_cluster = cluster
         coord = Coordinator(graph, containers=self._containers,
                             cluster=cluster,
                             channel_capacity=self._channel_capacity,
@@ -125,15 +129,22 @@ class Session:
         return self
 
     def close(self) -> None:
-        """Idempotent teardown: controller first, then the engine."""
+        """Idempotent teardown: controller first, then the engine, then
+        any session-owned cluster backend."""
         ctrl, self._controller = self._controller, None
         coord, self._coord = self._coord, None
+        owned = getattr(self, "_owned_cluster", None)
+        self._owned_cluster = None
         try:
             if ctrl is not None:
                 ctrl.stop()
         finally:
-            if coord is not None:
-                coord.stop()
+            try:
+                if coord is not None:
+                    coord.stop()
+            finally:
+                if owned is not None:
+                    owned.shutdown()
 
     def __enter__(self) -> "Session":
         # tolerate an already-open session so ``with Session.restore(...)``

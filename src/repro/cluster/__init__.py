@@ -1,19 +1,27 @@
-"""Cluster runtime: simulated-VM hosts, placement, transports, migration.
+"""Cluster runtime: hosts, placement, transports, migration, backends.
 
 Turns the single-process engine into a multi-host deployment target (paper
 §III container model + §V adaptation): ``ClusterSpec`` describes the VM
 fleet, ``ClusterManager`` owns acquisition/release/placement and the
 two-level elasticity actuation, ``Host`` is one provisioned VM, and the
 transports give cross-host edges realistic (and enforced-serializable)
-cost.  Entry point: ``flow.session(cluster=ClusterSpec(...))``.
+cost.  Hosts run on a pluggable execution backend: ``backend="sim"``
+(default, in-process modeling) or ``backend="process"`` (one spawned
+worker per host with zero-copy shared-memory array transport — see
+``repro.cluster.workers``).  Entry point:
+``flow.session(cluster=ClusterSpec(...))``.
 """
+from .backends import HostBackend, SimBackend, make_backend
 from .host import ClusterError, ClusterSpec, Host
 from .manager import ClusterManager
-from .transport import (LoopbackTransport, RemoteFlake, SerializingTransport,
-                        TransientTransportError, Transport, TransportError)
+from .transport import (LoopbackTransport, ProcessTransport, RemoteFlake,
+                        SerializingTransport, TransientTransportError,
+                        Transport, TransportError)
 
 __all__ = [
     "ClusterError", "ClusterSpec", "Host", "ClusterManager",
-    "Transport", "LoopbackTransport", "SerializingTransport", "RemoteFlake",
+    "Transport", "LoopbackTransport", "SerializingTransport",
+    "ProcessTransport", "RemoteFlake",
     "TransportError", "TransientTransportError",
+    "HostBackend", "SimBackend", "make_backend",
 ]

@@ -1,0 +1,59 @@
+"""Pluggable host execution backends.
+
+A :class:`~repro.cluster.host.Host` is bookkeeping (core budget, spin-up
+clock, placement target); the *backend* decides what actually executes a
+flake placed on it:
+
+* ``sim`` (default) — everything runs in the engine's own process, hosts
+  are modeling constructs.  Byte-for-byte the pre-backend behavior.
+* ``process`` — each host owns a spawned worker process; eligible flakes
+  offload their compute through :class:`~repro.cluster.workers.
+  FlakeRunner` (see ``repro.cluster.workers``).
+
+``ClusterManager`` talks only to this interface: ``attach``/``release``
+bracket a host's lifetime, ``runner`` hands the engine a per-flake
+offload seam (or ``None`` for local compute), ``shutdown`` tears down
+backend resources.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class HostBackend:
+    """Backend interface; the base class IS the simulated backend."""
+
+    name = "sim"
+    #: process-backed hosts need a handshake before first placement;
+    #: sim hosts with spinup_s=0 are ready instantly
+    blocking_spinup = False
+
+    def bind_stats(self, stats) -> None:
+        """Give the backend the transport stats ledger to account into."""
+
+    def attach(self, host) -> None:
+        """Provision backend resources for a newly created host."""
+
+    def release(self, host) -> None:
+        """Tear down backend resources when a host is released/failed."""
+
+    def runner(self, host, flake):
+        """Per-flake compute offload seam, or None for local compute."""
+        return None
+
+    def shutdown(self) -> None:
+        """Tear down every backend resource (idempotent)."""
+
+    def describe(self) -> dict:
+        return {"backend": self.name}
+
+
+class SimBackend(HostBackend):
+    """Hosts as modeling constructs in the engine process (the default)."""
+
+
+def make_backend(spec) -> HostBackend:
+    if spec.backend == "process":
+        from .workers.backend import ProcessBackend
+        return ProcessBackend(spec)
+    return SimBackend()

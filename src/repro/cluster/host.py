@@ -23,7 +23,8 @@ from typing import Any, Dict, Optional
 from ..core.engine import Container
 
 PLACEMENTS = ("bin_pack", "spread")
-TRANSPORTS = ("loopback", "serializing")
+TRANSPORTS = ("loopback", "serializing", "process")
+BACKENDS = ("sim", "process")
 
 
 class ClusterError(RuntimeError):
@@ -41,6 +42,14 @@ class ClusterSpec:
     stages' core hints, fewest VMs) or ``spread`` (load-aware: most free
     cores first, maximum headroom per stage).  ``transport`` selects the
     cross-host edge cost model (see ``cluster.transport``).
+
+    ``backend`` picks the execution substrate: ``"sim"`` (default) keeps
+    hosts as modeling constructs inside the engine process; ``"process"``
+    spawns one real worker process per host (``cluster.workers``) —
+    eligible flakes offload compute, arrays cross through a shared-memory
+    ring of ``shm_ring_bytes`` per direction, and ``ping()`` reports real
+    process liveness.  ``backend="process"`` defaults ``transport`` to
+    ``"process"`` (pickle-5 control channel + zero-copy array path).
     """
 
     hosts: int = 1
@@ -50,6 +59,8 @@ class ClusterSpec:
     teardown_s: float = 0.0
     placement: str = "bin_pack"
     transport: str = "loopback"
+    backend: str = "sim"
+    shm_ring_bytes: int = 8 << 20
     per_msg_delay_s: float = 0.0
     per_byte_delay_s: float = 0.0
     #: the idle reaper leaves an empty elastic host alone until it has
@@ -68,9 +79,21 @@ class ClusterSpec:
         if self.placement not in PLACEMENTS:
             raise ClusterError(
                 f"unknown placement {self.placement!r}; one of {PLACEMENTS}")
+        if self.backend not in BACKENDS:
+            raise ClusterError(
+                f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if self.backend == "process" and self.transport == "loopback":
+            # process hosts always cross a real boundary; the zero-copy
+            # process transport is the matching default
+            self.transport = "process"
         if self.transport not in TRANSPORTS:
             raise ClusterError(
                 f"unknown transport {self.transport!r}; one of {TRANSPORTS}")
+        if self.transport == "process" and self.backend != "process":
+            raise ClusterError(
+                'transport="process" requires backend="process"')
+        if int(self.shm_ring_bytes) < 4096:
+            raise ClusterError("shm_ring_bytes must be >= 4096")
         if self.spinup_s < 0 or self.teardown_s < 0 or self.idle_grace_s < 0:
             raise ClusterError(
                 "spinup_s/teardown_s/idle_grace_s must be >= 0")
@@ -96,12 +119,18 @@ class Host:
         #: host stops answering ``ping()`` and is excluded from placement,
         #: but keeps its container so recovery can audit + reclaim cores
         self.failed_at: Optional[float] = None
+        #: process-backend worker handle (None under the sim backend).
+        #: When set, readiness also requires the worker's startup
+        #: handshake and ``ping()`` reports real process liveness.
+        self.worker = None
 
     # -- lifecycle ----------------------------------------------------------
     @property
     def is_ready(self) -> bool:
-        return (self.released_at is None and self.failed_at is None
-                and time.time() >= self.ready_at)
+        if not (self.released_at is None and self.failed_at is None
+                and time.time() >= self.ready_at):
+            return False
+        return self.worker is None or self.worker.ready()
 
     @property
     def state(self) -> str:
@@ -112,15 +141,24 @@ class Host:
         return "ready" if self.is_ready else "provisioning"
 
     def fail(self) -> None:
-        """Mark the VM as crashed (it stops answering heartbeats)."""
+        """Mark the VM as crashed (it stops answering heartbeats).
+        On a process-backed host this hard-kills the worker, so the crash
+        is real, not bookkeeping."""
         if self.failed_at is None:
             self.failed_at = time.time()
+        if self.worker is not None:
+            self.worker.kill()
 
     def ping(self) -> bool:
         """Liveness probe: does the VM answer a heartbeat right now?
         A provisioning host answers (it exists, it is just not ready);
-        failed and released hosts do not."""
-        return self.released_at is None and self.failed_at is None
+        failed and released hosts do not.  A process-backed host answers
+        only while its worker process is actually alive — a killed
+        worker stops answering with NO bookkeeping involved, which is
+        what lets ``faults/`` failure detection work unmodified."""
+        if self.released_at is not None or self.failed_at is not None:
+            return False
+        return self.worker is None or self.worker.alive()
 
     def wait_ready(self, timeout: Optional[float] = None) -> None:
         """Block until the VM finishes spinning up (acquisition latency)."""
@@ -129,13 +167,16 @@ class Host:
         if self.failed_at is not None:
             raise ClusterError(f"host {self.name!r} has failed")
         remaining = self.ready_at - time.time()
-        if remaining <= 0:
-            return
-        if timeout is not None and remaining > timeout:
-            raise TimeoutError(
-                f"host {self.name!r} not ready within {timeout}s "
-                f"({remaining:.2f}s of spin-up remaining)")
-        time.sleep(remaining)
+        if remaining > 0:
+            if timeout is not None and remaining > timeout:
+                raise TimeoutError(
+                    f"host {self.name!r} not ready within {timeout}s "
+                    f"({remaining:.2f}s of spin-up remaining)")
+            time.sleep(remaining)
+        if self.worker is not None:
+            budget = None if timeout is None else \
+                max(0.0, timeout - max(remaining, 0.0))
+            self.worker.wait_ready(budget)   # the REAL spin-up latency
 
     def uptime(self, now: Optional[float] = None) -> float:
         """Billable seconds: acquisition to release (plus teardown if done)."""
@@ -150,12 +191,15 @@ class Host:
         return self.container.free_cores
 
     def describe(self) -> Dict[str, Any]:
-        return {"cores": self.cores,
-                "free_cores": self.free_cores,
-                "state": self.state,
-                "elastic": self.elastic,
-                "allocated": dict(self.container.allocated),
-                "uptime_s": round(self.uptime(), 6)}
+        d = {"cores": self.cores,
+             "free_cores": self.free_cores,
+             "state": self.state,
+             "elastic": self.elastic,
+             "allocated": dict(self.container.allocated),
+             "uptime_s": round(self.uptime(), 6)}
+        if self.worker is not None:
+            d["worker"] = self.worker.describe()
+        return d
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"<Host {self.name} {self.state} "

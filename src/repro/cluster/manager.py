@@ -24,9 +24,10 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Union
 
+from .backends import make_backend
 from .host import ClusterError, ClusterSpec, Host
-from .transport import LoopbackTransport, RemoteFlake, SerializingTransport, \
-    Transport
+from .transport import LoopbackTransport, ProcessTransport, RemoteFlake, \
+    SerializingTransport, Transport
 
 HostRef = Union[str, Host]
 
@@ -48,11 +49,19 @@ class ClusterManager:
         self._pending: Dict[str, str] = {}
         self.events: List[Dict[str, Any]] = []
         self._t0 = time.time()
-        if self.spec.transport == "serializing":
-            self.transport: Transport = SerializingTransport(
+        if self.spec.transport == "process":
+            self.transport: Transport = ProcessTransport(
+                self.spec.per_msg_delay_s, self.spec.per_byte_delay_s)
+        elif self.spec.transport == "serializing":
+            self.transport = SerializingTransport(
                 self.spec.per_msg_delay_s, self.spec.per_byte_delay_s)
         else:
             self.transport = LoopbackTransport()
+        #: execution substrate behind the Host bookkeeping (sim = in this
+        #: process, process = one spawned worker per host); shares the
+        #: transport's stats ledger so zero-copy traffic is accounted
+        self.backend = make_backend(self.spec)
+        self.backend.bind_stats(self.transport.stats)
         for _ in range(self.spec.hosts):
             self._new_host(elastic=False)
 
@@ -63,6 +72,7 @@ class ClusterManager:
             host = Host(name, self.spec.cores_per_host,
                         spinup_s=self.spec.spinup_s,
                         teardown_s=self.spec.teardown_s, elastic=elastic)
+            self.backend.attach(host)
             self.hosts[name] = host
             self._event("acquire", host=name, elastic=elastic,
                         spinup_s=host.ready_at - host.acquired_at)
@@ -110,6 +120,7 @@ class ClusterManager:
                     f"cannot release host {host.name!r}: scale-out of "
                     f"{sorted(waiting)} is pending on it")
             host.released_at = time.time()
+            self.backend.release(host)
             self._event("release", host=host.name,
                         uptime_s=round(host.uptime(), 6))
 
@@ -220,6 +231,18 @@ class ClusterManager:
                         f"cannot place on failed host {chosen.name!r}")
             else:
                 ready = [h for h in self.active_hosts() if h.is_ready]
+                if not ready and self.backend.blocking_spinup:
+                    # process-backed hosts need their startup handshake
+                    # before first placement; that latency is real, so
+                    # block for it here instead of failing the start
+                    deadline = time.time() + 60.0
+                    for h in self.active_hosts():
+                        try:
+                            h.wait_ready(timeout=max(
+                                0.0, deadline - time.time()))
+                        except Exception:
+                            continue
+                    ready = [h for h in self.active_hosts() if h.is_ready]
                 if not ready:
                     raise ClusterError("no ready hosts to place on")
                 fitting = [h for h in ready if h.free_cores >= cores]
@@ -269,6 +292,29 @@ class ClusterManager:
             self._placement[flake_name] = host.name
             self._pending.pop(flake_name, None)
             self._event("migrate", flake=flake_name, src=src, dst=host.name)
+
+    def bind_runners(self, flakes: Dict[str, Any]) -> None:
+        """(Re)bind each flake's remote compute seam to its host's backend.
+
+        Called by ``Coordinator.apply_wiring`` — the funnel every
+        placement-changing path ends in (start, transact, migrate, fault
+        recovery) — so a flake's offload target always tracks its host.
+        Under the sim backend every runner is None (pure local compute).
+        """
+        with self._lock:
+            placement = dict(self._placement)
+        for name, flake in flakes.items():
+            hostname = placement.get(name)
+            host = self.hosts.get(hostname) if hostname else None
+            flake.remote = self.backend.runner(host, flake)
+
+    def shutdown(self) -> None:
+        """Tear down backend resources (worker processes, shared memory).
+
+        Idempotent; the host fleet bookkeeping survives for ledger
+        inspection, but a process-backed fleet cannot be reused after.
+        """
+        self.backend.shutdown()
 
     def route_target(self, src: str, dst: str, flake):
         """Resolve the routing target for edge src->dst: direct reference
@@ -455,6 +501,7 @@ class ClusterManager:
                 "placement": dict(self._placement),
                 "pending_scaleout": dict(self._pending),
                 "transport": self.transport.describe(),
+                "backend": self.backend.describe(),
                 "host_seconds": round(self.host_seconds(), 6),
                 "utilization": round(self.utilization(), 4),
                 "events": list(self.events),

@@ -27,6 +27,7 @@ import pickle
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..core.arraybatch import ArrayBatch
 from ..core.message import Message
 from ..telemetry import TRACE_KEY
 
@@ -52,7 +53,14 @@ class TransportStats:
     def __init__(self) -> None:
         self.messages = 0
         self.batches = 0
+        #: pickled PAYLOAD bytes.  The zero-copy acceptance property of the
+        #: process backend is stated on this ledger: an ArrayBatch crossing
+        #: a process-host edge moves its array through shared memory
+        #: (``shm_bytes``) with only sidecars/framing on the control
+        #: channel (``control_bytes``) — ``bytes`` stays 0.
         self.bytes = 0
+        self.control_bytes = 0
+        self.shm_bytes = 0
         self.modeled_delay_s = 0.0
         self.retries = 0
         self.timeouts = 0
@@ -67,6 +75,8 @@ class TransportStats:
     def describe(self) -> Dict[str, Any]:
         return {"messages": self.messages, "batches": self.batches,
                 "bytes": self.bytes,
+                "control_bytes": self.control_bytes,
+                "shm_bytes": self.shm_bytes,
                 "modeled_delay_s": round(self.modeled_delay_s, 6),
                 "retries": self.retries, "timeouts": self.timeouts,
                 "duplicated": self.duplicated}
@@ -133,8 +143,15 @@ class SerializingTransport(Transport):
         #: attribute check per batch.
         self.fault_injector = None
 
-    def deliver(self, flake, port: str, msgs: List[Message]) -> None:
-        t_wire0 = time.time()
+    def _roundtrip(self, msgs: List[Message]) -> Tuple[List[Message], int]:
+        """Serialize the batch across the host boundary.
+
+        Returns the re-materialized messages plus the pickled payload byte
+        count.  Subclasses override this to change *how* payloads cross
+        (e.g. :class:`ProcessTransport`'s zero-copy carrier path) while
+        inheriting the delay model, retry/timeout policy, duplicate
+        delivery, and ``wire:`` trace spans unchanged.
+        """
         total = 0
         out: List[Message] = []
         for m in msgs:
@@ -143,6 +160,11 @@ class SerializingTransport(Transport):
             # same logical message (seq/lineage/flags preserved), payload
             # round-tripped so no object is shared across the host boundary
             out.append(dataclasses.replace(m, payload=pickle.loads(blob)))
+        return out, total
+
+    def deliver(self, flake, port: str, msgs: List[Message]) -> None:
+        t_wire0 = time.time()
+        out, total = self._roundtrip(msgs)
         delay = self.per_msg_delay_s * len(msgs) + \
             self.per_byte_delay_s * total
         inj = self.fault_injector
@@ -153,12 +175,15 @@ class SerializingTransport(Transport):
                 batch, extra = out, 0.0
                 if inj is not None:
                     batch, extra = inj.before_send(out)
-                    if self.send_timeout_s is not None and \
-                            delay + extra > self.send_timeout_s:
-                        self.stats.timeouts += 1
-                        raise TransientTransportError(
-                            f"send of {len(batch)} msgs exceeded "
-                            f"{self.send_timeout_s}s timeout")
+                # the per-send timeout applies whether or not a chaos
+                # injector is wired in — a configured send_timeout_s used
+                # to be silently ignored without one
+                if self.send_timeout_s is not None and \
+                        delay + extra > self.send_timeout_s:
+                    self.stats.timeouts += 1
+                    raise TransientTransportError(
+                        f"send of {len(batch)} msgs exceeded "
+                        f"{self.send_timeout_s}s timeout")
                 if delay + extra > 0.0:
                     time.sleep(delay + extra)
                 flake.enqueue_many(port, batch)
@@ -217,6 +242,54 @@ class SerializingTransport(Transport):
             tele.tracer.record_span(ctx, stage=f"wire:{flake.name}",
                                     host=host, rows=rows,
                                     t_start=t0, t_end=t1)
+
+
+class ProcessTransport(SerializingTransport):
+    """Cross-host transport for process-backed hosts (pickle protocol 5).
+
+    Control traffic (non-data messages, carrier sidecars) is pickled at
+    protocol 5 and counted as ``control_bytes``; ordinary data payloads
+    round-trip like :class:`SerializingTransport` (counted as ``bytes``).
+    :class:`~repro.core.arraybatch.ArrayBatch` carriers are the zero-copy
+    fast path: the stacked array is NOT pickled here — it crosses at
+    compute-offload time through the destination host worker's
+    shared-memory ring (``repro.cluster.workers``), so only the seq/key/
+    trace sidecar rides this channel.  The byte ledger makes that
+    assertable: a pure carrier stream leaves ``stats.bytes`` at 0.
+
+    Inherits the delay model, retry-with-backoff, per-send timeout,
+    duplicate delivery, and ``wire:`` trace spans from
+    :class:`SerializingTransport` unchanged.
+    """
+
+    kind = "process"
+
+    def _roundtrip(self, msgs: List[Message]) -> Tuple[List[Message], int]:
+        total = 0
+        out: List[Message] = []
+        for m in msgs:
+            p = m.payload
+            if isinstance(p, ArrayBatch):
+                # sidecars round-trip on the control channel; the array
+                # block crosses by reference (shared memory at offload)
+                sidecar = pickle.dumps((p.seqs, p.keys, p.traces),
+                                       protocol=5)
+                self.stats.control_bytes += len(sidecar)
+                seqs, keys, traces = pickle.loads(sidecar)
+                ab = ArrayBatch(p.array, seqs=seqs, keys=keys,
+                                traces=traces)
+                out.append(dataclasses.replace(m, payload=ab))
+            elif not m.is_data():
+                blob = pickle.dumps(p, protocol=5)
+                self.stats.control_bytes += len(blob)
+                out.append(dataclasses.replace(m,
+                                               payload=pickle.loads(blob)))
+            else:
+                blob = pickle.dumps(p, protocol=5)
+                total += len(blob)
+                out.append(dataclasses.replace(m,
+                                               payload=pickle.loads(blob)))
+        return out, total
 
 
 class RemoteFlake:

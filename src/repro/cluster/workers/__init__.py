@@ -1,0 +1,38 @@
+"""Process-backed worker hosts (real parallelism for the cluster tier).
+
+The simulated cluster (`backend="sim"`) models hosts as bookkeeping inside
+one GIL-bound process, which is why PR 3's benches showed a 2-host cluster
+*slower* than in-process: every "cross-host" edge still fights the same
+interpreter lock.  This package gives a `Host` an actual OS process:
+
+* :class:`WorkerHandle` — parent-side handle to one spawned worker
+  process (``multiprocessing.get_context("spawn")``): a duplex pipe for
+  pickle-protocol-5 control messages and two single-slot shared-memory
+  rings (:class:`ShmRing`) for array payloads.  The startup handshake is
+  the host's *real* spin-up latency, and process liveness is what
+  ``Host.ping()`` reports — so the fault plane's failure detection works
+  against a killed worker unmodified.
+* :class:`FlakeRunner` — the engine-facing compute offload: a flake
+  placed on a process-backed host ships its pellet factory once
+  (registration) and then executes ``msg``/``batch``/``abatch`` dispatches
+  in the worker.  The stacked array of an :class:`~repro.core.arraybatch.
+  ArrayBatch` crosses through the shared-memory ring — written once by
+  the sender, mapped (zero-copy) by the worker — while seq/key sidecars
+  ride the control channel; array bytes are never pickled.
+* :class:`ProcessBackend` — the :class:`~repro.cluster.backends.
+  HostBackend` implementation wiring the above into ``ClusterManager``.
+
+Pellets that cannot run remotely (stateful / ``__floe_state__`` carriers,
+window/tuple/pull triggering, non-picklable factories, chaos-armed or
+speculative stages) transparently keep computing in the parent — counted
+as fallbacks in ``describe()`` — so semantics never depend on the backend.
+"""
+from .backend import ProcessBackend
+from .handle import (FlakeRunner, RemoteComputeError, WorkerHandle,
+                     WorkerUnavailable)
+from .shm import ShmRing
+
+__all__ = [
+    "ProcessBackend", "WorkerHandle", "FlakeRunner", "ShmRing",
+    "RemoteComputeError", "WorkerUnavailable",
+]

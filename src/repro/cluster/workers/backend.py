@@ -1,0 +1,65 @@
+"""The process HostBackend: one spawned worker per host."""
+from __future__ import annotations
+
+import atexit
+from typing import Dict, Optional, Tuple
+
+from ..backends import HostBackend
+from .handle import FlakeRunner, WorkerHandle
+
+
+class ProcessBackend(HostBackend):
+    """Give each Host a real OS process (spawn context).
+
+    ``attach`` starts the worker (non-blocking — the handshake completes
+    in the background and IS the host's spin-up latency); ``release``
+    shuts it down; ``runner`` binds a flake to its host's worker, reusing
+    the existing runner across re-wirings so pellet registration
+    survives recomposition.
+    """
+
+    name = "process"
+    blocking_spinup = True
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.stats = None
+        self._runners: Dict[str, Tuple[WorkerHandle, FlakeRunner]] = {}
+        self._handles = []          # every worker ever spawned
+        atexit.register(self.shutdown)
+
+    def bind_stats(self, stats) -> None:
+        self.stats = stats
+
+    def attach(self, host) -> None:
+        host.worker = WorkerHandle(
+            host.name, ring_bytes=self.spec.shm_ring_bytes,
+            stats=self.stats)
+        self._handles.append(host.worker)
+
+    def release(self, host) -> None:
+        w = getattr(host, "worker", None)
+        if w is not None:
+            w.shutdown()
+
+    def runner(self, host, flake) -> Optional[FlakeRunner]:
+        if host is None:
+            return None
+        w = getattr(host, "worker", None)
+        if w is None or not w.alive():
+            return None
+        cached = self._runners.get(flake.name)
+        if cached is not None and cached[0] is w:
+            return cached[1]
+        r = FlakeRunner(w)
+        self._runners[flake.name] = (w, r)
+        return r
+
+    def shutdown(self) -> None:
+        self._runners.clear()
+        for w in self._handles:
+            w.shutdown()   # idempotent per handle
+
+    def describe(self) -> dict:
+        return {"backend": self.name,
+                "ring_bytes": self.spec.shm_ring_bytes}

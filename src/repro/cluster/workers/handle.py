@@ -1,0 +1,324 @@
+"""Parent-side handle to one worker process + the engine's compute runner.
+
+``WorkerHandle`` owns the process, the control pipe, and the two shm
+rings.  Every request is synchronous and serialized under one lock —
+that's what makes the single-slot rings safe (at most one transfer in
+flight per direction per worker) and what gives pipeline parallelism:
+while one flake's dispatch thread blocks in ``recv_bytes()`` (releasing
+the GIL), the worker computes and every *other* host's pipeline keeps
+moving.
+
+Byte accounting feeds the cluster transport's stats ledger:
+
+* pickled payload bytes (``rows`` requests, ring spills) → ``bytes``
+* request/response framing, registration, sidecars → ``control_bytes``
+* array blocks through the rings → ``shm_bytes``
+
+so "an ArrayBatch crossing a process-host edge pickles no array bytes"
+is an assertable property of the ledger, not a comment.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from .shm import ShmRing
+from .worker import PROTO, worker_main
+
+
+class WorkerUnavailable(RuntimeError):
+    """The worker process died or never finished its handshake."""
+
+
+class RemoteComputeError(RuntimeError):
+    """The worker refused or failed a request (registration, compute)."""
+
+
+class WorkerHandle:
+    """Own one spawned worker process and its transfer rings."""
+
+    def __init__(self, host_name: str, *, ring_bytes: int = 8 << 20,
+                 stats=None, spawn_timeout_s: float = 60.0,
+                 request_timeout_s: float = 120.0):
+        self.host_name = host_name
+        self.stats = stats
+        self.ring_bytes = int(ring_bytes)
+        self.spawn_timeout_s = spawn_timeout_s
+        self.request_timeout_s = request_timeout_s
+        self.tx = ShmRing(self.ring_bytes)   # parent → worker
+        self.rx = ShmRing(self.ring_bytes)   # worker → parent
+        ctx = mp.get_context("spawn")
+        parent_conn, child_conn = ctx.Pipe(duplex=True)
+        self._conn = parent_conn
+        self.proc = ctx.Process(
+            target=worker_main,
+            args=(child_conn, self.tx.name, self.rx.name, self.ring_bytes,
+                  host_name),
+            daemon=True, name=f"floe-worker-{host_name}")
+        self.spawned_at = time.time()
+        self.proc.start()
+        child_conn.close()
+        self._lock = threading.RLock()
+        self._hello: Optional[int] = None   # worker pid once handshaken
+        self._dead = False
+        self._closed = False
+        self.ready_at: Optional[float] = None
+        self.fallbacks = 0   # flakes that degraded to parent-local compute
+
+    # -- lifecycle -------------------------------------------------------
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid
+
+    def alive(self) -> bool:
+        """Real process liveness — what ``Host.ping()`` reports."""
+        return not self._dead and self.proc.is_alive()
+
+    def ready(self) -> bool:
+        """Handshake completed (non-blocking)."""
+        if self._hello is not None:
+            return True
+        if self._dead:
+            return False
+        if self._lock.acquire(blocking=False):
+            try:
+                self._poll_hello(0.0)
+            finally:
+                self._lock.release()
+        return self._hello is not None
+
+    def wait_ready(self, timeout: Optional[float] = None) -> None:
+        """Block until the startup handshake lands (real spin-up)."""
+        limit = self.spawn_timeout_s if timeout is None else timeout
+        with self._lock:
+            self._poll_hello(limit)
+        if self._hello is None:
+            raise TimeoutError(
+                f"worker for host {self.host_name!r} not ready after "
+                f"{limit:.1f}s")
+
+    def _poll_hello(self, timeout: float) -> None:
+        if self._hello is not None or self._dead:
+            return
+        deadline = time.time() + timeout
+        while True:
+            remaining = deadline - time.time()
+            try:
+                if self._conn.poll(max(remaining, 0.0)):
+                    msg = pickle.loads(self._conn.recv_bytes())
+                    if msg and msg[0] == "hello":
+                        self._hello = msg[1]
+                        self.ready_at = time.time()
+                    return
+            except (EOFError, OSError, BrokenPipeError):
+                self._dead = True
+                return
+            if remaining <= 0 or not self.proc.is_alive():
+                if not self.proc.is_alive():
+                    self._dead = True
+                return
+
+    def kill(self) -> None:
+        """Hard-kill the worker (SIGKILL) — simulates a host crash."""
+        self._dead = True
+        try:
+            self.proc.kill()
+        except Exception:
+            pass
+
+    def shutdown(self) -> None:
+        """Graceful stop + resource teardown (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        if not self._dead and self.proc.is_alive():
+            try:
+                with self._lock:
+                    self._conn.send_bytes(
+                        pickle.dumps(("shutdown",), protocol=PROTO))
+                    if self._conn.poll(2.0):
+                        self._conn.recv_bytes()
+            except Exception:
+                pass
+        self.proc.join(timeout=2.0)
+        if self.proc.is_alive():
+            self.kill()
+            self.proc.join(timeout=2.0)
+        self._dead = True
+        try:
+            self._conn.close()
+        except Exception:
+            pass
+        self.tx.close()
+        self.rx.close()
+
+    def describe(self) -> dict:
+        return {"pid": self.pid, "alive": self.alive(),
+                "ready": self.ready(), "fallbacks": self.fallbacks}
+
+    # -- request/response ------------------------------------------------
+    def _request_locked(self, blob: bytes) -> Any:
+        """Send one control blob, block for the reply.  Caller holds lock."""
+        if self._dead or self._closed:
+            raise WorkerUnavailable(
+                f"worker for host {self.host_name!r} is down")
+        self._poll_hello(self.spawn_timeout_s)
+        if self._hello is None:
+            raise WorkerUnavailable(
+                f"worker for host {self.host_name!r} never handshook")
+        try:
+            self._conn.send_bytes(blob)
+            deadline = time.time() + self.request_timeout_s
+            while not self._conn.poll(0.2):
+                if not self.proc.is_alive():
+                    raise WorkerUnavailable(
+                        f"worker for host {self.host_name!r} died "
+                        f"mid-request")
+                if time.time() > deadline:
+                    raise WorkerUnavailable(
+                        f"worker for host {self.host_name!r} request "
+                        f"timed out after {self.request_timeout_s:.0f}s")
+            reply_blob = self._conn.recv_bytes()
+        except WorkerUnavailable:
+            self._dead = True
+            raise
+        except (BrokenPipeError, EOFError, OSError) as e:
+            self._dead = True
+            raise WorkerUnavailable(
+                f"worker for host {self.host_name!r} connection lost: "
+                f"{e!r}") from e
+        if self.stats is not None:
+            self.stats.control_bytes += len(reply_blob)
+        return pickle.loads(reply_blob)
+
+    def register(self, name: str, factory) -> None:
+        """Ship a flake's pellet factory to the worker (pickled once).
+
+        Raises ``pickle.PicklingError``/``TypeError``/``AttributeError``
+        when the factory cannot cross a process boundary — the caller
+        degrades that flake to parent-local compute.
+        """
+        blob = pickle.dumps(("register", name, factory), protocol=PROTO)
+        with self._lock:
+            if self.stats is not None:
+                self.stats.control_bytes += len(blob)
+            rep = self._request_locked(blob)
+        if rep[0] != "ok":
+            raise RemoteComputeError(
+                f"register({name}) on host {self.host_name!r}: {rep[1]}")
+
+    def compute_rows(self, name: str,
+                     payloads: List[Any]) -> Tuple[list, Optional[str]]:
+        """Row-wise remote compute; payloads are pickled (protocol 5)."""
+        blob = pickle.dumps(("rows", name, payloads), protocol=PROTO)
+        with self._lock:
+            if self.stats is not None:
+                self.stats.bytes += len(blob)
+            rep = self._request_locked(blob)
+        if rep[0] == "rows":
+            return rep[1], rep[2]
+        raise RemoteComputeError(
+            f"rows({name}) on host {self.host_name!r}: {rep[1]}")
+
+    def compute_array(self, name: str, names: Optional[list],
+                      arrays: List[np.ndarray]) -> dict:
+        """Columnar remote compute through the shm rings.
+
+        Returns either ``{"kind": "array", "array": ndarray-or-dict,
+        "seqs": ..., "keys": ...}`` or ``{"kind": "rows", "results": [...],
+        "note": ..., "array_hit": bool}`` — ring mechanics (including
+        copying results out of the single slot before the next request
+        reuses it) are fully encapsulated here, under the request lock.
+        """
+        arrays = [np.ascontiguousarray(a) for a in arrays]
+        with self._lock:
+            if self.tx.fits(arrays):
+                specs = self.tx.write(arrays)
+                req = ("array", name, names, specs, None)
+                if self.stats is not None:
+                    self.stats.shm_bytes += sum(int(a.nbytes)
+                                                for a in arrays)
+            else:   # block larger than the ring: spill to pickled blobs
+                blobs = [pickle.dumps(a, protocol=PROTO) for a in arrays]
+                req = ("array", name, names, None, blobs)
+                if self.stats is not None:
+                    self.stats.bytes += sum(len(b) for b in blobs)
+            blob = pickle.dumps(req, protocol=PROTO)
+            if self.stats is not None:
+                self.stats.control_bytes += len(blob)
+            rep = self._request_locked(blob)
+            if rep[0] == "array":
+                _, onames, ospecs, oblobs, extra = rep
+                if ospecs is not None:
+                    cols = [self.rx.read(s) for s in ospecs]
+                    if self.stats is not None:
+                        self.stats.shm_bytes += sum(int(c.nbytes)
+                                                    for c in cols)
+                else:
+                    cols = [pickle.loads(b) for b in oblobs]
+                    if self.stats is not None:
+                        self.stats.bytes += sum(len(b) for b in oblobs)
+        if rep[0] == "array":
+            out = cols[0] if onames is None else dict(zip(onames, cols))
+            seqs = keys = None
+            if extra is not None:
+                seqs, keys = extra
+            return {"kind": "array", "array": out, "seqs": seqs,
+                    "keys": keys}
+        if rep[0] == "rows":
+            return {"kind": "rows", "results": rep[1], "note": rep[2],
+                    "array_hit": rep[3]}
+        raise RemoteComputeError(
+            f"array({name}) on host {self.host_name!r}: {rep[1]}")
+
+
+class FlakeRunner:
+    """The engine-facing offload seam for ONE flake on ONE worker.
+
+    Registration is lazy and keyed on ``(flake.version, id(factory))`` so
+    a hot-swapped pellet (``swap_pellet`` bumps the version) re-registers
+    automatically.  A factory that cannot pickle disables the runner —
+    the flake silently computes in the parent (counted as a fallback),
+    preserving semantics over placement.
+    """
+
+    def __init__(self, handle: WorkerHandle):
+        self.handle = handle
+        self._registered_key = None
+        self._disabled = False
+
+    def _ensure(self, flake) -> bool:
+        if self._disabled:
+            return False
+        key = (flake.version, id(flake.factory))
+        if self._registered_key == key:
+            return True
+        try:
+            self.handle.register(flake.name, flake.factory)
+        except (pickle.PicklingError, TypeError, AttributeError,
+                RemoteComputeError):
+            # factory can't cross the boundary (or blows up worker-side):
+            # this flake computes in the parent from now on
+            self._disabled = True
+            self.handle.fallbacks += 1
+            return False
+        self._registered_key = key
+        return True
+
+    def compute_rows(self, flake, payloads):
+        """None = not runnable remotely (caller computes locally)."""
+        if not self._ensure(flake):
+            return None
+        return self.handle.compute_rows(flake.name, payloads)
+
+    def compute_array(self, flake, ab):
+        """None = not runnable remotely (caller computes locally)."""
+        if not self._ensure(flake):
+            return None
+        meta, arrays = ab.to_buffers()
+        return self.handle.compute_array(flake.name, meta["names"], arrays)

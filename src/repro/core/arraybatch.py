@@ -179,6 +179,53 @@ class ArrayBatch:
             out.append(m)
         return out
 
+    # -- buffer-protocol export/import (zero-copy process transport) ----------
+    def to_buffers(self):
+        """Split into ``(meta, buffers)`` for out-of-band transfer.
+
+        ``buffers`` is the list of contiguous host column arrays (the
+        bytes a zero-copy transport ships through shared memory);
+        ``meta`` carries everything else — column names (None for the
+        single-array form), per-buffer (dtype, shape) specs, and the
+        seq/key/trace sidecars that ride the control channel.
+        """
+        a = self.array
+        if isinstance(a, dict):
+            names = list(a)
+            buffers = [np.ascontiguousarray(np.asarray(a[k]))
+                       for k in names]
+        else:
+            names = None
+            buffers = [np.ascontiguousarray(np.asarray(a))]
+        meta = {"names": names,
+                "specs": [(b.dtype.str, tuple(b.shape)) for b in buffers],
+                "seqs": self.seqs, "keys": self.keys,
+                "traces": self.traces}
+        return meta, buffers
+
+    @classmethod
+    def from_buffers(cls, meta, buffers) -> "ArrayBatch":
+        """Rebuild from :meth:`to_buffers` output.
+
+        ``buffers`` may be the exported arrays or any objects supporting
+        the buffer protocol (e.g. shared-memory views); mapping is
+        zero-copy — the resulting columns are read-only views over the
+        given buffers.
+        """
+        cols = []
+        for (dtype, shape), buf in zip(meta["specs"], buffers):
+            if isinstance(buf, np.ndarray) and buf.dtype.str == dtype \
+                    and tuple(buf.shape) == tuple(shape):
+                col = buf
+            else:
+                col = np.frombuffer(buf, dtype=np.dtype(dtype)).reshape(shape)
+                col.flags.writeable = False
+            cols.append(col)
+        names = meta["names"]
+        array = cols[0] if names is None else dict(zip(names, cols))
+        return cls(array, seqs=meta["seqs"], keys=meta["keys"],
+                   traces=meta["traces"])
+
     # -- serialization (checkpoints, SerializingTransport) -------------------
     def __getstate__(self):
         # device arrays are materialized on host so a carrier crossing a

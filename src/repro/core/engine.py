@@ -498,6 +498,10 @@ class Flake:
         self.heartbeat = 0.0
         #: armed chaos CrashRule (fault-injection harness), None in production
         self._chaos = None
+        #: remote compute seam (``cluster.workers.FlakeRunner``) bound by
+        #: ``Coordinator.apply_wiring`` when this flake's host runs on a
+        #: process backend; None = compute locally (the sim default)
+        self.remote = None
 
     # -- lifecycle -----------------------------------------------------------
     def activate(self) -> None:
@@ -1018,7 +1022,17 @@ class Flake:
         outputs: List[Message] = []
         seq_for_dedup = item.seq if isinstance(item, Message) else None
         try:
-            if kind == "msg":
+            handled = False
+            remote = self.remote
+            if remote is not None and kind in ("msg", "batch", "abatch") \
+                    and self._remote_eligible(proto):
+                res = self._remote_task(remote, proto, kind, item)
+                if res is not None:
+                    outputs = res
+                    handled = True
+            if handled:
+                pass
+            elif kind == "msg":
                 if seq_for_dedup is not None and self.speculative_timeout is not None:
                     with self._inflight_cond:
                         if seq_for_dedup in self._done_seqs:
@@ -1157,6 +1171,100 @@ class Flake:
         for ctx, rows in ctxs.values():
             tele.tracer.record_span(ctx, stage=self.name, host=host,
                                     rows=rows, t_start=t0, t_end=t1)
+
+    # -- remote compute offload (process-backed hosts) ------------------------
+    def _remote_eligible(self, proto: Pellet) -> bool:
+        """Only side-effect-contained dispatches offload to the host's
+        worker process: stateless push compute with no chaos arming and no
+        speculative re-execution.  Stateful pellets (``proto.stateful`` or
+        a ``__floe_state__`` carrier) keep their state in the parent where
+        checkpoints/migration capture it, so they compute locally
+        regardless of placement."""
+        return (self._chaos is None
+                and self.speculative_timeout is None
+                and not getattr(proto, "stateful", False)
+                and not getattr(proto, "__floe_state__", ()))
+
+    def _remote_task(self, remote, proto: Pellet, kind: str, item
+                     ) -> Optional[List[Message]]:
+        """Execute one dispatch in the flake's host worker process.
+
+        Returns None when the runner declines (e.g. a non-picklable
+        factory → permanent local fallback, semantics preserved).  Raises
+        on a dead worker, which lands in the task-error path exactly like
+        a pellet exception — the fault plane retries/dead-letters the
+        rows while failure detection reaps the host.
+        """
+        if kind == "msg":
+            reply = remote.compute_rows(self, [item.payload])
+            if reply is None:
+                return None
+            return self._wrap_remote_rows([item], *reply)
+        if kind == "batch":
+            if self.batch_array:
+                # the zero-copy columnar offload: stack once, ship the
+                # block through the worker's shared-memory ring
+                traces = None
+                if self._tele is not None and self._tele.tracer.active:
+                    traces = [m.meta.get(TRACE_KEY) if m.meta else None
+                              for m in item]
+                    if not any(t is not None for t in traces):
+                        traces = None
+                ab = ArrayBatch.try_stack([m.payload for m in item],
+                                          seqs=[m.seq for m in item],
+                                          keys=[m.key for m in item],
+                                          traces=traces)
+                if ab is not None:
+                    rep = remote.compute_array(self, ab)
+                    if rep is not None:
+                        return self._remote_array_outputs(
+                            proto, ab, rep, msgs=item)
+            reply = remote.compute_rows(self, [m.payload for m in item])
+            if reply is None:
+                return None
+            return self._wrap_remote_rows(item, *reply)
+        # kind == "abatch": an ArrayBatch carrier
+        ab = item.payload
+        rep = remote.compute_array(self, ab)
+        if rep is None:
+            return None
+        return self._remote_array_outputs(proto, ab, rep, port=item.port)
+
+    def _wrap_remote_rows(self, msgs: List[Message], wire: List[tuple],
+                          note: Optional[str]) -> List[Message]:
+        """Map the worker's ``("ok", v)`` / ``("err", repr)`` rows back
+        onto the engine's per-row error semantics — failed rows go through
+        ``faults.on_row_error`` (retry/dead-letter) like any
+        BatchItemError."""
+        if note is not None and self.engine is not None:
+            self.engine._record_error(
+                self.name, RuntimeError(f"remote batch error: {note}"))
+        results = [BatchItemError(RuntimeError(r[1])) if r[0] == "err"
+                   else r[1] for r in wire]
+        return self._wrap_results(msgs, results)
+
+    def _remote_array_outputs(self, proto: Pellet, ab: ArrayBatch,
+                              rep: dict, *,
+                              msgs: Optional[List[Message]] = None,
+                              port: str = "out") -> List[Message]:
+        """Normalize a worker's columnar reply into output messages."""
+        rows = len(ab)
+        if rep["kind"] == "array":
+            out = ArrayBatch(
+                rep["array"],
+                seqs=rep["seqs"] if rep["seqs"] is not None else ab.seqs,
+                keys=rep["keys"] if rep["keys"] is not None else ab.keys,
+                traces=ab.traces)
+            if len(out) != rows:
+                raise RuntimeError(
+                    f"remote compute_array returned {len(out)} rows "
+                    f"for {rows}")
+            if self._tele_array is not None:
+                self._tele_array.inc(rows)
+            return [Message(payload=out, port=proto.out_ports[0])]
+        if msgs is None:
+            msgs = ab.to_messages(port=port)
+        return self._wrap_remote_rows(msgs, rep["results"], rep["note"])
 
     def _batch_outputs(self, proto: Pellet,
                        item: List[Message]) -> List[Message]:
@@ -2594,6 +2702,14 @@ class Coordinator:
                 flake.stats.on_arrive()
                 next(iter(flake.inputs.values())).put(pending)
         self.graph = graph
+        # every placement-changing path (start, transact, migrate, fault
+        # recovery) funnels through here: rebind each flake's remote
+        # compute seam to its (possibly new) host's execution backend
+        cluster = self.cluster
+        if cluster is not None:
+            binder = getattr(cluster, "bind_runners", None)
+            if binder is not None:
+                binder(self.flakes)
 
     def _route_target(self, src: str, dst: str):
         """Destination for edge src->dst: the flake itself within one host,

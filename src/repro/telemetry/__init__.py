@@ -20,6 +20,9 @@ what the overhead guard benches against.
 """
 from __future__ import annotations
 
+import threading as _threading
+import time as _time
+from collections import deque as _deque
 from typing import Any, Dict, List, Optional, Tuple
 
 from .events import EventBus
@@ -54,12 +57,21 @@ class Telemetry:
     """
 
     def __init__(self, *, enabled: bool = True, trace_sample: float = 0.0,
-                 event_buffer: int = 4096, max_traces: int = 256):
+                 event_buffer: int = 4096, max_traces: int = 256,
+                 tail_window_s: float = 5.0):
         self.enabled = bool(enabled)
         self.registry = MetricsRegistry()
         self.events = EventBus(maxlen=event_buffer)
         self.tracer = Tracer(sample=trace_sample if self.enabled else 0.0,
                              max_traces=max_traces)
+        #: sliding-window length for the windowed tail percentiles
+        #: (``queue_wait_p95_window``): the per-stage histograms are
+        #: cumulative over a stage's lifetime, so SLO strategies gating on
+        #: the plain percentile see a breach that never un-breaches;
+        #: the windowed view covers roughly the last 1–2 windows
+        self.tail_window_s = float(tail_window_s)
+        self._qw_frames: Dict[str, Any] = {}
+        self._qw_lock = _threading.Lock()
 
         # -- pre-declared engine families (labels grabbed per flake) -------
         r = self.registry
@@ -176,16 +188,54 @@ class Telemetry:
 
     def stage_percentiles(self, stage: str) -> Dict[str, float]:
         """p50/p95/p99 service time + queue wait for one stage — the view
-        the adaptation controller feeds to percentile-aware strategies."""
+        the adaptation controller feeds to percentile-aware strategies.
+        ``queue_wait_p95`` is cumulative over the stage's lifetime;
+        ``queue_wait_p95_window`` covers only the recent sliding window
+        (what ``TailLatencySLO`` keys on, so a past breach un-breaches
+        once the tail recovers)."""
         svc = self.service_time.labels(stage=stage)
         qw = self.queue_wait.labels(stage=stage)
         return {"service_p50": svc.percentile(0.50),
                 "service_p95": svc.percentile(0.95),
                 "service_p99": svc.percentile(0.99),
-                "queue_wait_p95": qw.percentile(0.95)}
+                "queue_wait_p95": qw.percentile(0.95),
+                "queue_wait_p95_window":
+                    self.windowed_queue_wait_p95(stage)}
+
+    def windowed_queue_wait_p95(self, stage: str,
+                                now: Optional[float] = None) -> float:
+        """p95 queue wait over (roughly) the last 1–2 ``tail_window_s``.
+
+        Implemented as frame differencing on the cumulative histogram:
+        a two-frame deque of bucket snapshots is rotated every window, and
+        the percentile is computed over the count deltas since the older
+        frame.  Until the first frame ages past one window the cumulative
+        view is returned (best available signal at startup); a histogram
+        reset (migration/replace) rebases the frames."""
+        hist = self.queue_wait.labels(stage=stage)
+        if now is None:
+            now = _time.time()
+        with self._qw_lock:
+            frames = self._qw_frames.get(stage)
+            if frames is None:
+                frames = _deque(maxlen=2)
+                frames.append((now, hist.window_state()))
+                self._qw_frames[stage] = frames
+                return hist.percentile(0.95)
+            if now - frames[-1][0] >= self.tail_window_s:
+                frames.append((now, hist.window_state()))
+            base = frames[0][1]
+        p = hist.percentile_since(base, 0.95)
+        if p < 0.0:   # histogram reset since the baseline: rebase
+            with self._qw_lock:
+                self._qw_frames.pop(stage, None)
+            return self.windowed_queue_wait_p95(stage, now)
+        return p
 
     def reset_stage(self, stage: str) -> None:
         """Zero a stage's latency histograms (migration / replace: samples
         measured on the old core budget must not poison post-move views)."""
         self.service_time.labels(stage=stage).reset()
         self.queue_wait.labels(stage=stage).reset()
+        with self._qw_lock:
+            self._qw_frames.pop(stage, None)

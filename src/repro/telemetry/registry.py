@@ -139,6 +139,37 @@ class Histogram:
             cum += c
         return self.bounds[-1]
 
+    def window_state(self) -> Tuple[List[int], int]:
+        """An opaque baseline for :meth:`percentile_since` — the bucket
+        counts and total at this instant.  Cheap: one locked list copy."""
+        with self._lock:
+            return list(self.counts), self.total
+
+    def percentile_since(self, state: Tuple[List[int], int],
+                         q: float) -> float:
+        """The q-th percentile of observations filed AFTER ``state`` was
+        taken — a sliding-window percentile from a cumulative histogram,
+        computed over the per-bucket count deltas.
+
+        Returns 0.0 for an empty window and -1.0 when the deltas are
+        negative (the histogram was reset since the baseline — the caller
+        must rebase)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"percentile q must be in [0, 1], got {q}")
+        base_counts, base_total = state
+        with self._lock:
+            counts = list(self.counts)
+            total = self.total
+        delta_total = total - base_total
+        if delta_total < 0:
+            return -1.0
+        if delta_total == 0:
+            return 0.0
+        delta = [c - b for c, b in zip(counts, base_counts)]
+        if any(d < 0 for d in delta):
+            return -1.0
+        return self._pct_unlocked(delta, delta_total, q)
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             counts = list(self.counts)

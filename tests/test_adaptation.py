@@ -132,6 +132,26 @@ def test_slo_respects_max_cores_and_quiesces():
     assert s.decide(slo_obs(wait=1.0, queue=0, rate=0.0, cores=c)) == 0
 
 
+def test_slo_prefers_windowed_signal():
+    """When the producer carries the windowed p95, the strategy keys on
+    it: a stale cumulative breach with a recovered window scales IN, a
+    fresh windowed breach scales OUT, and a window-less legacy producer
+    falls back to the cumulative signal."""
+    import dataclasses
+    s = TailLatencySLO(queue_slo=0.01)
+    stale = dataclasses.replace(slo_obs(wait=0.5, queue=3, cores=2),
+                                queue_wait_p95_window=0.001)
+    assert s.decide(stale) <= 2              # no scale-out on old history
+    fresh = dataclasses.replace(slo_obs(wait=0.001, queue=3, cores=1),
+                                queue_wait_p95_window=0.5)
+    assert s.decide(fresh) > 1               # windowed breach drives out
+    assert s.decide(slo_obs(wait=0.5, queue=3, cores=1)) > 1   # legacy
+    # the rebase sentinel must never read as a breach (or crash)
+    sentinel = dataclasses.replace(slo_obs(wait=0.0, queue=3, cores=2),
+                                   queue_wait_p95_window=-1.0)
+    assert s.decide(sentinel) <= 2
+
+
 def test_slo_policy_compiles():
     from repro.api.policies import ElasticPolicy
     strat = ElasticPolicy(strategy="slo", queue_slo=0.02,

@@ -82,6 +82,65 @@ def test_histogram_reset_and_empty_percentile():
     assert h.snapshot()["count"] == 0 and h.percentile(0.5) == 0.0
 
 
+def test_histogram_windowed_percentile_since():
+    """Frame differencing: the delta percentile reflects only samples
+    observed after the snapshot, while the cumulative view stays
+    polluted by history — the whole point of the windowed tail signal."""
+    r = MetricsRegistry()
+    h = r.histogram("lat", "latency", ()).labels()
+    for _ in range(100):
+        h.observe(0.001)                    # fast era
+    base = h.window_state()
+    for _ in range(100):
+        h.observe(0.08)                     # slow era after the snapshot
+    assert h.percentile_since(base, 0.95) == pytest.approx(0.08, abs=0.03)
+    assert h.percentile(0.95) < h.percentile_since(base, 0.95)
+    # empty delta is defined (0.0), a reset since the baseline is the
+    # rebase sentinel (-1.0), never a bogus percentile
+    assert h.percentile_since(h.window_state(), 0.95) == 0.0
+    h.reset()
+    assert h.percentile_since(base, 0.95) == -1.0
+
+
+def test_windowed_queue_wait_unbreaches_after_burst():
+    """A burst breaches the cumulative p95 forever; the windowed view
+    decays once the recent tail recovers (what TailLatencySLO keys on)."""
+    tele = Telemetry(tail_window_s=0.01)
+    qw = tele.queue_wait.labels(stage="s")
+    for _ in range(50):
+        qw.observe(0.5)                     # the burst
+    first = tele.windowed_queue_wait_p95("s")
+    assert first > 0.1                      # startup: cumulative view
+    time.sleep(0.02)
+    tele.windowed_queue_wait_p95("s")       # rotate a frame past the burst
+    time.sleep(0.02)
+    for _ in range(200):
+        qw.observe(0.001)                   # recovered tail
+    w = tele.windowed_queue_wait_p95("s")
+    assert w < 0.1                          # windowed signal un-breached
+    assert qw.percentile(0.95) > 0.1        # cumulative never does
+    assert tele.stage_percentiles("s")["queue_wait_p95_window"] == \
+        pytest.approx(w, rel=0.5)
+
+
+def test_windowed_queue_wait_rebases_on_histogram_reset():
+    """A reset under the frames (migration/replace without reset_stage)
+    must rebase, not emit the -1.0 sentinel to strategies."""
+    tele = Telemetry(tail_window_s=0.01)
+    qw = tele.queue_wait.labels(stage="s")
+    for _ in range(10):
+        qw.observe(0.2)
+    tele.windowed_queue_wait_p95("s")
+    qw.reset()                              # frames now ahead of the counts
+    time.sleep(0.02)
+    for _ in range(10):
+        qw.observe(0.001)
+    assert tele.windowed_queue_wait_p95("s") >= 0.0
+    # reset_stage drops the frames with the counts
+    tele.reset_stage("s")
+    assert tele.windowed_queue_wait_p95("s") == 0.0
+
+
 def test_percentile_overflow_bucket_floors_to_last_bound():
     h = MetricsRegistry().histogram("x", "h", ()).labels()
     h.observe(99.0, n=4)                  # beyond every finite bucket

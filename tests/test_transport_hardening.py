@@ -1,0 +1,193 @@
+"""Transport hardening: retry/timeout/serialization edge cases, stated
+directly against the transport surface (a fake destination flake) so the
+policies are pinned independent of engine scheduling.
+
+Covers the regression where ``send_timeout_s`` was silently ignored
+unless a chaos injector happened to be wired in, exercised over BOTH
+cross-host transports (``serializing`` and ``process``) since the
+process transport inherits the whole retry/timeout/duplicate policy.
+"""
+import pickle
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.arraybatch import ArrayBatch
+from repro.core.message import Message, landmark
+from repro.cluster.transport import (ProcessTransport, SerializingTransport,
+                                     TransientTransportError, TransportError)
+
+TRANSPORTS = [SerializingTransport, ProcessTransport]
+
+
+class _Sink:
+    """Fake destination flake: records every delivered batch."""
+
+    name = "sink"
+
+    def __init__(self):
+        self.batches = []
+
+    def enqueue_many(self, port, msgs):
+        self.batches.append((port, list(msgs)))
+
+    def messages(self):
+        return [m for _, batch in self.batches for m in batch]
+
+
+class _Injector:
+    """Scripted FaultyWire stand-in: fail the first ``fail_n`` attempts
+    with a transient error, optionally duplicate after success."""
+
+    def __init__(self, fail_n=0, extra_delay_s=0.0, duplicate=False):
+        self.fail_n = fail_n
+        self.extra_delay_s = extra_delay_s
+        self.duplicate = duplicate
+        self.attempts = 0
+
+    def before_send(self, msgs):
+        self.attempts += 1
+        if self.attempts <= self.fail_n:
+            raise TransientTransportError("injected drop")
+        return msgs, self.extra_delay_s
+
+    def should_duplicate(self):
+        return self.duplicate
+
+
+# -- the send_timeout_s regression -------------------------------------------
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_send_timeout_applies_without_injector(cls):
+    """A modeled delay above ``send_timeout_s`` must time out even with NO
+    fault injector wired in (the timeout check used to live inside the
+    injector branch, making the knob a no-op on clean wires)."""
+    t = cls(per_msg_delay_s=0.5, send_timeout_s=0.05,
+            max_retries=2, retry_backoff_s=0.0)
+    assert t.fault_injector is None
+    sink = _Sink()
+    t0 = time.time()
+    with pytest.raises(TransportError) as ei:
+        t.deliver(sink, "in", [Message(payload=1)])
+    assert not isinstance(ei.value, TransientTransportError)
+    # timed out, not slept: the 0.5 s modeled delay was never paid
+    assert time.time() - t0 < 0.4
+    assert sink.batches == []                    # nothing delivered
+    assert t.stats.timeouts == 3                 # every attempt timed out
+    assert t.stats.retries == 2                  # max_retries retries burnt
+    assert t.stats.messages == 0
+
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_send_timeout_counts_injected_delay(cls):
+    """Injected extra delay participates in the timeout budget."""
+    t = cls(send_timeout_s=0.05, max_retries=0, retry_backoff_s=0.0)
+    t.fault_injector = _Injector(extra_delay_s=0.2)
+    sink = _Sink()
+    with pytest.raises(TransportError):
+        t.deliver(sink, "in", [Message(payload=1)])
+    assert t.stats.timeouts == 1 and sink.batches == []
+
+
+# -- retry policy ------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_retry_exhaustion_is_permanent_error(cls):
+    t = cls(max_retries=3, retry_backoff_s=0.0)
+    t.fault_injector = _Injector(fail_n=10**6)   # never heals
+    sink = _Sink()
+    with pytest.raises(TransportError) as ei:
+        t.deliver(sink, "in", [Message(payload="x")])
+    assert "after 4 attempts" in str(ei.value)
+    assert t.stats.retries == 3
+    assert sink.batches == [] and t.stats.messages == 0
+
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_transient_failures_heal_within_budget(cls):
+    t = cls(max_retries=3, retry_backoff_s=0.0)
+    t.fault_injector = _Injector(fail_n=2)       # third attempt succeeds
+    sink = _Sink()
+    t.deliver(sink, "in", [Message(payload="x"), Message(payload="y")])
+    assert [m.payload for m in sink.messages()] == ["x", "y"]
+    assert t.stats.retries == 2 and t.stats.messages == 2
+
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_duplicate_delivery_counted(cls):
+    t = cls()
+    t.fault_injector = _Injector(duplicate=True)
+    sink = _Sink()
+    t.deliver(sink, "in", [Message(payload=7, seq=42)])
+    msgs = sink.messages()
+    assert [m.payload for m in msgs] == [7, 7]
+    assert msgs[0].seq == msgs[1].seq == 42      # same logical message
+    assert msgs[0] is not msgs[1]
+    assert t.stats.duplicated == 1
+
+
+# -- serialization enforcement ----------------------------------------------
+
+@pytest.mark.parametrize("cls", TRANSPORTS, ids=lambda c: c.kind)
+def test_non_picklable_payload_fails_at_sender(cls):
+    """Serialization is enforced before anything is enqueued: a payload
+    that cannot pickle delivers NOTHING (no partial batch)."""
+    t = cls()
+    sink = _Sink()
+    bad = [Message(payload="fine"), Message(payload=lambda: 1)]
+    with pytest.raises((pickle.PicklingError, TypeError, AttributeError)):
+        t.deliver(sink, "in", bad)
+    assert sink.batches == [] and t.stats.messages == 0
+
+
+def test_serializing_breaks_reference_sharing():
+    t = SerializingTransport()
+    sink = _Sink()
+    payload = {"a": [1, 2]}
+    t.deliver(sink, "in", [Message(payload=payload)])
+    (got,) = sink.messages()
+    assert got.payload == payload and got.payload is not payload
+    assert t.stats.bytes > 0
+
+
+# -- the process transport's zero-copy carrier path --------------------------
+
+def test_process_carrier_rides_control_channel_only():
+    """An ArrayBatch carrier crossing the process wire pickles ONLY its
+    seq/key/trace sidecar: the array object passes by reference (it
+    crosses for real via shared memory at compute-offload time), so the
+    payload-bytes ledger stays at zero."""
+    t = ProcessTransport()
+    sink = _Sink()
+    arr = np.arange(4096.0).reshape(64, 64)
+    ab = ArrayBatch(arr, seqs=list(range(64)), keys=None)
+    t.deliver(sink, "in", [Message(payload=ab)])
+    (got,) = sink.messages()
+    assert isinstance(got.payload, ArrayBatch)
+    assert got.payload.array is arr              # no array copy, no pickle
+    assert got.payload.seqs == list(range(64))
+    assert got.payload is not ab                 # sidecars round-tripped
+    assert t.stats.bytes == 0
+    assert t.stats.control_bytes > 0
+    assert t.stats.messages == 1
+
+
+def test_process_control_messages_counted_as_control():
+    t = ProcessTransport()
+    sink = _Sink()
+    t.deliver(sink, "in", [landmark("flush")])
+    assert t.stats.bytes == 0 and t.stats.control_bytes > 0
+    assert sink.messages()[0].landmark
+
+
+def test_process_data_rows_still_serialized():
+    """Plain (non-carrier) payloads on the process wire round-trip through
+    pickle exactly like the serializing transport — counted as ``bytes``."""
+    t = ProcessTransport()
+    sink = _Sink()
+    payload = {"k": 3}
+    t.deliver(sink, "in", [Message(payload=payload)])
+    (got,) = sink.messages()
+    assert got.payload == payload and got.payload is not payload
+    assert t.stats.bytes > 0
