@@ -1,0 +1,38 @@
+"""floe-lint: the static-analysis plane.
+
+The engine's correctness leans on conventions no type checker sees —
+lock acquisition order across 30+ mutexes, which lock guards which
+attribute, dataflow-graph shape rules (landmark alignment vs cycles,
+exactly-once keys, the array fast path), and pellet contracts that only
+fail at checkpoint or offload time.  This package turns those
+conventions into machine-checked rules:
+
+* ``locks``    — lock-order graph + cycle detection (FL001–FL004)
+* ``guards``   — ``# guarded-by:`` / ``# requires-lock:`` checking
+  (FL101–FL103)
+* ``pellets``  — pellet contracts: array path fallbacks,
+  ``__floe_state__`` picklability (FL301–FL305)
+* ``flowlint`` — dataflow-graph lint, runtime (``Flow.lint()``) and
+  static over ``examples/`` (FL201–FL207)
+* ``waivers``  — reviewed, justified suppressions (``analysis/
+  waivers.toml``); stale waivers are findings themselves (FL901)
+* ``cli``      — ``python -m repro.analysis src/repro tests examples
+  [--strict]``, the CI gate
+"""
+from .findings import Finding, RULES, SEVERITIES, gating, sort_findings
+from .guards import GuardedByChecker, analyze_guards
+from .locks import LockOrderAnalyzer, analyze_lock_order
+from .pellets import PelletContractChecker, analyze_pellets
+from .flowlint import lint_flow, lint_example_file, analyze_examples
+from .waivers import Waiver, apply_waivers, load_waivers
+from .cli import main, run
+
+__all__ = [
+    "Finding", "RULES", "SEVERITIES", "gating", "sort_findings",
+    "GuardedByChecker", "analyze_guards",
+    "LockOrderAnalyzer", "analyze_lock_order",
+    "PelletContractChecker", "analyze_pellets",
+    "lint_flow", "lint_example_file", "analyze_examples",
+    "Waiver", "apply_waivers", "load_waivers",
+    "main", "run",
+]

@@ -1,0 +1,343 @@
+"""Shared AST plumbing for the floe-lint analyzers.
+
+One parse per source file (:class:`SourceModule`), one pass to index
+classes/functions (:class:`CodeIndex`), and one registry of every lock
+object the codebase constructs (:class:`LockRegistry`) — the analyzers
+(lock order, guarded-by, pellet contracts) are thin walks over these.
+
+Lock identity is class-scoped: ``self._lock`` inside ``Channel`` is the
+node ``Channel._lock``, distinct from ``FlakeStats._lock``.  A
+``threading.Condition(self._x)`` shares its underlying lock, so the
+registry canonicalizes it to the alias target — ``with self._not_full:``
+counts as holding ``Channel._lock``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+#: constructors whose result is a mutex-like object we track
+LOCK_CTORS = {"Lock": "lock", "RLock": "rlock", "Condition": "condition"}
+
+GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+REQUIRES_LOCK_RE = re.compile(r"#\s*requires-lock:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+
+@dataclass
+class SourceModule:
+    path: str                   # as given (normally repo-relative)
+    text: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.lines:
+            self.lines = self.text.splitlines()
+
+    def line(self, n: int) -> str:
+        return self.lines[n - 1] if 1 <= n <= len(self.lines) else ""
+
+
+def collect_py_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in sorted(dirs)
+                           if not d.startswith(".")
+                           and d != "__pycache__"]
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+    # stable order, no duplicates
+    seen: Set[str] = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def load_modules(paths: Sequence[str]
+                 ) -> Tuple[List[SourceModule], List[Finding]]:
+    mods: List[SourceModule] = []
+    findings: List[Finding] = []
+    for f in collect_py_files(paths):
+        try:
+            with open(f, "r", encoding="utf-8") as fh:
+                text = fh.read()
+            mods.append(SourceModule(f, text, ast.parse(text, filename=f)))
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            findings.append(Finding(
+                "FL000", "warning", f,
+                getattr(e, "lineno", 0) or 0,
+                f"failed to parse: {e.__class__.__name__}: {e}"))
+    return mods, findings
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: SourceModule
+    node: ast.ClassDef
+    bases: Tuple[str, ...]                      # textual base names
+    methods: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                               # "Class.meth" | "func"
+    module: SourceModule
+    node: ast.FunctionDef
+    cls: Optional[ClassInfo] = None
+
+
+def _base_name(b: ast.expr) -> str:
+    if isinstance(b, ast.Name):
+        return b.id
+    if isinstance(b, ast.Attribute):
+        return b.attr
+    return ""
+
+
+class CodeIndex:
+    """Classes and functions across a set of modules, name-addressable."""
+
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.modules = list(modules)
+        self.classes: Dict[str, List[ClassInfo]] = {}
+        self.module_funcs: Dict[str, List[FuncInfo]] = {}
+        #: method name -> FuncInfos across all classes (cross-object calls)
+        self.methods_by_name: Dict[str, List[FuncInfo]] = {}
+        self.functions: List[FuncInfo] = []
+        for mod in self.modules:
+            for node in mod.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    ci = ClassInfo(node.name, mod, node,
+                                   tuple(_base_name(b) for b in node.bases))
+                    for item in node.body:
+                        if isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                            ci.methods[item.name] = item  # type: ignore
+                            fi = FuncInfo(f"{node.name}.{item.name}",
+                                          mod, item, ci)  # type: ignore
+                            self.functions.append(fi)
+                            self.methods_by_name.setdefault(
+                                item.name, []).append(fi)
+                    self.classes.setdefault(node.name, []).append(ci)
+                elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fi = FuncInfo(node.name, mod, node)  # type: ignore
+                    self.functions.append(fi)
+                    self.module_funcs.setdefault(mod.path, []).append(fi)
+
+    def func(self, cls: Optional[ClassInfo], name: str,
+             module: SourceModule) -> List[FuncInfo]:
+        """Resolve a call target: ``self.name()`` (cls given) or a bare
+        ``name()`` (module function), following same-index base classes."""
+        if cls is not None:
+            seen: Set[str] = set()
+            frontier = [cls]
+            while frontier:
+                c = frontier.pop(0)
+                if c.name in seen:
+                    continue
+                seen.add(c.name)
+                if name in c.methods:
+                    return [FuncInfo(f"{c.name}.{name}", c.module,
+                                     c.methods[name], c)]
+                for b in c.bases:
+                    frontier.extend(self.classes.get(b, []))
+            return []
+        return [f for f in self.module_funcs.get(module.path, [])
+                if f.node.name == name]
+
+
+# ---------------------------------------------------------------------------
+# lock registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LockDecl:
+    cls: str
+    attr: str
+    kind: str                   # lock | rlock | condition
+    alias_of: Optional[str]     # attr of the lock a Condition wraps
+    file: str
+    line: int
+
+
+def _threading_aliases(mod: SourceModule) -> Tuple[Set[str], Set[str]]:
+    """(module aliases of ``threading``, names imported from it)."""
+    mod_names: Set[str] = set()
+    from_names: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "threading":
+                    mod_names.add(a.asname or "threading")
+        elif isinstance(node, ast.ImportFrom) and node.module == "threading":
+            for a in node.names:
+                if a.name in LOCK_CTORS:
+                    from_names.add(a.asname or a.name)
+    return mod_names, from_names
+
+
+def _lock_ctor(call: ast.expr, mod_names: Set[str],
+               from_names: Set[str]) -> Optional[str]:
+    """Return the lock kind if ``call`` constructs one, else None."""
+    if not isinstance(call, ast.Call):
+        return None
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr in LOCK_CTORS and \
+            isinstance(f.value, ast.Name) and f.value.id in mod_names:
+        return LOCK_CTORS[f.attr]
+    if isinstance(f, ast.Name) and f.id in from_names and f.id in LOCK_CTORS:
+        return LOCK_CTORS[f.id]
+    return None
+
+
+class LockRegistry:
+    """Every ``self.X = threading.Lock()/RLock()/Condition(...)`` site.
+
+    ``canonical(cls, attr)`` resolves Condition aliases so all analyzers
+    agree on one node id per underlying mutex.
+    """
+
+    def __init__(self, index: CodeIndex):
+        self.decls: Dict[Tuple[str, str], LockDecl] = {}
+        #: attr name -> set of declaring classes (cross-object resolution)
+        self.by_attr: Dict[str, Set[str]] = {}
+        for fi in index.functions:
+            if fi.cls is None:
+                continue
+            mod_names, from_names = _threading_aliases(fi.module)
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Assign):
+                    continue
+                kind = _lock_ctor(node.value, mod_names, from_names)
+                if kind is None:
+                    continue
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) and \
+                            isinstance(tgt.value, ast.Name) and \
+                            tgt.value.id == "self":
+                        alias = None
+                        if kind == "condition" and node.value.args:
+                            a0 = node.value.args[0]
+                            if isinstance(a0, ast.Attribute) and \
+                                    isinstance(a0.value, ast.Name) and \
+                                    a0.value.id == "self":
+                                alias = a0.attr
+                        d = LockDecl(fi.cls.name, tgt.attr, kind, alias,
+                                     fi.module.path, node.lineno)
+                        self.decls[(fi.cls.name, tgt.attr)] = d
+                        self.by_attr.setdefault(tgt.attr, set()).add(
+                            fi.cls.name)
+
+    def canonical(self, cls: str, attr: str) -> Optional[Tuple[str, str]]:
+        """Alias-resolved (class, attr) if declared, else None."""
+        seen: Set[str] = set()
+        while True:
+            d = self.decls.get((cls, attr))
+            if d is None:
+                return None
+            if d.alias_of is None or d.alias_of in seen or \
+                    (cls, d.alias_of) not in self.decls:
+                return (cls, attr)
+            seen.add(attr)
+            attr = d.alias_of
+
+    def node_id(self, cls: str, attr: str) -> Optional[str]:
+        c = self.canonical(cls, attr)
+        return f"{c[0]}.{c[1]}" if c else None
+
+    def aliases_of(self, cls: str, attr: str) -> Set[str]:
+        """All attr names on ``cls`` that canonicalize to the same lock."""
+        target = self.canonical(cls, attr)
+        if target is None:
+            return {attr}
+        return {a for (c, a) in self.decls
+                if c == cls and self.canonical(c, a) == target}
+
+
+@dataclass
+class LockUse:
+    """A resolved lock expression at a ``with`` site."""
+    node_id: str                # "Class.attr" (canonical)
+    receiver: str               # unparse of the receiver ("self", "flake")
+    attr: str                   # attr as written (pre-alias)
+    via_self: bool
+    kind: str                   # lock | rlock | condition
+
+
+def resolve_lock_expr(expr: ast.expr, fn: FuncInfo,
+                      reg: LockRegistry) -> Optional[LockUse]:
+    """Map a with-item context expression to a registry lock, if any.
+
+    ``self.X`` resolves in the enclosing class (following same-index base
+    classes); ``other.X`` resolves only when ``X`` names a lock in exactly
+    one class — ambiguous attrs return None (FL004 reports them).
+    """
+    if not isinstance(expr, ast.Attribute):
+        return None
+    attr = expr.attr
+    recv = ast.unparse(expr.value)
+    if isinstance(expr.value, ast.Name) and expr.value.id == "self" and \
+            fn.cls is not None:
+        # walk base classes declared in the same index
+        frontier = [fn.cls.name]
+        seen: Set[str] = set()
+        index_classes = getattr(reg, "_classes", None)
+        while frontier:
+            cname = frontier.pop(0)
+            if cname in seen:
+                continue
+            seen.add(cname)
+            nid = reg.node_id(cname, attr)
+            if nid is not None:
+                d = reg.decls[reg.canonical(cname, attr)]  # type: ignore
+                return LockUse(nid, recv, attr, True, d.kind)
+            if index_classes:
+                for ci in index_classes.get(cname, []):
+                    frontier.extend(ci.bases)
+        return None
+    owners = reg.by_attr.get(attr, set())
+    if len(owners) == 1:
+        cls = next(iter(owners))
+        nid = reg.node_id(cls, attr)
+        if nid is not None:
+            d = reg.decls[reg.canonical(cls, attr)]  # type: ignore
+            return LockUse(nid, recv, attr, False, d.kind)
+    return None
+
+
+def bind_registry(reg: LockRegistry, index: CodeIndex) -> LockRegistry:
+    """Attach the class table so base-class lock lookups work."""
+    reg._classes = index.classes  # type: ignore[attr-defined]
+    return reg
+
+
+def iter_withs(fn_node: ast.AST) -> Iterator[ast.With]:
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.With):
+            yield node
+
+
+def guard_comments(mod: SourceModule, pattern: re.Pattern
+                   ) -> Dict[int, str]:
+    """lineno -> lock name for every matching directive comment."""
+    out: Dict[int, str] = {}
+    for i, line in enumerate(mod.lines, start=1):
+        m = pattern.search(line)
+        if m:
+            out[i] = m.group(1)
+    return out

@@ -1,0 +1,141 @@
+"""floe-lint CLI: ``python -m repro.analysis <paths...>``.
+
+Runs every analyzer over the given files/directories, applies the waiver
+file, prints findings (text or JSON), and — with ``--strict`` — exits
+non-zero when any unwaived error/warning remains.  ``note``-severity
+findings are advisory and never gate.
+
+Paths under an ``examples`` directory are linted as *flows* (static
+topology extraction); everything else gets the module analyzers (lock
+order, guarded-by, pellet contracts).  Paths containing a ``fixtures``
+component are skipped unless named explicitly as a root — fixture
+packages are intentionally-broken analyzer inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Optional, Sequence, Tuple
+
+from .astutil import collect_py_files, load_modules
+from .findings import RULES, Finding, gating, sort_findings, to_json
+from .flowlint import lint_example_file
+from .guards import GuardedByChecker
+from .locks import LockOrderAnalyzer
+from .pellets import PelletContractChecker
+from .waivers import (Waiver, apply_waivers, find_waiver_file, load_waivers)
+
+
+def _split_paths(paths: Sequence[str]) -> Tuple[List[str], List[str]]:
+    """(module files, example files); fixture dirs skipped unless rooted."""
+    module_files: List[str] = []
+    example_files: List[str] = []
+    for root in paths:
+        rooted_fixture = "fixtures" in root.replace(os.sep, "/").split("/")
+        for f in collect_py_files([root]):
+            parts = f.replace(os.sep, "/").split("/")
+            if not rooted_fixture and "fixtures" in parts:
+                continue
+            if "examples" in parts:
+                example_files.append(f)
+            else:
+                module_files.append(f)
+    return module_files, example_files
+
+
+def run(paths: Sequence[str], waiver_path: Optional[str] = None
+        ) -> Tuple[List[Finding], List[Tuple[Finding, Waiver]]]:
+    """Analyze ``paths``; returns (kept findings, waived findings)."""
+    module_files, example_files = _split_paths(paths)
+    findings: List[Finding] = []
+    mods, parse_findings = load_modules(module_files)
+    findings.extend(parse_findings)
+    findings.extend(LockOrderAnalyzer(mods).findings())
+    findings.extend(GuardedByChecker(mods).findings())
+    findings.extend(PelletContractChecker(mods).findings())
+    for f in example_files:
+        findings.extend(lint_example_file(f))
+    waivers = load_waivers(waiver_path) if waiver_path else []
+    return apply_waivers(sort_findings(findings), waivers)
+
+
+def _print_rules() -> None:
+    for rule, desc in sorted(RULES.items()):
+        print(f"{rule}  {desc}")
+
+
+def _summary_counts(findings: Sequence[Finding]) -> str:
+    by = {"error": 0, "warning": 0, "note": 0}
+    for f in findings:
+        by[f.severity] = by.get(f.severity, 0) + 1
+    return (f"{len(findings)} finding(s): {by['error']} error(s), "
+            f"{by['warning']} warning(s), {by['note']} note(s)")
+
+
+def _write_job_summary(kept: Sequence[Finding],
+                       waived: Sequence[Tuple[Finding, Waiver]]) -> None:
+    """Render a markdown table into the CI job summary, when present."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["## floe-lint", "", _summary_counts(kept) +
+             f", {len(waived)} waived", ""]
+    if kept:
+        lines += ["| severity | rule | location | message |",
+                  "|---|---|---|---|"]
+        for f in kept:
+            msg = f.message.replace("|", "\\|")
+            lines.append(
+                f"| {f.severity} | {f.rule} | `{f.file}:{f.line}` | {msg} |")
+    if waived:
+        lines += ["", "<details><summary>waived</summary>", ""]
+        for f, w in waived:
+            lines.append(f"- `{f.rule}` {f.symbol or f.message} — {w.reason}")
+        lines += ["", "</details>"]
+    try:
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write("\n".join(lines) + "\n")
+    except OSError:
+        pass
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="floe-lint: static analysis for engine concurrency "
+                    "invariants and dataflow contracts")
+    p.add_argument("paths", nargs="*", default=[],
+                   help="files/directories to analyze")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any unwaived error or warning")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--waivers", default=None, metavar="PATH",
+                   help="waiver file (default: analysis/waivers.toml if "
+                        "present; 'none' disables)")
+    p.add_argument("--rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    args = p.parse_args(argv)
+
+    if args.rules:
+        _print_rules()
+        return 0
+    if not args.paths:
+        p.error("no paths given (try: src/repro tests examples)")
+
+    waiver_path = find_waiver_file(args.waivers)
+    kept, waived = run(args.paths, waiver_path)
+
+    if args.format == "json":
+        print(to_json(kept))
+    else:
+        for f in kept:
+            print(f.format())
+        tail = _summary_counts(kept)
+        if waived:
+            tail += f"; {len(waived)} waived ({waiver_path})"
+        print(tail)
+    _write_job_summary(kept, waived)
+
+    if args.strict and gating(kept):
+        return 1
+    return 0

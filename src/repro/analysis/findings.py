@@ -1,0 +1,103 @@
+"""Machine-readable findings for the floe-lint static-analysis plane.
+
+Every analyzer emits :class:`Finding` records — (rule id, severity,
+file:line, message, symbol) — so the CLI, the waiver file, CI job
+summaries, and tests all consume one format.  ``symbol`` is the
+qualified name the finding is *about* (``Channel._rows``, a lock-cycle
+signature, a stage name): waivers match on it, which keeps them stable
+across line-number drift.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Iterable, List
+
+#: severity ladder.  ``error`` and ``warning`` gate ``--strict``;
+#: ``note`` is advisory (surfaced, never gating).
+SEVERITIES = ("error", "warning", "note")
+
+#: rule catalogue (id -> one-line description), the documentation the CLI
+#: prints with ``--rules`` and the README section mirrors.
+RULES: Dict[str, str] = {
+    "FL000": "source file failed to parse (analysis coverage gap)",
+    # -- lock-order analyzer -------------------------------------------------
+    "FL001": "lock-order cycle: locks are acquired in inconsistent order "
+             "(potential deadlock)",
+    "FL002": "self-deadlock: non-reentrant lock re-acquired while held by "
+             "the same instance",
+    "FL003": "same lock class nested under itself on distinct instances "
+             "(ordering between instances is unverified)",
+    "FL004": "ambiguous lock expression: attribute names locks in more "
+             "than one class, acquisition not tracked",
+    # -- guarded-by checker --------------------------------------------------
+    "FL101": "attribute annotated `# guarded-by: <lock>` accessed outside "
+             "a `with` on that lock",
+    "FL102": "`# guarded-by:` names a lock the class does not declare",
+    "FL103": "`# requires-lock:` names a lock the class does not declare",
+    # -- dataflow-graph linter ----------------------------------------------
+    "FL201": "unreachable stage: no path from any injectable source",
+    "FL202": "declared port never connected",
+    "FL203": "landmark-alignment wedge: fan-in stage counts a back-edge "
+             "toward its in-degree, a flush round can never complete",
+    "FL204": "exactly-once sink without key= downstream of a cycle: "
+             "lineage-seq dedup keys are not stable across journal replay",
+    "FL205": "stage opts into the array fast path but its pellet has no "
+             "array-capable compute path (every batch stacks then degrades)",
+    "FL206": "nested-pytree payload on an array-enabled stage degrades the "
+             "array fast path to per-row dispatch",
+    "FL207": "stage factory is not picklable: process-backend offload "
+             "degrades to local compute",
+    # -- pellet-contract checker --------------------------------------------
+    "FL301": "pellet overrides compute_array but has no row-wise fallback "
+             "(neither compute_batch nor compute)",
+    "FL302": "pellet declares vectorized=True but overrides neither "
+             "compute_batch nor compute_array",
+    "FL303": "__floe_state__ must be a tuple/list of string literals",
+    "FL304": "__floe_state__ attribute is assigned an unpicklable value "
+             "(lock/thread/file/lambda) — checkpoint capture will fail",
+    "FL305": "__floe_state__ names an attribute never assigned in the class",
+    # -- meta ---------------------------------------------------------------
+    "FL901": "waiver matched no finding (stale — remove or fix the pattern)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer result, stable enough to waive and diff."""
+
+    rule: str
+    severity: str           # error | warning | note
+    file: str               # repo-relative path, or "<flow:NAME>"
+    line: int
+    message: str
+    symbol: str = ""        # qualified subject, the waiver match target
+    detail: Dict[str, object] = field(default_factory=dict, compare=False)
+
+    def format(self) -> str:
+        sym = f"  [{self.symbol}]" if self.symbol else ""
+        return (f"{self.file}:{self.line}: {self.severity} "
+                f"{self.rule} {self.message}{sym}")
+
+    def to_dict(self) -> Dict[str, object]:
+        d = asdict(self)
+        if not d["detail"]:
+            d.pop("detail")
+        return d
+
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    return sorted(findings,
+                  key=lambda f: (order.get(f.severity, len(SEVERITIES)),
+                                 f.rule, f.file, f.line, f.symbol))
+
+
+def gating(findings: Iterable[Finding]) -> List[Finding]:
+    """The subset that fails ``--strict``: errors and warnings."""
+    return [f for f in findings if f.severity in ("error", "warning")]
+
+
+def to_json(findings: Iterable[Finding]) -> str:
+    return json.dumps([f.to_dict() for f in sort_findings(findings)],
+                      indent=2)

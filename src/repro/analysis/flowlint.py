@@ -1,0 +1,582 @@
+"""Dataflow-graph linter (FL201–FL207).
+
+Two front-ends over one rule core:
+
+* **runtime** — ``lint_flow(flow, samples=...)``, what ``Flow.lint()``
+  calls.  Has the real pellet prototypes, so every rule runs, including
+  the sample-driven array-fast-path probe (FL206: the exact
+  ``ArrayBatch.try_stack`` the engine uses decides whether a payload
+  shape degrades to per-row dispatch).
+
+* **static** — ``lint_example_file(path)``, what the CLI runs over
+  ``examples/``.  Examples build flows inside ``main()`` (they start
+  sessions, so importing them is not an option); the extractor walks the
+  AST for the documented builder idioms — ``v = flow.pellet/sink(...)``,
+  ``a >> b``, ``a["port"] >> b``, ``.split()``, ``flow.mapreduce(...)``
+  — and lints whatever topology it could prove.  Any construct it cannot
+  resolve (loops over stage lists, computed names) marks the extraction
+  *incomplete*: reachability rules (FL201) are then skipped rather than
+  reported wrong — the linter under-reports, never fabricates.
+"""
+from __future__ import annotations
+
+import ast
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+
+@dataclass
+class StageLint:
+    """What the linter knows about one stage (either front-end)."""
+    name: str
+    line: int = 0
+    out_ports: Optional[Tuple[str, ...]] = None
+    in_ports: Optional[Tuple[str, ...]] = None
+    proto: Any = None                     # runtime only
+    factory: Any = None                   # runtime only
+    annotations: Dict[str, Any] = field(default_factory=dict)
+    #: static sink knowledge (flow.sink kwargs read off the call)
+    exactly_once: Optional[bool] = None
+    has_key: Optional[bool] = None
+    #: static array-capability (FnPellet literal: vectorized= visible)
+    array_capable: Optional[bool] = None
+
+
+@dataclass
+class FlowModel:
+    name: str
+    file: str                             # path or "<flow:NAME>"
+    stages: Dict[str, StageLint]
+    edges: List[Tuple[str, str, str, str]]   # (src, src_port, dst, dst_port)
+    incomplete: bool = False
+
+
+# ---------------------------------------------------------------------------
+# rule core
+# ---------------------------------------------------------------------------
+
+def _reach_from(starts: Sequence[str],
+                adj: Dict[str, Set[str]]) -> Set[str]:
+    seen: Set[str] = set()
+    frontier = list(starts)
+    while frontier:
+        n = frontier.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        frontier.extend(adj.get(n, ()))
+    return seen
+
+
+def lint_model(m: FlowModel, samples: Optional[Dict[str, Any]] = None
+               ) -> List[Finding]:
+    out: List[Finding] = []
+    adj: Dict[str, Set[str]] = {}
+    radj: Dict[str, Set[str]] = {}
+    in_edges: Dict[str, List[Tuple[str, str, str, str]]] = {}
+    out_ports_used: Dict[str, Set[str]] = {}
+    in_ports_fed: Dict[str, Set[str]] = {}
+    for e in m.edges:
+        src, sp, dst, dp = e
+        adj.setdefault(src, set()).add(dst)
+        radj.setdefault(dst, set()).add(src)
+        in_edges.setdefault(dst, []).append(e)
+        out_ports_used.setdefault(src, set()).add(sp)
+        in_ports_fed.setdefault(dst, set()).add(dp)
+
+    reach_of = {n: _reach_from(list(adj.get(n, ())), adj)
+                for n in m.stages}
+    cycle_nodes = {n for n in m.stages if n in reach_of.get(n, ())}
+
+    # FL201: unreachable stages (no path from any in-degree-0 source)
+    if not m.incomplete:
+        sources = [n for n in m.stages if n not in radj]
+        live = _reach_from(sources, adj)
+        for n, s in m.stages.items():
+            if n not in live:
+                out.append(Finding(
+                    "FL201", "warning", m.file, s.line,
+                    f"stage {n!r} is unreachable: no path from any "
+                    "injectable source reaches it"
+                    + (" (cycle-only component)" if n in cycle_nodes else ""),
+                    symbol=f"{m.name}.{n}"))
+
+    # FL202 (note): declared ports left unconnected while siblings are wired
+    if not m.incomplete:
+        for n, s in m.stages.items():
+            if s.out_ports and len(s.out_ports) > 1:
+                used = out_ports_used.get(n, set())
+                if used:
+                    for p in s.out_ports:
+                        if p not in used:
+                            out.append(Finding(
+                                "FL202", "note", m.file, s.line,
+                                f"stage {n!r}: out port {p!r} has no edge "
+                                "while other out ports are connected — its "
+                                "payloads surface as session outputs; if "
+                                "that is not intended, wire or drop it",
+                                symbol=f"{m.name}.{n}[{p}]"))
+            if s.in_ports and len(s.in_ports) > 1:
+                fed = in_ports_fed.get(n, set())
+                if fed:
+                    for p in s.in_ports:
+                        if p not in fed:
+                            out.append(Finding(
+                                "FL202", "note", m.file, s.line,
+                                f"stage {n!r}: in port {p!r} is never fed "
+                                "while other in ports are",
+                                symbol=f"{m.name}.{n}[{p}]"))
+
+    # FL203: landmark-alignment wedge — a fan-in stage counting a
+    # back-edge toward its in-degree can never complete a flush round
+    # (the engine delivers a flush landmark only once a copy arrived
+    # from EVERY inbound edge; the copy around the cycle depends on the
+    # flush it is needed for)
+    for n, s in m.stages.items():
+        inbound = in_edges.get(n, [])
+        if len(inbound) <= 1:
+            continue
+        back = sorted({src for (src, _, _, _) in inbound
+                       if src in reach_of.get(n, ())})
+        if back:
+            out.append(Finding(
+                "FL203", "warning", m.file, s.line,
+                f"fan-in stage {n!r} (in-degree {len(inbound)}) receives "
+                f"back-edge(s) from {back} on a cycle through itself: a "
+                "flush-landmark round can never complete (the engine "
+                "counts back-edges toward the alignment in-degree)",
+                symbol=f"{m.name}.{n}"))
+
+    # FL204: exactly-once sink without key= fed from a cycle — fallback
+    # dedup keys end at the lineage seq, which is not stable across
+    # journal replay for cycle-generated rows
+    for n, s in m.stages.items():
+        eo, has_key = s.exactly_once, s.has_key
+        if s.proto is not None:
+            cls_names = {c.__name__ for c in type(s.proto).__mro__}
+            if "ExactlyOnceSink" in cls_names:
+                eo = True
+                has_key = getattr(s.proto, "key", None) is not None
+        if not eo or has_key:
+            continue
+        upstream_cycles = sorted(c for c in cycle_nodes
+                                 if n in reach_of.get(c, ()))
+        if upstream_cycles:
+            out.append(Finding(
+                "FL204", "warning", m.file, s.line,
+                f"exactly-once sink {n!r} has no key= and sits downstream "
+                f"of a cycle (through {upstream_cycles}): lineage-seq "
+                "fallback dedup keys are not stable across journal "
+                "replay, so replayed rows double-deliver",
+                symbol=f"{m.name}.{n}"))
+
+    # FL205: array fast path opted in, pellet cannot consume arrays
+    for n, s in m.stages.items():
+        if not s.annotations.get("batch_array"):
+            continue
+        capable = s.array_capable
+        if s.proto is not None:
+            capable = _proto_array_capable(s.proto)
+        if capable is False:
+            out.append(Finding(
+                "FL205", "warning", m.file, s.line,
+                f"stage {n!r} declares .batch(array=True) but its pellet "
+                "has no array-capable compute path (compute_array is the "
+                "declining default): every batch is stacked, then "
+                "immediately unstacked to per-row dispatch",
+                symbol=f"{m.name}.{n}"))
+
+    # FL206: sample payload shape degrades the array fast path
+    if samples:
+        out.extend(_lint_samples(m, samples))
+
+    # FL207 (note): factory not picklable — process offload degrades.
+    # Plain lambdas / local defs are exempt: they are the documented
+    # builder idiom and their in-process fallback is by design.  The
+    # note targets factories that LOOK offloadable (named callables,
+    # partials, instances) but close over unpicklable state.
+    for n, s in m.stages.items():
+        if s.factory is None:
+            continue
+        qn = getattr(s.factory, "__qualname__", "")
+        if getattr(s.factory, "__name__", "") == "<lambda>" or \
+                "<locals>" in qn:
+            continue
+        try:
+            pickle.dumps(s.factory)
+        except Exception as e:
+            out.append(Finding(
+                "FL207", "note", m.file, s.line,
+                f"stage {n!r}: factory is not picklable "
+                f"({e.__class__.__name__}) — process-backed hosts fall "
+                "back to in-process compute for this stage",
+                symbol=f"{m.name}.{n}"))
+    return out
+
+
+def _proto_array_capable(proto: Any) -> bool:
+    from ..core.pellet import FnPellet, PushPellet
+    if not isinstance(proto, PushPellet):
+        return False
+    if isinstance(proto, FnPellet):
+        return bool(getattr(proto, "vectorized", False))
+    return type(proto).compute_array is not PushPellet.compute_array
+
+
+def _lint_samples(m: FlowModel, samples: Dict[str, Any]) -> List[Finding]:
+    from ..core.arraybatch import ArrayBatch
+    out: List[Finding] = []
+    for n, payload in samples.items():
+        s = m.stages.get(n)
+        if s is None or not s.annotations.get("batch_array"):
+            continue
+        # the authoritative probe: the exact stacker the engine runs
+        if ArrayBatch.try_stack([payload, payload]) is not None:
+            continue
+        out.append(Finding(
+            "FL206", "warning", m.file, s.line,
+            f"stage {n!r}: sample payload ({_shape_of(payload)}) does not "
+            "stack — the array fast path degrades to per-row dispatch "
+            "for batches of this shape (flat arrays or flat dict-of-array "
+            "columns stack; nested pytrees do not)",
+            symbol=f"{m.name}.{n}"))
+    return out
+
+
+def _shape_of(payload: Any) -> str:
+    if isinstance(payload, dict):
+        inner = sorted(type(v).__name__ for v in payload.values())
+        return f"dict with value types {inner}"
+    return f"type {type(payload).__name__}"
+
+
+# ---------------------------------------------------------------------------
+# runtime front-end (Flow.lint)
+# ---------------------------------------------------------------------------
+
+def lint_flow(flow: Any, samples: Optional[Dict[str, Any]] = None
+              ) -> List[Finding]:
+    """Lint a composed ``repro.api.builder.Flow`` (see ``Flow.lint``)."""
+    stages: Dict[str, StageLint] = {}
+    for name, h in flow.stages.items():
+        stages[name] = StageLint(
+            name=name,
+            out_ports=tuple(h.out_ports),
+            in_ports=tuple(h.in_ports),
+            proto=h.proto,
+            factory=h.factory,
+            annotations=dict(h.annotations))
+    edges = [(e.src, e.src_port, e.dst, e.dst_port) for e in flow.edges]
+    model = FlowModel(flow.name, f"<flow:{flow.name}>", stages, edges)
+    return lint_model(model, samples=samples)
+
+
+# ---------------------------------------------------------------------------
+# static front-end (examples)
+# ---------------------------------------------------------------------------
+
+class _FlowExtract(ast.NodeVisitor):
+    """Best-effort reconstruction of Flow topologies from example source."""
+
+    def __init__(self) -> None:
+        #: var name -> (flow var, stage name) for resolved stage handles
+        self.vars: Dict[str, Tuple[str, str]] = {}
+        #: flow var -> FlowModel under construction
+        self.flows: Dict[str, FlowModel] = {}
+        self.path = ""
+
+    # -- helpers -------------------------------------------------------------
+    def _flow(self, fvar: str) -> FlowModel:
+        if fvar not in self.flows:
+            self.flows[fvar] = FlowModel(fvar, self.path, {}, [])
+        return self.flows[fvar]
+
+    def _mark_incomplete(self, fvar: Optional[str] = None) -> None:
+        if fvar is not None and fvar in self.flows:
+            self.flows[fvar].incomplete = True
+        elif fvar is None:
+            for f in self.flows.values():
+                f.incomplete = True
+
+    @staticmethod
+    def _const_str(node: ast.expr) -> Optional[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value
+        return None
+
+    def _endpoint(self, node: ast.expr
+                  ) -> Optional[Tuple[str, str, Optional[str]]]:
+        """Resolve a ``>>`` operand to (flow var, stage, port|None).
+
+        Handles: ``v``, ``v["port"]``, ``<endpoint>.split("p")``,
+        ``<endpoint>.transport("k")``, ``flow.stages["name"]`` (and the
+        same with a port subscript on top).
+        """
+        if isinstance(node, ast.Name):
+            hit = self.vars.get(node.id)
+            return (hit[0], hit[1], None) if hit else None
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("split", "transport"):
+            return self._endpoint(node.func.value)
+        if isinstance(node, ast.Subscript):
+            port = self._const_str(node.slice)
+            base = node.value
+            # flow.stages["name"]
+            if isinstance(base, ast.Attribute) and base.attr == "stages" \
+                    and isinstance(base.value, ast.Name):
+                fvar = base.value.id
+                if port is not None:
+                    return (fvar, port, None)   # the subscript IS the name
+                return None
+            inner = self._endpoint(base)
+            if inner is None or port is None:
+                return None
+            return (inner[0], inner[1], port)
+        return None
+
+    # -- statement handling ---------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        call = node.value
+        # unwrap fluent-chain tails: flow.pellet(...).elastic(...).place(...)
+        batch_calls: List[ast.Call] = []
+        while isinstance(call, ast.Call) and \
+                isinstance(call.func, ast.Attribute) and \
+                call.func.attr in ("batch", "elastic", "place", "replace") \
+                and isinstance(call.func.value, ast.Call):
+            if call.func.attr == "batch":
+                batch_calls.append(call)
+            call = call.func.value
+        if isinstance(call, ast.Call) and \
+                isinstance(call.func, ast.Attribute) and \
+                call.func.attr in ("pellet", "sink") and \
+                isinstance(call.func.value, ast.Name):
+            fvar = call.func.value.id
+            name = self._const_str(call.args[0]) if call.args else None
+            if name is None:
+                self._mark_incomplete(fvar)
+            else:
+                st = StageLint(name=name, line=node.lineno)
+                if call.func.attr == "sink":
+                    st.exactly_once = any(
+                        kw.arg == "exactly_once" and
+                        isinstance(kw.value, ast.Constant) and
+                        kw.value.value is True for kw in call.keywords)
+                    st.has_key = any(
+                        kw.arg == "key" and not (
+                            isinstance(kw.value, ast.Constant) and
+                            kw.value.value is None)
+                        for kw in call.keywords)
+                else:
+                    st.array_capable = _static_array_capable(call)
+                self._flow(fvar).stages[name] = st
+                for bc in batch_calls:
+                    self._apply_batch((fvar, name, None), bc)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.vars[tgt.id] = (fvar, name)
+            self.generic_visit(call)
+            return
+        # v2 = v.batch(...) / .elastic(...) / .place(...): alias through
+        if isinstance(call, ast.Call) and \
+                isinstance(call.func, ast.Attribute) and \
+                call.func.attr in ("batch", "elastic", "place"):
+            ep = self._endpoint(call.func.value)
+            if ep is not None:
+                if call.func.attr == "batch":
+                    self._apply_batch(ep, call)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.vars[tgt.id] = (ep[0], ep[1])
+                self.generic_visit(call)
+                return
+        if isinstance(call, ast.BinOp):
+            self.visit(call)
+            return
+        self.generic_visit(node)
+
+    def _apply_batch(self, ep: Tuple[str, str, Optional[str]],
+                     call: ast.Call) -> None:
+        fvar, stage, _ = ep
+        st = self.flows.get(fvar, FlowModel("", "", {}, [])).stages.get(stage)
+        if st is None:
+            return
+        for kw in call.keywords:
+            if kw.arg == "array" and isinstance(kw.value, ast.Constant):
+                st.annotations["batch_array"] = bool(kw.value.value)
+
+    def visit_Expr(self, node: ast.Expr) -> None:
+        self.visit(node.value)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            fvar = f.value.id
+            if f.attr == "batch":
+                ep = self._endpoint(f.value)
+                if ep is not None:
+                    self._apply_batch(ep, node)
+            elif f.attr == "mapreduce" and fvar in self.flows:
+                self._mapreduce(fvar, node)
+                return
+            elif f.attr == "bsp" and fvar in self.flows:
+                self._mark_incomplete(fvar)   # workers are loop-generated
+                return
+            elif f.attr in ("remove", "disconnect") and fvar in self.flows:
+                self._mark_incomplete(fvar)
+                return
+        # chained fluent call on a stage var: v.batch(...).elastic(...)
+        if isinstance(f, ast.Attribute) and f.attr == "batch":
+            ep = self._endpoint(f.value)
+            if ep is not None:
+                self._apply_batch(ep, node)
+        self.generic_visit(node)
+
+    def _mapreduce(self, fvar: str, call: ast.Call) -> None:
+        kw = {k.arg: k.value for k in call.keywords}
+        prefix = self._const_str(kw.get("prefix", ast.Constant(value=None)))
+        n_m = kw.get("n_mappers")
+        n_r = kw.get("n_reducers")
+        ints = all(isinstance(x, ast.Constant) and isinstance(x.value, int)
+                   for x in (n_m, n_r) if x is not None)
+        if prefix is None or n_m is None or n_r is None or not ints:
+            self._mark_incomplete(fvar)
+            return
+        flow = self._flow(fvar)
+        maps = [f"{prefix}_map{i}" for i in range(n_m.value)]
+        reds = [f"{prefix}_red{j}" for j in range(n_r.value)]
+        for n in maps + reds:
+            flow.stages[n] = StageLint(name=n, line=call.lineno)
+        src = self._endpoint(kw["source"]) if "source" in kw else None
+        if "source" in kw and src is None:
+            self._mark_incomplete(fvar)
+        snk = self._endpoint(kw["sink"]) if "sink" in kw else None
+        if "sink" in kw and snk is None:
+            self._mark_incomplete(fvar)
+        for mname in maps:
+            if src is not None:
+                flow.edges.append((src[1], src[2] or "out", mname, "in"))
+            for rname in reds:
+                flow.edges.append((mname, "out", rname, "in"))
+        if snk is not None:
+            for rname in reds:
+                flow.edges.append((rname, "out", snk[1], snk[2] or "in"))
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if not isinstance(node.op, ast.RShift):
+            self.generic_visit(node)
+            return
+        # left-assoc chain: ((a >> b) >> c); the value of a>>b is b's stage
+        left, right = node.left, node.right
+        if isinstance(left, ast.BinOp) and isinstance(left.op, ast.RShift):
+            self.visit(left)
+            lsrc = self._chain_tail(left)
+        else:
+            lsrc = self._endpoint(left)
+        rdst = self._endpoint(right)
+        if lsrc is None or rdst is None:
+            self._mark_incomplete(lsrc[0] if lsrc else
+                                  (rdst[0] if rdst else None))
+            return
+        self._flow(lsrc[0]).edges.append(
+            (lsrc[1], lsrc[2] or "out", rdst[1], rdst[2] or "in"))
+
+    def _chain_tail(self, node: ast.BinOp
+                    ) -> Optional[Tuple[str, str, Optional[str]]]:
+        """``a >> b`` evaluates to b's STAGE (not port), per the builder."""
+        t = self._endpoint(node.right)
+        return (t[0], t[1], None) if t else None
+
+    def visit_For(self, node: ast.For) -> None:
+        # loops compose stages/edges we cannot enumerate; any flow whose
+        # vars appear inside goes incomplete (conservative, no fabrication)
+        names = {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+        touched = {self.vars[v][0] for v in names if v in self.vars}
+        touched |= {v for v in names if v in self.flows}
+        has_builder_ops = any(
+            isinstance(x, ast.BinOp) and isinstance(x.op, ast.RShift)
+            for x in ast.walk(node)) or any(
+            isinstance(x, ast.Call) and isinstance(x.func, ast.Attribute)
+            and x.func.attr in ("pellet", "sink")
+            for x in ast.walk(node))
+        if has_builder_ops:
+            if touched:
+                for fv in touched:
+                    self._mark_incomplete(fv)
+            else:
+                self._mark_incomplete(None)
+        self.generic_visit(node)
+
+
+def _static_array_capable(pellet_call: ast.Call) -> Optional[bool]:
+    """``lambda: FnPellet(...)`` factory literals expose vectorized=;
+    anything else is unknown (None)."""
+    if len(pellet_call.args) < 2:
+        return None
+    factory = pellet_call.args[1]
+    body = factory.body if isinstance(factory, ast.Lambda) else factory
+    if isinstance(body, ast.Call) and (
+            (isinstance(body.func, ast.Name) and
+             body.func.id == "FnPellet") or
+            (isinstance(body.func, ast.Attribute) and
+             body.func.attr == "FnPellet")):
+        for kw in body.keywords:
+            if kw.arg == "vectorized":
+                if isinstance(kw.value, ast.Constant):
+                    return bool(kw.value.value)
+                return None
+        return False
+    return None
+
+
+def _flow_ctor_vars(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            name = f.id if isinstance(f, ast.Name) else \
+                f.attr if isinstance(f, ast.Attribute) else ""
+            if name == "Flow":
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+def lint_example_file(path: str, text: Optional[str] = None
+                      ) -> List[Finding]:
+    if text is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return [Finding("FL000", "warning", path,
+                        getattr(e, "lineno", 0) or 0,
+                        f"failed to parse: {e}")]
+    flow_vars = _flow_ctor_vars(tree)
+    ex = _FlowExtract()
+    ex.path = path
+    for fv in flow_vars:
+        ex._flow(fv)
+    ex.visit(tree)
+    out: List[Finding] = []
+    for fv, model in ex.flows.items():
+        model.name = fv
+        # drop edges that reference stages we never resolved (defensive)
+        known = set(model.stages)
+        model.edges = [e for e in model.edges
+                       if e[0] in known and e[2] in known]
+        out.extend(lint_model(model))
+    return out
+
+
+def analyze_examples(paths: Sequence[str]) -> List[Finding]:
+    from .astutil import collect_py_files
+    out: List[Finding] = []
+    for f in collect_py_files(paths):
+        out.extend(lint_example_file(f))
+    return out

@@ -1,0 +1,256 @@
+"""Guarded-by checker (FL101–FL103).
+
+Annotation convention::
+
+    self._rows = 0            # guarded-by: _lock
+    self._q: deque = deque()  # guarded-by: _lock
+
+declares that every read/write of the attribute must occur lexically
+inside a ``with`` on the named lock of the *same object* — ``self._rows``
+under ``with self._lock:`` (or any Condition aliasing it, e.g.
+``self._not_full``); ``flake._lm_count`` under ``with flake._lm_lock:``
+(receiver text must match).  ``__init__`` of the declaring class (and
+subclasses) is exempt: construction is single-threaded.
+
+Helper methods that are only ever called with the lock already held
+declare it instead of re-acquiring::
+
+    def _event(self, kind):   # requires-lock: _lock
+
+Accesses inside such a method count as locked.  (Call sites are checked
+by convention, not by this tool — the annotation is the documented
+contract reviewers enforce.)
+
+Deliberately-unlocked accesses (GIL-atomic heuristic reads) are recorded
+in ``analysis/waivers.toml`` with a justification, never silently
+ignored.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .astutil import (GUARDED_BY_RE, REQUIRES_LOCK_RE, ClassInfo, CodeIndex,
+                      FuncInfo, LockRegistry, SourceModule, bind_registry,
+                      guard_comments, load_modules)
+from .findings import Finding
+
+
+@dataclass(frozen=True)
+class GuardDecl:
+    cls: str
+    attr: str
+    lock: str                   # lock attr name as annotated
+    file: str
+    line: int
+
+
+def _only_comment(line: str) -> bool:
+    return line.strip().startswith("#")
+
+
+def collect_guards(index: CodeIndex) -> Tuple[List[GuardDecl], List[Finding]]:
+    """Find every ``# guarded-by:`` annotation and bind it to the
+    ``self.X = ...`` assignment on (or directly below) its line."""
+    decls: List[GuardDecl] = []
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str]] = set()
+    for fn in index.functions:
+        if fn.cls is None:
+            continue
+        comments = guard_comments(fn.module, GUARDED_BY_RE)
+        if not comments:
+            continue
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            end = getattr(node, "end_lineno", node.lineno)
+            lock = None
+            for ln in range(node.lineno, end + 1):
+                if ln in comments:
+                    lock = comments[ln]
+                    break
+            if lock is None and (node.lineno - 1) in comments and \
+                    _only_comment(fn.module.line(node.lineno - 1)):
+                lock = comments[node.lineno - 1]
+            if lock is None:
+                continue
+            for tgt in targets:
+                if isinstance(tgt, ast.Attribute) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id == "self":
+                    key = (fn.cls.name, tgt.attr)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    decls.append(GuardDecl(fn.cls.name, tgt.attr, lock,
+                                           fn.module.path, node.lineno))
+    return decls, findings
+
+
+def _requires_lock(fn: FuncInfo) -> Optional[str]:
+    mod = fn.module
+    for ln in (fn.node.lineno, fn.node.lineno - 1):
+        m = REQUIRES_LOCK_RE.search(mod.line(ln))
+        if m:
+            return m.group(1)
+    return None
+
+
+class _AccessWalk(ast.NodeVisitor):
+    """Collect attribute accesses with the lexical with-held lock set."""
+
+    def __init__(self) -> None:
+        self.stack: List[Tuple[str, str]] = []      # (receiver, lockattr)
+        #: (receiver, attr, line, held snapshot)
+        self.accesses: List[Tuple[str, str, int, List[Tuple[str, str]]]] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            ctx = item.context_expr
+            if isinstance(ctx, ast.Attribute):
+                self.stack.append((ast.unparse(ctx.value), ctx.attr))
+                pushed += 1
+            else:
+                self.visit(ctx)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.stack.pop()
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self.accesses.append((ast.unparse(node.value), node.attr,
+                              node.lineno, list(self.stack)))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass   # nested defs run later, under locks of their caller
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+class GuardedByChecker:
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.modules = modules
+        self.index = CodeIndex(modules)
+        self.reg = bind_registry(LockRegistry(self.index), self.index)
+        self.decls, self._findings = collect_guards(self.index)
+        #: declaring class -> {attr -> GuardDecl}
+        self.by_cls: Dict[str, Dict[str, GuardDecl]] = {}
+        #: attr -> decl, only when the attr is annotated in exactly 1 class
+        self.unique_attr: Dict[str, GuardDecl] = {}
+        counts: Dict[str, int] = {}
+        for d in self.decls:
+            self.by_cls.setdefault(d.cls, {})[d.attr] = d
+            counts[d.attr] = counts.get(d.attr, 0) + 1
+        for d in self.decls:
+            if counts[d.attr] == 1:
+                self.unique_attr[d.attr] = d
+
+    # -- resolution helpers --------------------------------------------------
+    def _decl_for_self(self, cls: ClassInfo, attr: str
+                       ) -> Optional[GuardDecl]:
+        frontier = [cls.name]
+        seen: Set[str] = set()
+        while frontier:
+            cname = frontier.pop(0)
+            if cname in seen:
+                continue
+            seen.add(cname)
+            d = self.by_cls.get(cname, {}).get(attr)
+            if d is not None:
+                return d
+            for ci in self.index.classes.get(cname, []):
+                frontier.extend(ci.bases)
+        return None
+
+    def _lock_node(self, d: GuardDecl) -> Optional[str]:
+        return self.reg.node_id(d.cls, d.lock)
+
+    def _held_satisfies(self, held: List[Tuple[str, str]], receiver: str,
+                        d: GuardDecl, required: str) -> bool:
+        for recv, lockattr in held:
+            if recv != receiver:
+                continue
+            # resolve the held lock in the guard's declaring class so
+            # Condition aliases (`_not_full` for `_lock`) match
+            nid = self.reg.node_id(d.cls, lockattr)
+            if nid == required:
+                return True
+        return False
+
+    # -- main pass -----------------------------------------------------------
+    def findings(self) -> List[Finding]:
+        out = list(self._findings)
+        # FL102: annotation names a lock the class does not declare
+        for d in self.decls:
+            if self._lock_node(d) is None:
+                out.append(Finding(
+                    "FL102", "error", d.file, d.line,
+                    f"guarded-by names unknown lock {d.lock!r} on "
+                    f"{d.cls}.{d.attr} (class declares "
+                    f"{sorted(a for (c, a) in self.reg.decls if c == d.cls)})",
+                    symbol=f"{d.cls}.{d.attr}"))
+        if not self.decls:
+            return out
+        for fn in self.index.functions:
+            if fn.node.name.startswith("test_"):
+                # tests assert on internals of quiesced, single-threaded
+                # sessions; like __init__, there is no concurrency to guard
+                continue
+            req = _requires_lock(fn)
+            if req is not None and fn.cls is not None and \
+                    self.reg.node_id(fn.cls.name, req) is None:
+                out.append(Finding(
+                    "FL103", "error", fn.module.path, fn.node.lineno,
+                    f"requires-lock names unknown lock {req!r} in "
+                    f"{fn.qualname}", symbol=fn.qualname))
+                req = None
+            walk = _AccessWalk()
+            for stmt in fn.node.body:
+                walk.visit(stmt)
+            for recv, attr, line, held in walk.accesses:
+                if recv == "self":
+                    if fn.cls is None:
+                        continue
+                    d = self._decl_for_self(fn.cls, attr)
+                else:
+                    # cross-object: receivers are untyped, so only private
+                    # attrs annotated in exactly one class are resolvable —
+                    # public names (events, outputs) collide across classes
+                    if not attr.startswith("_"):
+                        continue
+                    d = self.unique_attr.get(attr)
+                if d is None:
+                    continue
+                required = self._lock_node(d)
+                if required is None:
+                    continue   # FL102 already reported
+                if fn.node.name == "__init__" and recv == "self" and \
+                        fn.cls is not None and \
+                        self._decl_for_self(fn.cls, attr) is d:
+                    continue   # construction is single-threaded
+                if req is not None and recv == "self" and \
+                        fn.cls is not None and \
+                        self.reg.node_id(d.cls, req) == required:
+                    continue   # requires-lock contract covers it
+                if self._held_satisfies(held, recv, d, required):
+                    continue
+                out.append(Finding(
+                    "FL101", "error", fn.module.path, line,
+                    f"{d.cls}.{attr} (guarded-by: {d.lock}) accessed "
+                    f"outside its lock in {fn.qualname}",
+                    symbol=f"{d.cls}.{attr}@{fn.qualname}"))
+        return out
+
+
+def analyze_guards(paths: Sequence[str]) -> List[Finding]:
+    mods, findings = load_modules(paths)
+    findings.extend(GuardedByChecker(mods).findings())
+    return findings

@@ -1,0 +1,339 @@
+"""Lock-order analyzer (FL001–FL004).
+
+Extracts the lock-acquisition graph from ``with <lock>:`` nesting across
+the analyzed modules: an edge A → B means "B was acquired while A was
+held".  Acquisition crosses function boundaries one level deep — a call
+made while holding A contributes edges from A to every lock the callee
+acquires (``self.m()`` resolves through the enclosing class and its
+in-index bases; bare ``f()`` through the module; ``obj.m()`` only when
+the method name is unambiguous across lock-acquiring classes).
+
+A cycle in the graph is a potential deadlock: two threads taking the
+cycle's locks from different entry points can each hold one and wait on
+the other forever.  Lock nodes are class-scoped (``Channel._lock``), so
+a cycle is reported even if today's call sites happen to use distinct
+instances — the ordering discipline is the invariant being checked.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Set, Tuple
+
+from .astutil import (CodeIndex, FuncInfo, LockRegistry, LockUse,
+                      SourceModule, bind_registry, load_modules,
+                      resolve_lock_expr)
+from .findings import Finding
+
+
+#: method names never resolved through the unique-name fallback: they
+#: collide with list/dict/set/deque/Event/Condition APIs, so a bare
+#: ``obj.append(...)`` is a container call, not ``DeadLetterQueue.append``
+GENERIC_METHODS = frozenset({
+    "append", "appendleft", "extend", "insert", "remove", "discard",
+    "pop", "popleft", "popitem", "clear", "get", "setdefault", "items",
+    "keys", "values", "update", "add", "copy", "sort", "reverse",
+    "count", "index", "join", "start", "put", "read", "write", "flush",
+    "close", "open", "send", "recv", "acquire", "release", "wait",
+    "wait_for", "notify", "notify_all", "set", "is_set", "submit",
+    "result", "cancel", "shutdown", "locked", "split", "strip",
+    "format", "encode", "decode", "search", "match", "sub", "findall",
+    "group", "emit_many", "drain",
+})
+
+
+@dataclass
+class Witness:
+    file: str
+    line: int
+    func: str
+    via: str            # "" for lexical nesting, "call f()" for expansion
+
+
+@dataclass
+class _Acq:
+    use: LockUse
+    line: int
+    func: FuncInfo
+
+
+class _FnWalk(ast.NodeVisitor):
+    """One function's lock behavior: acquisitions, nesting, calls-under."""
+
+    def __init__(self, fn: FuncInfo, reg: LockRegistry):
+        self.fn = fn
+        self.reg = reg
+        self.stack: List[_Acq] = []
+        self.acquires: List[_Acq] = []              # all with-acquisitions
+        self.nest_edges: List[Tuple[_Acq, _Acq]] = []
+        #: calls made while >=1 lock held: (held snapshot, call node)
+        self.calls_under: List[Tuple[List[_Acq], ast.Call]] = []
+        #: with-item attributes that failed to resolve but share a name
+        #: with locks in >1 class (FL004 candidates)
+        self.ambiguous: List[Tuple[str, int]] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            ctx = item.context_expr
+            use = resolve_lock_expr(ctx, self.fn, self.reg)
+            if use is not None:
+                acq = _Acq(use, node.lineno, self.fn)
+                for held in self.stack:
+                    self.nest_edges.append((held, acq))
+                self.stack.append(acq)
+                self.acquires.append(acq)
+                pushed += 1
+            else:
+                if isinstance(ctx, ast.Attribute) and \
+                        len(self.reg.by_attr.get(ctx.attr, ())) > 1 and \
+                        not (isinstance(ctx.value, ast.Name)
+                             and ctx.value.id == "self"):
+                    self.ambiguous.append((ast.unparse(ctx), node.lineno))
+                if isinstance(ctx, ast.Call) and self.stack:
+                    # `with self.frozen():` — the contextmanager's body
+                    # runs under our held locks: treat as a call site
+                    self.calls_under.append((list(self.stack), ctx))
+                self.generic_visit_expr(ctx)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.stack.pop()
+
+    def generic_visit_expr(self, node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.stack:
+            self.calls_under.append((list(self.stack), node))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass   # nested defs execute later, not under these locks
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _callee_candidates(call: ast.Call, fn: FuncInfo, index: CodeIndex,
+                       walks: Dict[str, "_FnWalk"]) -> List[FuncInfo]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return index.func(None, f.id, fn.module)
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name) and f.value.id == "self" and \
+                fn.cls is not None:
+            return index.func(fn.cls, f.attr, fn.module)
+        # cross-object: accept only an unambiguous lock-relevant target,
+        # and never for names shared with builtin container/stdlib APIs
+        if f.attr in GENERIC_METHODS:
+            return []
+        cands = [c for c in index.methods_by_name.get(f.attr, [])
+                 if c.qualname in walks and walks[c.qualname].acquires]
+        names = {c.qualname for c in cands}
+        if len(names) == 1:
+            return cands[:1]
+    return []
+
+
+class LockOrderAnalyzer:
+    """Builds the acquisition graph and reports cycles."""
+
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.modules = modules
+        self.index = CodeIndex(modules)
+        self.reg = bind_registry(LockRegistry(self.index), self.index)
+        self.edges: Dict[Tuple[str, str], List[Witness]] = {}
+        self.self_deadlocks: List[Tuple[str, Witness]] = []
+        self.instance_nests: List[Tuple[str, Witness]] = []
+        self.ambiguous: List[Tuple[str, str, int]] = []
+
+    # -- graph construction -------------------------------------------------
+    def build(self) -> "LockOrderAnalyzer":
+        self._built = True
+        walks: Dict[str, _FnWalk] = {}
+        for fn in self.index.functions:
+            w = _FnWalk(fn, self.reg)
+            for stmt in fn.node.body:
+                w.visit(stmt)
+            walks[fn.qualname] = w
+        for w in walks.values():
+            for held, acq in w.nest_edges:
+                self._edge(held, acq.use, Witness(
+                    w.fn.module.path, acq.line, w.fn.qualname, ""),
+                    same_instance=(held.use.via_self and acq.use.via_self))
+            for expr, line in w.ambiguous:
+                self.ambiguous.append((expr, w.fn.module.path, line))
+        # one-level call expansion
+        for w in walks.values():
+            for held_stack, call in w.calls_under:
+                for callee in _callee_candidates(call, w.fn, self.index,
+                                                 walks):
+                    cw = walks.get(callee.qualname)
+                    if cw is None or not cw.acquires:
+                        continue
+                    via = f"call {callee.qualname}()"
+                    self_call = (isinstance(call.func, ast.Attribute)
+                                 and isinstance(call.func.value, ast.Name)
+                                 and call.func.value.id == "self")
+                    for held in held_stack:
+                        for acq in cw.acquires:
+                            self._edge(held, acq.use, Witness(
+                                w.fn.module.path, call.lineno,
+                                w.fn.qualname, via),
+                                same_instance=(self_call
+                                               and held.use.via_self
+                                               and acq.use.via_self))
+        return self
+
+    def _edge(self, held: _Acq, use: LockUse, wit: Witness,
+              *, same_instance: bool) -> None:
+        a, b = held.use.node_id, use.node_id
+        if a == b:
+            # re-acquisition of the same lock node: a deadlock when it is
+            # provably the same non-reentrant instance, otherwise an
+            # instance-ordering note
+            if same_instance and use.kind == "lock":
+                self.self_deadlocks.append((a, wit))
+            elif not same_instance:
+                self.instance_nests.append((a, wit))
+            return
+        self.edges.setdefault((a, b), []).append(wit)
+
+    # -- cycle detection -----------------------------------------------------
+    def _sccs(self) -> List[List[str]]:
+        graph: Dict[str, Set[str]] = {}
+        for (a, b) in self.edges:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        idx: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on: Set[str] = set()
+        stack: List[str] = []
+        out: List[List[str]] = []
+        counter = [0]
+
+        def strongconnect(v: str) -> None:
+            # iterative Tarjan (analysis must not blow the stack on a
+            # large lock graph)
+            work = [(v, iter(sorted(graph[v])))]
+            idx[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for nxt in it:
+                    if nxt not in idx:
+                        idx[nxt] = low[nxt] = counter[0]
+                        counter[0] += 1
+                        stack.append(nxt)
+                        on.add(nxt)
+                        work.append((nxt, iter(sorted(graph[nxt]))))
+                        advanced = True
+                        break
+                    if nxt in on:
+                        low[node] = min(low[node], idx[nxt])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == idx[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        out.append(sorted(comp))
+
+        for v in sorted(graph):
+            if v not in idx:
+                strongconnect(v)
+        return out
+
+    def _cycle_path(self, comp: List[str]) -> List[Tuple[str, str]]:
+        """One representative cycle within an SCC, as an edge list."""
+        comp_set = set(comp)
+        start = comp[0]
+        path: List[str] = [start]
+        seen = {start}
+        node = start
+        while True:
+            nxts = sorted(b for (a, b) in self.edges
+                          if a == node and b in comp_set)
+            nxt = next((n for n in nxts if n == start), None)
+            if nxt is None:
+                nxt = next((n for n in nxts if n not in seen), nxts[0])
+            if nxt == start or nxt in seen:
+                path.append(nxt)
+                break
+            seen.add(nxt)
+            path.append(nxt)
+            node = nxt
+        # close the loop at the first repeated node
+        first = path.index(path[-1])
+        cyc = path[first:]
+        return list(zip(cyc, cyc[1:]))
+
+    # -- findings ------------------------------------------------------------
+    def findings(self) -> List[Finding]:
+        if not getattr(self, "_built", False):
+            self.build()
+        out: List[Finding] = []
+        for comp in self._sccs():
+            edges = self._cycle_path(comp)
+            sym = "->".join(sorted({a for a, _ in edges}))
+            lines = []
+            for a, b in edges:
+                w = self.edges[(a, b)][0]
+                via = f" via {w.via}" if w.via else ""
+                lines.append(f"{a} -> {b} at {w.file}:{w.line} "
+                             f"({w.func}){via}")
+            w0 = self.edges[edges[0]][0]
+            out.append(Finding(
+                "FL001", "error", w0.file, w0.line,
+                "lock-order cycle: " + "; ".join(lines),
+                symbol=sym,
+                detail={"cycle": [list(e) for e in edges]}))
+        for node, w in self.self_deadlocks:
+            via = f" via {w.via}" if w.via else ""
+            out.append(Finding(
+                "FL002", "error", w.file, w.line,
+                f"non-reentrant {node} re-acquired while held by the "
+                f"same instance{via} ({w.func})", symbol=node))
+        seen_nest: Set[Tuple[str, str, int]] = set()
+        for node, w in self.instance_nests:
+            key = (node, w.file, w.line)
+            if key in seen_nest:
+                continue
+            seen_nest.add(key)
+            via = f" via {w.via}" if w.via else ""
+            out.append(Finding(
+                "FL003", "note", w.file, w.line,
+                f"{node} nested under itself on a distinct instance"
+                f"{via} ({w.func}); cross-instance ordering unverified",
+                symbol=node))
+        seen_amb: Set[Tuple[str, str, int]] = set()
+        for expr, file, line in self.ambiguous:
+            key = (expr, file, line)
+            if key in seen_amb:
+                continue
+            seen_amb.add(key)
+            out.append(Finding(
+                "FL004", "note", file, line,
+                f"lock expression {expr!r} is ambiguous (attribute names "
+                "locks in more than one class); acquisition not tracked",
+                symbol=expr))
+        return out
+
+
+def analyze_lock_order(paths: Sequence[str]) -> List[Finding]:
+    mods, findings = load_modules(paths)
+    findings.extend(LockOrderAnalyzer(mods).build().findings())
+    return findings

@@ -1,0 +1,245 @@
+"""Pellet-contract checker (FL301–FL305).
+
+Pellets cross three machine boundaries the type system cannot see:
+the array fast path (``compute_array`` with a row-wise fallback), the
+checkpoint plane (``__floe_state__`` drives ``get_state`` snapshots,
+which must pickle), and process offload.  These are lexical checks on
+every class that derives — by name, through the indexed base chain —
+from one of the framework pellet roots.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from .astutil import CodeIndex, ClassInfo, SourceModule, load_modules
+from .findings import Finding
+
+#: framework roots; classes *named* one of these are the framework itself
+PELLET_ROOTS = {"Pellet", "PushPellet", "TuplePellet", "WindowPellet",
+                "PullPellet", "FnPellet"}
+
+#: constructors whose instances cannot be pickled (checkpoint capture)
+UNPICKLABLE_CTORS = {"Lock", "RLock", "Condition", "Event", "Semaphore",
+                     "BoundedSemaphore", "Thread", "Timer", "local",
+                     "ThreadPoolExecutor", "ProcessPoolExecutor", "open"}
+
+
+def _ancestry(cls: ClassInfo, index: CodeIndex) -> Set[str]:
+    """All textual ancestor names reachable through the index (plus the
+    direct base names themselves, for out-of-index framework imports)."""
+    out: Set[str] = set()
+    frontier = list(cls.bases)
+    while frontier:
+        b = frontier.pop()
+        if b in out:
+            continue
+        out.add(b)
+        for ci in index.classes.get(b, []):
+            frontier.extend(ci.bases)
+    return out
+
+
+def _is_pellet(cls: ClassInfo, index: CodeIndex) -> bool:
+    if cls.name in PELLET_ROOTS:
+        return False
+    return bool(_ancestry(cls, index) & PELLET_ROOTS)
+
+
+def _own_and_inherited_defs(cls: ClassInfo, index: CodeIndex,
+                            stop_at_roots: bool = True) -> Set[str]:
+    """Method names defined by the class or its in-index user ancestors
+    (framework roots excluded — their defaults don't count as overrides)."""
+    names: Set[str] = set()
+    frontier = [cls]
+    seen: Set[str] = set()
+    while frontier:
+        c = frontier.pop()
+        if c.name in seen or (stop_at_roots and c.name in PELLET_ROOTS):
+            continue
+        seen.add(c.name)
+        names.update(c.methods)
+        for b in c.bases:
+            frontier.extend(index.classes.get(b, []))
+    return names
+
+
+def _floe_state(cls: ClassInfo) -> Optional[ast.Assign]:
+    for node in cls.node.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__floe_state__":
+                    return node
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name) and \
+                    node.target.id == "__floe_state__" and \
+                    node.value is not None:
+                return ast.Assign(targets=[node.target], value=node.value,
+                                  lineno=node.lineno)
+    return None
+
+
+def _literal_names(value: ast.expr) -> Optional[List[str]]:
+    if not isinstance(value, (ast.Tuple, ast.List)):
+        return None
+    names: List[str] = []
+    for el in value.elts:
+        if isinstance(el, ast.Constant) and isinstance(el.value, str):
+            names.append(el.value)
+        else:
+            return None
+    return names
+
+
+def _self_assignments(cls: ClassInfo, index: CodeIndex
+                      ) -> Dict[str, List[ast.expr]]:
+    """attr -> values assigned to ``self.attr`` in the class or its
+    in-index ancestors (framework roots included — they assign real state)."""
+    out: Dict[str, List[ast.expr]] = {}
+    frontier = [cls]
+    seen: Set[str] = set()
+    while frontier:
+        c = frontier.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for meth in c.methods.values():
+            for node in ast.walk(meth):
+                if isinstance(node, ast.Assign):
+                    tgts, val = node.targets, node.value
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    tgts, val = [node.target], node.value
+                else:
+                    continue
+                for tgt in tgts:
+                    if isinstance(tgt, ast.Attribute) and \
+                            isinstance(tgt.value, ast.Name) and \
+                            tgt.value.id == "self":
+                        out.setdefault(tgt.attr, []).append(val)
+        # class-level attrs count as assigned too
+        for node in c.node.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.setdefault(tgt.id, []).append(node.value)
+        for b in c.bases:
+            frontier.extend(index.classes.get(b, []))
+    return out
+
+
+def _unpicklable_reason(value: ast.expr) -> Optional[str]:
+    if isinstance(value, ast.Lambda):
+        return "a lambda"
+    if isinstance(value, ast.Call):
+        f = value.func
+        name = f.id if isinstance(f, ast.Name) else \
+            f.attr if isinstance(f, ast.Attribute) else ""
+        if name in UNPICKLABLE_CTORS:
+            return f"{name}()"
+    return None
+
+
+def _sets_vectorized_true(cls: ClassInfo) -> Optional[int]:
+    """Line of a ``vectorized = True`` class attr or ``self.vectorized =
+    True`` assignment, if any."""
+    for node in cls.node.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "vectorized" and \
+                        isinstance(node.value, ast.Constant) and \
+                        node.value.value is True:
+                    return node.lineno
+    for meth in cls.methods.values():
+        for node in ast.walk(meth):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Constant) and \
+                    node.value.value is True:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) and \
+                            isinstance(tgt.value, ast.Name) and \
+                            tgt.value.id == "self" and \
+                            tgt.attr == "vectorized":
+                        return node.lineno
+    return None
+
+
+class PelletContractChecker:
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.index = CodeIndex(modules)
+
+    def findings(self) -> List[Finding]:
+        out: List[Finding] = []
+        for infos in self.index.classes.values():
+            for cls in infos:
+                if _is_pellet(cls, self.index):
+                    out.extend(self._check(cls))
+        return out
+
+    def _check(self, cls: ClassInfo) -> List[Finding]:
+        out: List[Finding] = []
+        path = cls.module.path
+        defs = _own_and_inherited_defs(cls, self.index)
+        ancestry = _ancestry(cls, self.index)
+
+        # FL301: array path without a row-wise fallback
+        if "compute_array" in defs and "compute" not in defs and \
+                "compute_batch" not in defs and "FnPellet" not in ancestry:
+            out.append(Finding(
+                "FL301", "warning", path,
+                cls.methods["compute_array"].lineno
+                if "compute_array" in cls.methods else cls.node.lineno,
+                f"{cls.name} overrides compute_array but neither compute "
+                "nor compute_batch: the row-wise degrade path (speculation, "
+                "unstackable payloads, fan-in mixing) raises",
+                symbol=cls.name))
+
+        # FL302: vectorized flag that nothing honors
+        vec_line = _sets_vectorized_true(cls)
+        if vec_line is not None and "FnPellet" not in ancestry and \
+                "compute_batch" not in defs and "compute_array" not in defs:
+            out.append(Finding(
+                "FL302", "warning", path, vec_line,
+                f"{cls.name} sets vectorized=True but overrides neither "
+                "compute_batch nor compute_array (only FnPellet honors the "
+                "flag); batches still dispatch row-wise",
+                symbol=cls.name))
+
+        # FL303/FL304/FL305: __floe_state__ checkpoint contract
+        st = _floe_state(cls)
+        if st is None:
+            return out
+        names = _literal_names(st.value)
+        if names is None:
+            out.append(Finding(
+                "FL303", "error", path, st.lineno,
+                f"{cls.name}.__floe_state__ must be a tuple/list of string "
+                "literals (get_state snapshots by attribute name)",
+                symbol=cls.name))
+            return out
+        assigned = _self_assignments(cls, self.index)
+        for attr in names:
+            if attr not in assigned:
+                out.append(Finding(
+                    "FL305", "warning", path, st.lineno,
+                    f"{cls.name}.__floe_state__ names {attr!r} but no "
+                    "method ever assigns self." + attr +
+                    " (snapshot would raise AttributeError)",
+                    symbol=f"{cls.name}.{attr}"))
+                continue
+            for val in assigned[attr]:
+                reason = _unpicklable_reason(val)
+                if reason is not None:
+                    out.append(Finding(
+                        "FL304", "warning", path,
+                        getattr(val, "lineno", st.lineno),
+                        f"{cls.name}.__floe_state__ includes {attr!r}, "
+                        f"assigned {reason} — checkpoint pickle will fail",
+                        symbol=f"{cls.name}.{attr}"))
+                    break
+        return out
+
+
+def analyze_pellets(paths: Sequence[str]) -> List[Finding]:
+    mods, findings = load_modules(paths)
+    findings.extend(PelletContractChecker(mods).findings())
+    return findings

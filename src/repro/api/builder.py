@@ -535,6 +535,26 @@ class Flow:
                         f"{sorted(missing)} receive no edges and would "
                         "stall alignment")
 
+    # -- static analysis ---------------------------------------------------------
+    def lint(self, *, samples: Optional[Dict[str, Any]] = None) -> list:
+        """Lint the composed topology; returns analysis ``Finding``s.
+
+        Complements the eager per-edge validation above with whole-graph
+        checks the builder cannot raise on (they are hazards, not errors):
+        unreachable stages, partially-wired multi-port stages,
+        landmark-alignment wedges on fan-in cycles, un-keyed exactly-once
+        sinks downstream of cycles, array-fast-path opt-ins the pellet
+        cannot honor, and unpicklable factories (process offload).
+
+        ``samples`` maps stage names to a representative payload: for
+        array-enabled stages the payload is probed against the engine's
+        actual stacker, so shapes that silently degrade to per-row
+        dispatch (nested pytrees) are reported before a session runs.
+        Returns a list of ``repro.analysis.Finding``; empty means clean.
+        """
+        from ..analysis.flowlint import lint_flow
+        return lint_flow(self, samples=samples)
+
     # -- cloning -----------------------------------------------------------------
     def derive(self, name: Optional[str] = None) -> "Flow":
         """Editable copy of this flow (the clone/extend half of

@@ -284,7 +284,7 @@ def checkpoint_floe_graph(coordinator, path: str, *,
 
     state: Dict[str, Any] = {}
     for name, flake in coordinator.flakes.items():
-        pending = {port: [snap_msg(m) for m in list(ch._q)]
+        pending = {port: [snap_msg(m) for m in ch.snapshot()]
                    for port, ch in flake.inputs.items()}
         window = [snap_msg(m) for m in flake._window_buf]
         # mutable instance attributes of the live pellet (push pellets

@@ -42,12 +42,12 @@ class ClusterManager:
         self._coord = None
         #: flake -> host name (live) and flake -> host name (initial home,
         #: the consolidation target when load subsides)
-        self._placement: Dict[str, str] = {}
-        self._home: Dict[str, str] = {}
+        self._placement: Dict[str, str] = {}   # guarded-by: _lock
+        self._home: Dict[str, str] = {}        # guarded-by: _lock
         #: flake -> host name of a VM acquired for it that is still
         #: spinning up (so the controller doesn't acquire one per tick)
-        self._pending: Dict[str, str] = {}
-        self.events: List[Dict[str, Any]] = []
+        self._pending: Dict[str, str] = {}     # guarded-by: _lock
+        self.events: List[Dict[str, Any]] = []  # guarded-by: _lock
         self._t0 = time.time()
         if self.spec.transport == "process":
             self.transport: Transport = ProcessTransport(
@@ -167,12 +167,23 @@ class ClusterManager:
             self._event("unbind")
 
     def host_of(self, flake_name: str) -> Host:
-        try:
-            return self.hosts[self._placement[flake_name]]
-        except KeyError:
-            raise ClusterError(
-                f"flake {flake_name!r} is not placed on this cluster") \
-                from None
+        with self._lock:
+            try:
+                return self.hosts[self._placement[flake_name]]
+            except KeyError:
+                raise ClusterError(
+                    f"flake {flake_name!r} is not placed on this cluster") \
+                    from None
+
+    def placement(self) -> Dict[str, str]:
+        """Consistent snapshot of the live flake -> host-name map."""
+        with self._lock:
+            return dict(self._placement)
+
+    def host_label(self, flake_name: str, default: str = "local") -> str:
+        """Host name a flake runs on, or ``default`` when unplaced."""
+        with self._lock:
+            return self._placement.get(flake_name, default)
 
     def place_all(self, graph, order: List[str]) -> Dict[str, Host]:
         """Initial placement for a whole graph (start-time).
@@ -200,12 +211,14 @@ class ClusterManager:
                         f"colocate_with cycle through {sorted(seen)}")
                 seen.add(target)
                 target = graph.vertices[target].annotations["colocate_with"]
-            if target not in placed and target not in self._placement:
-                raise ClusterError(
-                    f"stage {name!r}: colocate_with target {target!r} is "
-                    "not a placed stage of this flow")
+            with self._lock:
+                if target not in placed and target not in self._placement:
+                    raise ClusterError(
+                        f"stage {name!r}: colocate_with target {target!r} is "
+                        "not a placed stage of this flow")
+                target_host = self._placement[target]
             placed[name] = self.place(name, graph.vertices[name].cores,
-                                      host=self._placement[target])
+                                      host=target_host)
         return placed
 
     def place(self, flake_name: str, cores: int,
@@ -319,7 +332,9 @@ class ClusterManager:
     def route_target(self, src: str, dst: str, flake):
         """Resolve the routing target for edge src->dst: direct reference
         on the same host, transport proxy across hosts."""
-        if self._placement.get(src) == self._placement.get(dst):
+        with self._lock:
+            same_host = self._placement.get(src) == self._placement.get(dst)
+        if same_host:
             return flake
         return RemoteFlake(flake, self.transport)
 
@@ -380,7 +395,9 @@ class ClusterManager:
         # demand is satisfiable on the current host: cancel any in-flight
         # scale-out (a VM acquired for a burst that subsided would
         # otherwise sit provisioned-but-unused forever)
-        if self._pending.pop(flake_name, None) is not None:
+        with self._lock:
+            cancelled = self._pending.pop(flake_name, None)
+        if cancelled is not None:
             self.release_idle_hosts()
         if want < cur:
             self._consolidate(flake_name, want)
@@ -469,7 +486,7 @@ class ClusterManager:
         return released
 
     # -- ledger / introspection ---------------------------------------------
-    def _event(self, kind: str, **detail) -> None:
+    def _event(self, kind: str, **detail) -> None:  # requires-lock: _lock
         self.events.append(
             {"t": round(time.time() - self._t0, 6), "event": kind, **detail})
         # mirror the ledger into the bound coordinator's event bus so one

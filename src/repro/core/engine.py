@@ -182,9 +182,9 @@ class Channel:
     def __init__(self, capacity: int = 100_000,
                  on_put: Optional[Callable[[], None]] = None,
                  on_stall: Optional[Callable[[], None]] = None):
-        self._q: deque = deque()
+        self._q: deque = deque()       # guarded-by: _lock
         self._capacity = capacity
-        self._rows = 0
+        self._rows = 0                 # guarded-by: _lock
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
         self._on_put = on_put
@@ -295,6 +295,12 @@ class Channel:
     def peek(self) -> Optional[Message]:
         with self._lock:
             return self._q[0] if self._q else None
+
+    def snapshot(self) -> List[Message]:
+        """Locked copy of the pending messages (checkpoint capture) —
+        iterating ``_q`` unlocked races producers (deque mutation)."""
+        with self._lock:
+            return list(self._q)
 
     def __len__(self) -> int:
         """Pending ROWS (not deque entries) — the logical queue depth."""
@@ -448,20 +454,20 @@ class Flake:
         #: ``_drain_release``) so concurrent drainers (a sync task update
         #: racing a recompose transaction) cannot cancel each other's drain.
         self._drain = threading.Event()
-        self._drain_depth = 0
+        self._drain_depth = 0          # guarded-by: _drain_lock
         self._drain_lock = threading.Lock()
         self._sem = AdjustableSemaphore(max(1, cores * ALPHA))
         self._pool: Optional[ThreadPoolExecutor] = None
         self._thread: Optional[threading.Thread] = None
         self._window_buf: List[Any] = []
-        self._inflight = 0
+        self._inflight = 0             # guarded-by: _inflight_cond
         self._inflight_cond = threading.Condition()
         self._done_seqs: set = set()           # speculative dedup
         self.speculative_timeout = speculative_timeout
         #: one shared watchdog thread per flake arms speculative backup
         #: tasks (a per-message threading.Timer — one OS thread per message
         #: — was itself a throughput bug at any sustained rate)
-        self._spec_q: deque = deque()
+        self._spec_q: deque = deque()  # guarded-by: _spec_cond
         self._spec_cond = threading.Condition()
         self._spec_thread: Optional[threading.Thread] = None
         #: adaptive micro-batch knobs: a dispatch drains up to
@@ -490,8 +496,8 @@ class Flake:
         #: NOTE: do not send flush landmarks around cycles — back-edges count
         #: toward the in-degree and the round would never complete.
         self.in_degree = 1
-        self._lm_count = 0
-        self._lm_pending: Optional[Message] = None
+        self._lm_count = 0             # guarded-by: _lm_lock
+        self._lm_pending: Optional[Message] = None   # guarded-by: _lm_lock
         self._lm_lock = threading.Lock()
         #: failure-detection heartbeat: one float store per dispatch-loop
         #: iteration, read by the fault plane's supervisor
@@ -1712,10 +1718,10 @@ class Coordinator:
         #: deactivate audit; in cluster mode kept in step by migration)
         self._container_of: Dict[str, Container] = {}
         self.flakes: Dict[str, Flake] = {}
-        self.outputs: List[Message] = []
+        self.outputs: List[Message] = []   # guarded-by: _out_lock
         self._out_lock = threading.Lock()
         self.errors: List[Tuple[str, Exception]] = []
-        self._inflight = 0
+        self._inflight = 0             # guarded-by: _iq
         self._iq = threading.Condition()
         #: injection vs migration handoff: resolving a flake name and
         #: enqueuing into it must be atomic against the backlog transfer,
@@ -1768,7 +1774,7 @@ class Coordinator:
     def _host_label(self, name: str) -> str:
         """Host a flake currently runs on ('local' in single-process mode)."""
         if self.cluster is not None:
-            return self.cluster._placement.get(name, "local")
+            return self.cluster.host_label(name)
         return "local"
 
     def _collect_output(self, flake: str, msg: Message) -> None:

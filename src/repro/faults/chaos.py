@@ -250,7 +250,7 @@ class ChaosController:
         except Exception as e:
             coord._record_error("__chaos__", e)
             return
-        victims = [n for n, h in coord.cluster._placement.items()
+        victims = [n for n, h in coord.cluster.placement().items()
                    if h == host.name]
         for name in victims:
             flake = coord.flakes.get(name)

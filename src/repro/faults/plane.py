@@ -480,10 +480,11 @@ class FaultPlane:
         p = self.policy
         full_rollback = p.journal and not self.journal_overflow
         with coord._wiring_lock:
-            dead = sorted(n for n, h in cluster._placement.items()
+            placement = cluster.placement()
+            dead = sorted(n for n, h in placement.items()
                           if h == host.name and n in coord.flakes)
             if not dead:
-                for f, h in list(cluster._placement.items()):
+                for f, h in list(placement.items()):
                     if h == host.name:
                         cluster.unplace(f, release_cores=True)
                 try:

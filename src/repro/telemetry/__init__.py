@@ -163,7 +163,7 @@ class Telemetry:
         cores/batch knobs/host/version) and, when enabled, adds the
         service-time and queue-wait percentiles strategies consume."""
         cluster = getattr(coordinator, "cluster", None)
-        placement = cluster._placement if cluster is not None else {}
+        placement = cluster.placement() if cluster is not None else {}
         out: Dict[str, Dict[str, Any]] = {}
         for n, f in coordinator.flakes.items():
             st = f.stats

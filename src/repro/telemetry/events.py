@@ -29,9 +29,9 @@ class EventBus:
     """
 
     def __init__(self, maxlen: int = 4096):
-        self._records: deque = deque(maxlen=maxlen)
-        self._subs: List[Callable[[Dict[str, Any]], None]] = []
-        self._seq = 0
+        self._records: deque = deque(maxlen=maxlen)   # guarded-by: _lock
+        self._subs: List[Callable[[Dict[str, Any]], None]] = []  # guarded-by: _lock
+        self._seq = 0                                 # guarded-by: _lock
         self._lock = threading.Lock()
 
     def emit(self, kind: str, **detail: Any) -> Dict[str, Any]:

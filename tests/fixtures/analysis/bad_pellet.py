@@ -1,0 +1,57 @@
+"""Fixture: pellet-contract violations (FL301–FL305).
+
+Intentionally broken — analyzer input only (framework classes are
+resolved by base-class NAME, so this file needs no real imports).
+"""
+import threading
+
+
+class PushPellet:          # stand-in so the fixture is self-contained
+    pass
+
+
+class ArrayOnly(PushPellet):
+    """FL301: array path with no row-wise fallback."""
+
+    def compute_array(self, array):
+        return array * 2
+
+
+class DeadFlag(PushPellet):
+    """FL302: vectorized=True that nothing honors."""
+
+    vectorized = True
+
+    def compute(self, payload):
+        return payload
+
+
+class BadStateShape(PushPellet):
+    """FL303: __floe_state__ is not a literal name tuple."""
+
+    __floe_state__ = ("a", 3)
+
+    def compute(self, payload):
+        return payload
+
+
+class LockInState(PushPellet):
+    """FL304: checkpoint state includes an unpicklable lock."""
+
+    __floe_state__ = ("total", "guard")
+
+    def __init__(self):
+        self.total = 0
+        self.guard = threading.Lock()
+
+    def compute(self, payload):
+        return payload
+
+
+class PhantomState(PushPellet):
+    """FL305: __floe_state__ names an attribute never assigned."""
+
+    __floe_state__ = ("missing",)
+
+    def compute(self, payload):
+        return payload

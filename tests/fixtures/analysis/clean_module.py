@@ -1,0 +1,40 @@
+"""Fixture: a module every analyzer should pass clean.
+
+Consistent lock order, honored guarded-by annotations, and a pellet that
+meets every contract.
+"""
+import threading
+
+
+class Account:
+    def __init__(self):
+        self._outer = threading.Lock()
+        self._inner = threading.Lock()
+        self._balance = 0       # guarded-by: _inner
+
+    def deposit(self, n):
+        with self._outer:
+            with self._inner:   # always outer -> inner
+                self._balance += n
+
+    def balance(self):
+        with self._inner:
+            return self._balance
+
+
+class PushPellet:          # stand-in base, resolved by name
+    pass
+
+
+class Doubler(PushPellet):
+    __floe_state__ = ("total",)
+
+    def __init__(self):
+        self.total = 0
+
+    def compute(self, payload):
+        self.total += payload
+        return payload * 2
+
+    def compute_array(self, array):
+        return array * 2

@@ -1,0 +1,47 @@
+"""Fixture: lock-order cycle (FL001), self-deadlock (FL002),
+cross-instance nesting (FL003) and ambiguous lock (FL004).
+
+Intentionally broken — input for tests/test_analysis.py, never imported.
+"""
+import threading
+
+
+class Ledger:
+    def __init__(self):
+        self._book_lock = threading.Lock()
+        self._audit_lock = threading.Lock()
+        self._plain = threading.Lock()
+
+    def post(self):
+        with self._book_lock:
+            with self._audit_lock:      # order: book -> audit
+                pass
+
+    def audit(self):
+        with self._audit_lock:
+            with self._book_lock:       # order: audit -> book  (cycle!)
+                pass
+
+    def reenter(self):
+        with self._plain:
+            with self._plain:           # FL002: non-reentrant self-deadlock
+                pass
+
+    def merge(self, other):
+        with self._book_lock:
+            with other._book_lock:      # FL003: distinct instances, same class
+                pass
+
+
+class Shelf:
+    def __init__(self):
+        self._lock2 = threading.Lock()
+
+
+class Crate:
+    def __init__(self):
+        self._lock2 = threading.Lock()
+
+    def pack(self, thing):
+        with thing._lock2:              # FL004: Shelf or Crate? ambiguous
+            pass

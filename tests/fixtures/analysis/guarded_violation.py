@@ -1,0 +1,35 @@
+"""Fixture: guarded-by violations (FL101), unknown locks in annotations
+(FL102, FL103).  Intentionally broken — analyzer input only.
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._n = 0             # guarded-by: _lock
+        self._hist = []         # guarded-by: _lock
+        self._ghost = 0         # guarded-by: _mystery   (FL102: no such lock)
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+            self._hist.append(self._n)
+
+    def bump_via_cond(self):
+        with self._cond:        # Condition aliases _lock: this is fine
+            self._n += 1
+
+    def racy_read(self):
+        return self._n          # FL101: no lock held
+
+    def _helper(self):          # requires-lock: _lock
+        self._hist.clear()      # fine: declared contract
+
+    def _bad_helper(self):      # requires-lock: _absent   (FL103)
+        return len(self._hist)
+
+
+def poke(c):
+    c._n = 99                   # FL101: cross-object write, no lock

@@ -1,0 +1,32 @@
+"""Fixture: dataflow hazards for the STATIC flow linter (FL201, FL203,
+FL204) — written in the examples idiom (flow built inside main()).
+
+Intentionally hazardous — linted as text, never executed.
+"""
+from repro.api.builder import Flow
+from repro.core.pellet import FnPellet
+
+
+def main():
+    flow = Flow("wedge")
+    src = flow.pellet("src", lambda: FnPellet(lambda x: x))
+    join = flow.pellet("join", lambda: FnPellet(lambda x: x))
+    loop = flow.pellet("loop", lambda: FnPellet(lambda x: x))
+    out = flow.sink("out", None, exactly_once=True)
+    # FL201: a cycle-only island no source reaches
+    isl_a = flow.pellet("isl_a", lambda: FnPellet(lambda x: x))
+    isl_b = flow.pellet("isl_b", lambda: FnPellet(lambda x: x))
+    isl_a >> isl_b
+    isl_b >> isl_a
+    # FL203: join's fan-in counts the back-edge from loop
+    src >> join
+    join >> loop
+    loop >> join
+    # FL204: exactly-once sink without key= downstream of the cycle
+    join >> out
+    with flow.session() as s:
+        s.run()
+
+
+if __name__ == "__main__":
+    main()
